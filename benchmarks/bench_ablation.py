@@ -1,0 +1,52 @@
+"""Fig. 10 — ablation: full Scepsy vs no-parallelism vs no-colocation vs
+neither, on both workflows at 4 and 8 chips."""
+from __future__ import annotations
+
+from repro.core.scepsy import build_pipeline
+from repro.core.scheduler import SchedulerConfig
+from benchmarks.common import HEADER, cluster_for, run_scepsy
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+
+VARIANTS = {
+    "scepsy-full": SchedulerConfig(),
+    "scepsy-no-parallelism": SchedulerConfig(allow_parallelism=False),
+    "scepsy-no-colocation": SchedulerConfig(allow_fractional=False),
+    "scepsy-neither": SchedulerConfig(allow_parallelism=False,
+                                      allow_fractional=False),
+}
+
+RATES = {"beam_search": 0.3, "rag_reranker": 4.0}
+
+
+def run(quick: bool = False):
+    n_req = 30 if quick else 80
+    print(HEADER)
+    results = []
+    for wf in (BEAM_SEARCH, RAG_RERANKER):
+        pipeline, _, _ = build_pipeline(
+            wf, n_trace_requests=15 if quick else 40, tp_degrees=(1, 2),
+            max_profile_groups=12)
+        for chips in (4, 8):
+            spec = cluster_for(chips)
+            rate = RATES[wf.name] * chips / 4
+            for name, sc in VARIANTS.items():
+                import dataclasses
+
+                sc = dataclasses.replace(sc, max_tp=spec.hb_domain_size
+                                         if sc.allow_parallelism else 1)
+                try:
+                    r = run_scepsy(wf, pipeline, spec, rate, n_req,
+                                   scheduler_config=sc)
+                except (ValueError, RuntimeError) as e:
+                    print(f"{name},{wf.name},{chips},{rate},"
+                          f"infeasible({type(e).__name__})")
+                    continue
+                r.system = name
+                print(r.row())
+                results.append(r)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,80 @@
+"""Fig. 9 — combined workflows on 8 chips: one workflow's rate fixed, the
+other swept; egalitarian multi-workflow scheduling adapts the split."""
+from __future__ import annotations
+
+import statistics
+
+from repro import hw
+from repro.core.scepsy import build_pipeline
+from repro.core.scheduler import SchedulerConfig, schedule_multi
+from repro.serving.deploy import routers_from_allocations
+from repro.serving.simulator import EventLoop
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+from repro.workflows.runtime import ClusterDriver
+
+
+def _joint_run(wf_allocs, rates, n_req, seed=0):
+    """wf_allocs: list of (Workflow, allocations)."""
+    loop = EventLoop()
+    drivers = {}
+    for wf, allocs in wf_allocs:
+        routers = routers_from_allocations(wf, allocs, loop)
+        drivers[wf.name] = ClusterDriver(wf, routers, loop)
+    # interleave arrivals of both workflows on one loop
+    import random
+
+    for wf, _ in wf_allocs:
+        drv = drivers[wf.name]
+        rng = random.Random(seed + hash(wf.name) % 1000)
+        t = 0.0
+        for rid in range(n_req):
+            loop.schedule(t, lambda rid=rid, d=drv: d._start(rid, seed))
+            t += rng.expovariate(rates[wf.name])
+    loop.run(1e5)
+    out = {}
+    for name, drv in drivers.items():
+        recs = [r for r in drv.records if r.done >= 0]
+        if recs:
+            out[name] = statistics.mean(r.latency for r in recs)
+        else:
+            out[name] = float("inf")
+    return out
+
+
+def run(quick: bool = False):
+    spec = hw.PAPER_CLUSTER_8
+    pipes, wfs = {}, {}
+    for wf in (BEAM_SEARCH, RAG_RERANKER):
+        p, _, _ = build_pipeline(wf, n_trace_requests=15, tp_degrees=(1, 2),
+                                 max_profile_groups=12)
+        pipes[wf.name] = p
+        wfs[wf.name] = wf
+    n_req = 25 if quick else 60
+    print("fixed_wf,fixed_rate,swept_wf,swept_rate,"
+          "beam_mean_lat_s,rag_mean_lat_s,chip_split")
+    results = []
+    scenarios = [
+        ("beam_search", 0.2, "rag_reranker", (1.0, 3.0, 5.0)),
+        ("rag_reranker", 3.0, "beam_search", (0.1, 0.25, 0.4)),
+    ]
+    for fixed, frate, swept, srates in scenarios:
+        for sr in srates:
+            lams = {fixed: frate, swept: sr}
+            try:
+                res = schedule_multi(pipes, spec, lams,
+                                     SchedulerConfig(max_tp=2), split_step=2)
+            except RuntimeError:
+                continue
+            wf_allocs = [(wfs[n], res.per_workflow[n].allocations)
+                         for n in pipes]
+            lats = _joint_run(wf_allocs, lams, n_req)
+            print(f"{fixed},{frate},{swept},{sr},"
+                  f"{lats['beam_search']:.2f},{lats['rag_reranker']:.2f},"
+                  f"\"{res.chip_split}\"")
+            results.append((fixed, frate, swept, sr, lats))
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

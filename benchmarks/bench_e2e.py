@@ -1,0 +1,39 @@
+"""Fig. 6 — Scepsy vs Kubernetes-HPA throughput-latency curves
+(RAG+reranker and beam search; 4/8/16 chips)."""
+from __future__ import annotations
+
+from repro import hw
+from repro.core.scepsy import build_pipeline
+from benchmarks.common import HEADER, cluster_for, run_k8s, run_scepsy
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+
+BASE_RATES = {  # per-4-chips rate grid, scaled linearly with cluster size
+    "beam_search": (0.1, 0.2, 0.3, 0.45),
+    "rag_reranker": (1.0, 2.5, 4.5, 7.0),
+}
+
+
+def run(quick: bool = False):
+    chip_sizes = (4, 8) if quick else (4, 8, 16)
+    n_req = 30 if quick else 80
+    print(HEADER)
+    results = []
+    for wf in (BEAM_SEARCH, RAG_RERANKER):
+        pipeline, _, _ = build_pipeline(
+            wf, n_trace_requests=15 if quick else 40, tp_degrees=(1, 2),
+            max_profile_groups=12 if quick else 30)
+        for chips in chip_sizes:
+            spec = cluster_for(chips)
+            for base in BASE_RATES[wf.name]:
+                rate = base * chips / 4
+                r1 = run_scepsy(wf, pipeline, spec, rate, n_req)
+                r2 = run_k8s(wf, spec, rate, n_req)
+                print(r1.row())
+                print(r2.row())
+                results.extend([r1, r2])
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,83 @@
+"""Kernel-level report: numerical error vs oracle + structural roofline
+(VMEM working set per block, arithmetic intensity) for each Pallas kernel.
+
+Wall-clock is meaningless in interpret mode on CPU; the structural terms
+are what transfer to the v5e target."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import hw
+from repro.kernels.decode_attention import decode_attention_op, decode_attention_ref
+from repro.kernels.flash_attention import flash_attention_op, flash_attention_ref
+from repro.kernels.rwkv6_scan import wkv6_op, wkv6_scan_ref
+
+
+def _report(name, err, flops, vmem_bytes, hbm_bytes):
+    ai = flops / max(hbm_bytes, 1)
+    ridge = hw.PEAK_FLOPS_BF16 / hw.HBM_BW
+    bound = "compute" if ai > ridge else "memory"
+    print(f"{name},{err:.2e},{flops:.3e},{vmem_bytes/1024:.0f},"
+          f"{ai:.1f},{bound}")
+    return dict(name=name, err=err, flops=flops, vmem=vmem_bytes, ai=ai)
+
+
+def run(quick: bool = False):
+    print("kernel,max_abs_err,flops,vmem_per_block_KiB,arith_intensity,"
+          "bound")
+    out = []
+
+    # flash attention: gemma-like block
+    B, H, KV, S, D = 1, 4, 2, 512, 128
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = (jax.random.normal(ks[0], (B, S, H, D)) * 0.5).astype(jnp.bfloat16)
+    k = (jax.random.normal(ks[1], (B, S, KV, D)) * 0.5).astype(jnp.bfloat16)
+    v = (jax.random.normal(ks[2], (B, S, KV, D)) * 0.5).astype(jnp.bfloat16)
+    o = flash_attention_op(q, k, v, block_q=128, block_kv=128)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32) - ref.astype(jnp.float32))))
+    flops = 4.0 * B * H * D * S * S / 2  # causal
+    vmem = (128 * D + 2 * 128 * D) * 2 + 128 * D * 4  # q + k + v + acc
+    hbm = (B * S * H * D + 2 * B * S * KV * D) * 2 * (S // 128) / 2
+    out.append(_report("flash_attention", err, flops, vmem, hbm))
+
+    # decode attention: glm4-like extreme GQA
+    B, H, KV, D, Smax = 4, 32, 2, 128, 4096
+    q1 = (jax.random.normal(ks[0], (B, H, D)) * 0.5).astype(jnp.bfloat16)
+    kc = (jax.random.normal(ks[1], (B, KV, Smax, D)) * 0.5).astype(jnp.bfloat16)
+    vc = (jax.random.normal(ks[2], (B, KV, Smax, D)) * 0.5).astype(jnp.bfloat16)
+    o = decode_attention_op(q1, kc, vc, jnp.asarray(Smax), block_s=512)
+    ref = decode_attention_ref(q1.reshape(B, KV, H // KV, D), kc, vc,
+                               Smax).reshape(B, H, D)
+    err = float(jnp.max(jnp.abs(o.astype(jnp.float32) - ref.astype(jnp.float32))))
+    flops = 4.0 * B * H * D * Smax
+    vmem = (16 * D + 2 * 512 * D) * 2 + 16 * D * 4
+    hbm = 2 * B * KV * Smax * D * 2  # KV stream dominates
+    out.append(_report("decode_attention(gqa16)", err, flops, vmem, hbm))
+
+    # rwkv6 scan
+    B, Hh, S, D = 1, 4, 256, 64
+    ks = jax.random.split(jax.random.key(1), 5)
+    r, k2, v2 = (jax.random.normal(ks[i], (B, Hh, S, D)) * 0.5
+                 for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, Hh, S, D)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (Hh, D)) * 0.2
+    s0 = jnp.zeros((B, Hh, D, D), jnp.float32)
+    o, s1 = wkv6_op(r, k2, v2, logw, u, s0, chunk=64)
+    fl = lambda a: a.reshape(B * Hh, S, D)
+    ref, _ = wkv6_scan_ref(fl(r), fl(k2), fl(v2), fl(logw), u,
+                           s0.reshape(B * Hh, D, D), num_heads=Hh)
+    err = float(jnp.max(jnp.abs(o - ref.reshape(B, Hh, S, D))))
+    C = 64
+    flops = B * Hh * (S / C) * (2 * C * D * D * 3 + C * C * D * 3)
+    vmem = (4 * C * D) * 4 + D * D * 4  # r,k,v,logw chunks + state
+    hbm = 4 * B * Hh * S * D * 4
+    out.append(_report("rwkv6_scan", err, flops, vmem, hbm))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 7 — Scepsy vs Aegaeon-like P/D multiplexing (3P/1D, 2P/2D, 1P/3D)."""
+from __future__ import annotations
+
+from repro.core.scepsy import build_pipeline
+from benchmarks.common import HEADER, cluster_for, run_aegaeon, run_scepsy
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+
+RATES = {"beam_search": (0.15, 0.3), "rag_reranker": (2.0, 5.0)}
+
+
+def run(quick: bool = False):
+    n_req = 30 if quick else 80
+    print(HEADER)
+    results = []
+    for wf in (BEAM_SEARCH, RAG_RERANKER):
+        pipeline, _, _ = build_pipeline(
+            wf, n_trace_requests=15 if quick else 40, tp_degrees=(1, 2),
+            max_profile_groups=12)
+        for chips in (4, 8):
+            spec = cluster_for(chips)
+            for base in RATES[wf.name]:
+                rate = base * chips / 4
+                r = run_scepsy(wf, pipeline, spec, rate, n_req)
+                print(r.row())
+                results.append(r)
+                for split in ((3, 1), (2, 2), (1, 3)):
+                    r = run_aegaeon(wf, spec, rate, n_req, split=split)
+                    print(r.row())
+                    results.append(r)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

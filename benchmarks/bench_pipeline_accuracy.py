@@ -1,0 +1,48 @@
+"""§4 validation — Aggregate LLM Pipeline predictive power: predicted vs
+simulated workflow latency and throughput across arrival rates."""
+from __future__ import annotations
+
+import statistics
+
+from repro import hw
+from repro.core.scepsy import build_pipeline
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.serving.deploy import routers_from_allocations
+from repro.serving.simulator import EventLoop
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+from repro.workflows.runtime import ClusterDriver
+
+
+def run(quick: bool = False):
+    n_req = 30 if quick else 80
+    spec = hw.PAPER_CLUSTER_8
+    print("workflow,rate,pred_latency_s,sim_latency_s,rel_err,"
+          "pred_tput,sim_tput")
+    results = []
+    rates = {"beam_search": (0.15, 0.3, 0.45),
+             "rag_reranker": (2.0, 4.0, 6.0)}
+    for wf in (BEAM_SEARCH, RAG_RERANKER):
+        pipeline, _, _ = build_pipeline(wf, n_trace_requests=20,
+                                        tp_degrees=(1, 2),
+                                        max_profile_groups=15)
+        for rate in rates[wf.name]:
+            res = schedule(pipeline, spec, rate, SchedulerConfig(max_tp=2))
+            loop = EventLoop()
+            routers = routers_from_allocations(wf, res.allocations, loop)
+            driver = ClusterDriver(wf, routers, loop)
+            recs = driver.run_open_loop(rate, n_req, seed=5)
+            recs = [r for r in recs if r.done >= 0]
+            sim_lat = statistics.mean(r.latency for r in recs)
+            span = max(r.done for r in recs) - min(r.arrival for r in recs)
+            sim_tput = len(recs) / span
+            pred = res.prediction
+            rel = abs(pred.latency - sim_lat) / sim_lat
+            print(f"{wf.name},{rate},{pred.latency:.2f},{sim_lat:.2f},"
+                  f"{rel:.2f},{pred.max_throughput:.3f},{sim_tput:.3f}")
+            results.append((wf.name, rate, pred.latency, sim_lat, rel))
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,91 @@
+"""§Roofline — per (arch × shape × mesh) roofline terms from the dry-run
+artifacts in experiments/dryrun/ (single-pod table per the assignment).
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory_s     = HLO_bytes_per_device / HBM_bw
+    collective_s = collective_bytes_per_device / (links x link_bw)
+
+FLOPs/bytes come from the while-trip-count-aware HLO analyzer (XLA's own
+cost_analysis counts scan bodies once — see repro.analysis.hlo_stats).
+MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (inference) per device.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro import hw
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.registry import get_config
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    """Useful model FLOPs: 6·N_active·D (train) / 2·N_active·D (inference)
+    plus the attention-score FLOPs at the shape's context (which dominate
+    long-context cells and would otherwise make the ratio unfairly low for
+    attention-heavy archs)."""
+    from repro.serving.costmodel import flops_per_token
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        # fwd+bwd = 3x fwd; avg causal context = S/2
+        return 3.0 * tokens * flops_per_token(cfg, shape.seq_len // 2) / devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return tokens * flops_per_token(cfg, shape.seq_len // 2) / devices
+    tokens = shape.global_batch  # decode: one token per sequence
+    return tokens * flops_per_token(cfg, shape.seq_len) / devices
+
+
+def roofline_row(rec: dict) -> dict:
+    hlo = rec["hlo_stats"]
+    devices = rec["num_devices"]
+    compute_s = hlo["flops"] / hw.PEAK_FLOPS_BF16
+    memory_s = hlo["hbm_bytes"] / hw.HBM_BW
+    link_bw = hw.ICI_LINKS_PER_CHIP * hw.ICI_LINK_BW
+    collective_s = hlo["total_collective_bytes"] / link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], devices)
+    step_s = max(compute_s, memory_s) + collective_s
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": mf, "hlo_flops": hlo["flops"],
+        "useful_ratio": mf / hlo["flops"] if hlo["flops"] else 0.0,
+        "mfu_bound": mf / hw.PEAK_FLOPS_BF16 / step_s if step_s else 0.0,
+        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "arg_gib": rec["memory"]["argument_bytes"] / 2**30,
+    }
+
+
+def load_rows(mesh: str = "pod16x16"):
+    rows = []
+    for f in sorted(RESULTS_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok" or "hlo_stats" not in rec:
+            continue
+        rows.append(roofline_row(rec))
+    return rows
+
+
+def run(quick: bool = False):
+    rows = load_rows()
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio,roofline_fraction,temp_GiB")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.4f},"
+              f"{r['memory_s']:.4f},{r['collective_s']:.4f},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['mfu_bound']:.3f},"
+              f"{r['temp_gib']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Fig. 11 — GPU-scheduler search time scaling: #LLMs, #GPUs, fractions
+per GPU.  Synthetic analytic profiles so only the search is measured."""
+from __future__ import annotations
+
+import math
+import time
+
+from repro import hw
+from repro.configs.base import ArchConfig
+from repro.core.pipeline import AggregateLLMPipeline, PipelineStage
+from repro.core.profiler import LLMProfile, TPProfile
+from repro.core.scheduler import SchedulerConfig, schedule
+
+
+def _synthetic_stage(name: str, size_gb: float, n: float = 4.0,
+                     p: float = 2.0) -> PipelineStage:
+    """Analytic M/M/1-flavored profile for a model of given size."""
+    base_lat = 0.05 * size_gb  # unloaded latency
+    t_max = 40.0 / size_gb  # capacity
+    by_tp = {}
+    for tp in (1, 2, 4):
+        tmax = t_max * (tp ** 0.85)
+        rates = [f * tmax for f in (0.1, 0.3, 0.5, 0.7, 0.9)]
+        lat = [base_lat / tp / max(1 - r / tmax, 0.05) for r in rates]
+        by_tp[tp] = TPProfile(tp=tp, rates=rates,
+                              latency={"mean": lat, "p50": lat,
+                                       "p90": [2 * x for x in lat],
+                                       "p99": [4 * x for x in lat]},
+                              max_throughput=tmax)
+    cfg = ArchConfig(name=name, family="dense", num_layers=16,
+                     d_model=2048, num_heads=16, num_kv_heads=8,
+                     d_ff=8192, vocab_size=32_000)
+    prof = LLMProfile(llm=name, arch=name, calls_per_group=n, by_tp=by_tp)
+    return PipelineStage(llm=name, cfg=cfg, n=n, p=p, profile=prof,
+                         mean_share=1.0)
+
+
+def _pipeline(n_llms: int) -> AggregateLLMPipeline:
+    stages = [_synthetic_stage(f"llm{i}", size_gb=1.0 + 3.0 * i, n=2.0 + i)
+              for i in range(n_llms)]
+    return AggregateLLMPipeline("synthetic", stages)
+
+
+def run(quick: bool = False):
+    print("sweep,value,search_time_s,evaluated,feasible")
+    results = []
+
+    def one(tag, value, pipeline, spec):
+        t0 = time.perf_counter()
+        try:
+            res = schedule(pipeline, spec, lam_target=0.5,
+                           config=SchedulerConfig(max_tp=spec.hb_domain_size))
+            dt = time.perf_counter() - t0
+            print(f"{tag},{value},{dt:.4f},{res.evaluated},{res.feasible}")
+            results.append((tag, value, dt, res.evaluated))
+        except (ValueError, RuntimeError) as e:
+            print(f"{tag},{value},nan,0,error:{type(e).__name__}")
+
+    # 1) number of LLMs (16 GPUs, 10 fractions)
+    for n in range(2, 6 if quick else 7):
+        one("num_llms", n, _pipeline(n), hw.PAPER_CLUSTER_16)
+    # 2) number of GPUs (3 LLMs, 10 fractions)
+    for chips in (16, 32, 64) if quick else (16, 32, 64, 128):
+        spec = hw.ClusterSpec(num_hosts=chips // 4, chips_per_host=4)
+        one("num_gpus", chips, _pipeline(3), spec)
+    # 3) fractions per GPU (3 LLMs, 16 GPUs)
+    for frac in (5, 10, 20):
+        spec = hw.ClusterSpec(num_hosts=4, chips_per_host=4,
+                              fractions_per_chip=frac)
+        one("fractions_per_gpu", frac, _pipeline(3), spec)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

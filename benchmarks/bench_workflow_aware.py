@@ -1,0 +1,38 @@
+"""Fig. 8 — Scepsy vs Ayo-like workflow-aware serving (static allocation).
+
+Expected shape: Ayo is latency-competitive at low rates (request-level
+optimizations) but hits its throughput ceiling early because the static,
+demand-blind allocation starves the bottleneck LLM."""
+from __future__ import annotations
+
+from repro.core.scepsy import build_pipeline
+from benchmarks.common import HEADER, cluster_for, run_ayo, run_scepsy
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+
+RATES = {"beam_search": (0.08, 0.2, 0.35, 0.5),
+         "rag_reranker": (1.0, 3.0, 5.0, 8.0)}
+
+
+def run(quick: bool = False):
+    n_req = 30 if quick else 80
+    print(HEADER)
+    results = []
+    for wf in (BEAM_SEARCH, RAG_RERANKER):
+        pipeline, _, _ = build_pipeline(
+            wf, n_trace_requests=15 if quick else 40, tp_degrees=(1, 2),
+            max_profile_groups=12)
+        for chips in (4, 8):
+            spec = cluster_for(chips)
+            for base in RATES[wf.name]:
+                rate = base * chips / 4
+                r1 = run_scepsy(wf, pipeline, spec, rate, n_req)
+                r2 = run_ayo(wf, spec, rate, n_req)
+                print(r1.row())
+                print(r2.row())
+                results.extend([r1, r2])
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

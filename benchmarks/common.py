@@ -1,0 +1,124 @@
+"""Shared benchmark harness: run a serving system at an arrival rate and
+measure the workflow-level throughput-latency point."""
+from __future__ import annotations
+
+import math
+import statistics
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro import hw
+from repro.core.pipeline import AggregateLLMPipeline
+from repro.core.scepsy import build_pipeline
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.serving.deploy import routers_from_allocations
+from repro.serving.simulator import EventLoop, Router
+from repro.workflows.baselines import AegaeonLike, AyoLike, KubernetesHPA
+from repro.workflows.runtime import ClusterDriver, Workflow
+
+
+@dataclass
+class RunResult:
+    system: str
+    workflow: str
+    chips: int
+    offered_rate: float
+    achieved_throughput: float
+    mean_latency: float
+    p50_latency: float
+    p99_latency: float
+    completed: int
+
+    def row(self) -> str:
+        return (f"{self.system},{self.workflow},{self.chips},"
+                f"{self.offered_rate:.3f},{self.achieved_throughput:.3f},"
+                f"{self.mean_latency:.3f},{self.p50_latency:.3f},"
+                f"{self.p99_latency:.3f},{self.completed}")
+
+
+HEADER = ("system,workflow,chips,offered_rate,achieved_tput,"
+          "mean_latency_s,p50_latency_s,p99_latency_s,completed")
+
+
+def measure(wf: Workflow, routers: Dict[str, Router], rate: float,
+            n_requests: int, *, system: str, chips: int,
+            seed: int = 0, horizon_factor: float = 6.0) -> RunResult:
+    loop = next(iter(routers.values())).replicas[0].loop \
+        if hasattr(next(iter(routers.values())), "replicas") else None
+    # all engines share one loop; fish it out via duck-typing
+    if loop is None:
+        loop = routers[next(iter(routers))].system.loop  # aegaeon
+    driver = ClusterDriver(wf, routers, loop)
+    horizon = max(n_requests / max(rate, 1e-9) * horizon_factor, 600.0)
+    recs = driver.run_open_loop(rate, n_requests, seed=seed, until=horizon)
+    if not recs:
+        return RunResult(system, wf.name, chips, rate, 0.0, math.inf,
+                         math.inf, math.inf, 0)
+    lats = [r.latency for r in recs]
+    span = max(r.done for r in recs) - min(r.arrival for r in recs)
+    return RunResult(
+        system=system, workflow=wf.name, chips=chips, offered_rate=rate,
+        achieved_throughput=len(recs) / max(span, 1e-9),
+        mean_latency=statistics.mean(lats),
+        p50_latency=statistics.median(lats),
+        p99_latency=sorted(lats)[min(int(0.99 * len(lats)), len(lats) - 1)],
+        completed=len(recs))
+
+
+def cluster_for(chips: int) -> hw.ClusterSpec:
+    if chips <= 4:
+        return hw.PAPER_CLUSTER_4
+    if chips <= 8:
+        return hw.PAPER_CLUSTER_8
+    return hw.ClusterSpec(num_hosts=chips // 4, chips_per_host=4)
+
+
+def run_scepsy(wf: Workflow, pipeline: AggregateLLMPipeline,
+               spec: hw.ClusterSpec, rate: float, n_requests: int,
+               seed: int = 0, scheduler_config: Optional[SchedulerConfig] = None
+               ) -> RunResult:
+    cfgsch = scheduler_config or SchedulerConfig(max_tp=spec.hb_domain_size)
+    res = schedule(pipeline, spec, rate, cfgsch)
+    loop = EventLoop()
+    routers = routers_from_allocations(wf, res.allocations, loop)
+    return measure(wf, routers, rate, n_requests, system="scepsy",
+                   chips=spec.num_chips, seed=seed)
+
+
+def run_k8s(wf: Workflow, spec: hw.ClusterSpec, rate: float,
+            n_requests: int, seed: int = 0) -> RunResult:
+    loop = EventLoop()
+    sysm = KubernetesHPA(wf, spec, loop)
+    return measure(wf, sysm.routers, rate, n_requests, system="k8s-hpa",
+                   chips=spec.num_chips, seed=seed)
+
+
+def run_aegaeon(wf: Workflow, spec: hw.ClusterSpec, rate: float,
+                n_requests: int, seed: int = 0, split=(2, 2)) -> RunResult:
+    loop = EventLoop()
+    sysm = AegaeonLike(wf, spec, loop, prefill_per_node=split[0],
+                       decode_per_node=split[1])
+    driver = ClusterDriver(wf, sysm.routers, loop)
+    horizon = max(n_requests / max(rate, 1e-9) * 6.0, 600.0)
+    recs = driver.run_open_loop(rate, n_requests, seed=seed, until=horizon)
+    import statistics as st
+
+    if not recs:
+        return RunResult(f"aegaeon-{split[0]}P{split[1]}D", wf.name,
+                         spec.num_chips, rate, 0.0, math.inf, math.inf,
+                         math.inf, 0)
+    lats = [r.latency for r in recs]
+    span = max(r.done for r in recs) - min(r.arrival for r in recs)
+    return RunResult(f"aegaeon-{split[0]}P{split[1]}D", wf.name,
+                     spec.num_chips, rate, len(recs) / max(span, 1e-9),
+                     st.mean(lats), st.median(lats),
+                     sorted(lats)[min(int(0.99 * len(lats)), len(lats) - 1)],
+                     len(recs))
+
+
+def run_ayo(wf: Workflow, spec: hw.ClusterSpec, rate: float,
+            n_requests: int, seed: int = 0) -> RunResult:
+    loop = EventLoop()
+    sysm = AyoLike(wf, spec, loop)
+    return measure(wf, sysm.routers, rate, n_requests, system="ayo",
+                   chips=spec.num_chips, seed=seed)

@@ -1,0 +1,50 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size sweeps (default: quick)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_ablation, bench_combined, bench_e2e,
+                            bench_kernels, bench_multiplexing,
+                            bench_pipeline_accuracy, bench_roofline,
+                            bench_scheduler, bench_stability,
+                            bench_workflow_aware)
+
+    sections = [
+        ("fig3_stability", bench_stability),
+        ("fig6_e2e_vs_autoscaler", bench_e2e),
+        ("fig7_vs_multiplexing", bench_multiplexing),
+        ("fig8_vs_workflow_aware", bench_workflow_aware),
+        ("fig9_combined_workflows", bench_combined),
+        ("fig10_ablation", bench_ablation),
+        ("fig11_scheduler_search", bench_scheduler),
+        ("pipeline_accuracy", bench_pipeline_accuracy),
+        ("kernels", bench_kernels),
+        ("roofline", bench_roofline),
+    ]
+    for name, mod in sections:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            mod.run(quick=quick)
+        except Exception as e:  # keep the suite going; failures are visible
+            print(f"BENCHMARK FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+        print(f"----- {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

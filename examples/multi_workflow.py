@@ -1,0 +1,28 @@
+"""Combined workflows (paper §7.3): schedule RAG+reranker and beam search
+together under an egalitarian-welfare split of one cluster.
+
+    PYTHONPATH=src python examples/multi_workflow.py
+"""
+from repro import hw
+from repro.core.scepsy import build_pipeline
+from repro.core.scheduler import SchedulerConfig, schedule_multi
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+
+pipes, lams = {}, {}
+for wf, lam in ((BEAM_SEARCH, 0.3), (RAG_RERANKER, 4.0)):
+    pipeline, _, _ = build_pipeline(wf, n_trace_requests=15,
+                                    tp_degrees=(1, 2), max_profile_groups=12)
+    pipes[wf.name] = pipeline
+    lams[wf.name] = lam
+
+res = schedule_multi(pipes, hw.PAPER_CLUSTER_16, lams,
+                     SchedulerConfig(max_tp=2), split_step=2)
+print(f"chip split: {res.chip_split}  (egalitarian welfare {res.welfare:.3f}, "
+      f"search {res.search_time_s:.1f}s)")
+for name, r in res.per_workflow.items():
+    print(f"\n{name}: predicted latency {r.prediction.latency:.2f}s, "
+          f"max tput {r.prediction.max_throughput:.2f} req/s")
+    for m, a in r.allocations.items():
+        print(f"  {m}: replicas={a.replicas} tp={a.tp} "
+              f"fraction={a.fraction:.2f}")

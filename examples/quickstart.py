@@ -1,0 +1,35 @@
+"""Quickstart: the Scepsy flow end to end in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro import hw
+from repro.core.aggregate import aggregate
+from repro.core.scepsy import build_pipeline, deploy
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.runtime import trace_workflow
+
+# 1) trace the workflow (framework-agnostic proxy capture)
+store = trace_workflow(BEAM_SEARCH, 20, seed=0)
+stats = aggregate(store)
+print("per-LLM aggregate statistics (the paper's key observation):")
+for m, st in stats.per_llm.items():
+    print(f"  {m}: n={st.n:.1f} calls/req, parallelism p={st.p:.2f}, "
+          f"share={st.mean_share:.2f} "
+          f"(share CoV {st.share_cov:.3f} vs absolute CoV {st.abs_cov:.3f})")
+
+# 2-3) profile + synthesize the Aggregate LLM Pipeline
+pipeline, _, _ = build_pipeline(BEAM_SEARCH, n_trace_requests=20,
+                                tp_degrees=(1, 2), store=store)
+print("\nlatency ratios (scheduler pruning order):",
+      {m: round(v, 3) for m, v in pipeline.latency_ratios().items()})
+
+# 4-5) schedule + place on a 16-chip cluster at 0.5 req/s
+dep = deploy(BEAM_SEARCH, hw.PAPER_CLUSTER_16, lam_target=0.5,
+             pipeline=pipeline)
+print("\nchosen allocation:")
+for m, a in dep.schedule.allocations.items():
+    print(f"  {m}: replicas={a.replicas} tp={a.tp} fraction={a.fraction:.2f}")
+print(f"predicted latency {dep.schedule.prediction.latency:.2f}s, "
+      f"max throughput {dep.schedule.prediction.max_throughput:.2f} req/s")
+print(f"placement: {len(dep.placement.instances)} instances, "
+      f"fragmentation {dep.placement.fragmentation():.3f}")

@@ -1,0 +1,435 @@
+"""Static analyzer for optimized HLO text: FLOPs, HBM bytes, collective
+bytes — with while-loop (scan) bodies multiplied by their trip counts.
+
+Why: ``compiled.cost_analysis()`` counts a while body ONCE, so any model
+that scans over layers (all of ours) under-reports FLOPs by ~num_layers.
+This parser rebuilds the call graph (entry -> fusion/call/while/cond) and
+multiplies every computation's cost by its execution count; while trip
+counts are recovered from the loop condition's comparison constant.
+
+Conventions:
+  * FLOPs: 2*M*N*K per dot (batch dims folded into M), convolutions
+    counted via output x kernel size; elementwise ignored (<1% for LMs);
+  * HBM bytes: for every *top-level* instruction of an executed
+    computation, operands + results (fusions count their boundary only —
+    the same approximation XLA's cost model uses);
+  * collective bytes: result-shape bytes per op kind (ring-traffic proxy),
+    also multiplied by execution count.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1,
+               "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1, "token": 0, "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes mentioned in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclass
+class Instruction:
+    name: str
+    result_type: str
+    op: str
+    operands: List[str]
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: Dict[str, Instruction] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OP_CALL = re.compile(r"\s*([\w\-]+)\(")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_instr_line(line: str):
+    """Parse '%name = <type> op(operands...), attrs' robustly.
+
+    Handles tuple result types with nested parens and /*index=N*/ comments.
+    Returns (name, result_type, op, operand_str) or None.
+    """
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    # result type: balanced-paren tuple or a single shape token
+    if i < len(line) and line[i] == "(":
+        depth = 0
+        j = i
+        while j < len(line):
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    j += 1
+                    break
+            j += 1
+        rtype = line[i:j]
+    else:
+        j = i
+        while j < len(line) and not line[j].isspace():
+            j += 1
+        rtype = line[i:j]
+    mo = _OP_CALL.match(line, j)
+    if not mo:
+        return None
+    op = mo.group(1)
+    k = mo.end()  # position just after the op's '('
+    depth = 1
+    ops_chars = []
+    while k < len(line) and depth > 0:
+        ch = line[k]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        ops_chars.append(ch)
+        k += 1
+    return name, rtype, op, "".join(ops_chars)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HEAD.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if stripped == "}" or stripped.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            parsed = _parse_instr_line(line)
+            if parsed:
+                name, rtype, op, ops_str = parsed
+                operands = _OPERAND.findall(ops_str)
+                cur.instructions[name] = Instruction(
+                    name, rtype, op, operands, stripped)
+                cur.order.append(name)
+    return comps, entry
+
+
+def _operand_type(comp: Computation, comps: Dict[str, Computation],
+                  name: str) -> str:
+    ins = comp.instructions.get(name)
+    return ins.result_type if ins else ""
+
+
+_ATTR_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations={([^}]*)}")
+_ATTR_TODEF = re.compile(r"to_apply=%?([\w\.\-]+)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims={([0-9,]*)}")
+_LHS_BDIMS = re.compile(r"lhs_batch_dims={([0-9,]*)}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def while_trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Heuristic: largest int constant in the cond computation (+ callees)."""
+    best = 1
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        cn = stack.pop()
+        if cn in seen or cn not in comps:
+            continue
+        seen.add(cn)
+        for ins in comps[cn].instructions.values():
+            for m in _CONST_INT.finditer(ins.raw):
+                best = max(best, int(m.group(1)))
+            for attr in (_ATTR_CALLS, _ATTR_TODEF):
+                am = attr.search(ins.raw)
+                if am:
+                    stack.append(am.group(1))
+    return best
+
+
+def dot_flops(comp: Computation, ins: Instruction) -> float:
+    """2*M*N*K from the result shape and lhs contracting dims."""
+    res = shape_elems(ins.result_type)
+    if not res:
+        return 0.0
+    out_elems = math.prod(res[0][1]) if res[0][1] else 1
+    lhs_type = _operand_type(comp, {}, ins.operands[0]) if ins.operands else ""
+    lhs = shape_elems(lhs_type)
+    cd = _LHS_CDIMS.search(ins.raw)
+    k = 1
+    if lhs and cd:
+        dims = lhs[0][1]
+        for d in cd.group(1).split(","):
+            if d and int(d) < len(dims):
+                k *= dims[int(d)]
+    return 2.0 * out_elems * k
+
+
+_PARAM_IDX = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_bytes(comps: Dict[str, "Computation"], fc_name: str,
+                  operand_types: List[str], result_type: str) -> float:
+    """Boundary bytes of a fusion, recognizing in-place patterns:
+
+    * a fused-computation parameter consumed only by dynamic-slice ops
+      contributes the slice bytes, not the full array (the array stays in
+      HBM; only the slice is read) — this is how scan bodies read their
+      per-layer cache/param slices;
+    * a parameter that is the in-place target of a root dynamic-update-
+      slice contributes the update-slice bytes (read+write), not two full
+      copies of the carried array.
+    """
+    fc = comps.get(fc_name)
+    if fc is None:
+        return sum(shape_bytes(t) for t in operand_types) + shape_bytes(result_type)
+    params: Dict[int, str] = {}
+    for ins in fc.instructions.values():
+        if ins.op == "parameter":
+            m = _PARAM_IDX.search(ins.raw)
+            if m:
+                params[int(m.group(1))] = ins.name
+    consumers: Dict[str, List[Instruction]] = {}
+    for ins in fc.instructions.values():
+        for o in ins.operands:
+            consumers.setdefault(o, []).append(ins)
+
+    def effective_consumers(name: str, depth: int = 6) -> List[Instruction]:
+        """Consumers reached through pure passthrough ops."""
+        out: List[Instruction] = []
+        for c in consumers.get(name, []):
+            if c.op in _PASSTHROUGH_OPS and depth > 0:
+                out.extend(effective_consumers(c.name, depth - 1))
+            else:
+                out.append(c)
+        return out
+
+    total = 0.0
+    inplace_params = set()
+    for idx, ptype in enumerate(operand_types):
+        pname = params.get(idx)
+        cons = effective_consumers(pname) if pname else []
+        if cons and all(c.op == "dynamic-slice" for c in cons):
+            total += sum(shape_bytes(c.result_type) for c in cons)
+        elif cons and all(c.op == "dynamic-update-slice"
+                          and c.operands and c.operands[0] == pname
+                          for c in cons):
+            inplace_params.add(pname)
+            for c in cons:
+                if len(c.operands) >= 2:
+                    upd = fc.instructions.get(c.operands[1])
+                    total += 2 * shape_bytes(upd.result_type if upd else "")
+        else:
+            total += shape_bytes(ptype)
+
+    root = next((i for i in fc.instructions.values()
+                 if i.raw.startswith("ROOT")), None)
+
+    def _root_elem_bytes(name: str) -> float:
+        oi = fc.instructions.get(name)
+        if oi is not None and oi.op == "dynamic-update-slice" \
+                and oi.operands and oi.operands[0] in inplace_params:
+            return 0.0  # in-place write already counted
+        return shape_bytes(oi.result_type) if oi else 0.0
+
+    if root is None:
+        total += shape_bytes(result_type)
+    elif root.op == "dynamic-update-slice" and root.operands \
+            and root.operands[0] in inplace_params:
+        pass  # in-place
+    elif root.op == "tuple":
+        total += sum(_root_elem_bytes(o) for o in root.operands)
+    else:
+        total += shape_bytes(root.result_type)
+    return total
+
+
+@dataclass
+class HLOStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    while_trip_counts: List[int] = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota", "while", "conditional", "call",
+                   # TPU-fusion approximation: the CPU backend materializes
+                   # layout/legalization ops (notably f32 upcasts of bf16
+                   # dot operands — the MXU consumes bf16 natively) that a
+                   # TPU compilation fuses away; counting them inflates the
+                   # memory roofline term several-fold.
+                   "convert", "copy", "transpose", "reshape", "broadcast",
+                   "bitcast-convert"}
+
+_PASSTHROUGH_OPS = {"convert", "copy", "bitcast", "bitcast-convert",
+                    "transpose", "reshape"}
+
+
+def _resolve_type(comp: "Computation", name: str, depth: int = 8) -> str:
+    """Follow convert/copy chains to the producing instruction's type, so
+    a bf16 tensor read through an f32 legalization convert counts bf16."""
+    for _ in range(depth):
+        ins = comp.instructions.get(name)
+        if ins is None:
+            return ""
+        if ins.op in _PASSTHROUGH_OPS and ins.operands:
+            name = ins.operands[0]
+            continue
+        return ins.result_type
+    return comp.instructions[name].result_type if name in comp.instructions else ""
+
+
+def analyze(text: str) -> HLOStats:
+    comps, entry = parse_hlo(text)
+    stats = HLOStats()
+    memo: Dict[str, Tuple[float, float, Dict[str, float], Dict[str, float]]] = {}
+
+    def comp_cost(name: str) -> Tuple[float, float, Dict[str, float],
+                                      Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        memo[name] = (0.0, 0.0, {}, {})  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        flops = 0.0
+        hbm = 0.0
+        coll: Dict[str, float] = {}
+        ccnt: Dict[str, float] = {}
+
+        def add_sub(mult: float, sub: str):
+            nonlocal flops, hbm
+            f, b, c, k = comp_cost(sub)
+            flops += mult * f
+            hbm += mult * b
+            for op, v in c.items():
+                coll[op] = coll.get(op, 0.0) + mult * v
+            for op, v in k.items():
+                ccnt[op] = ccnt.get(op, 0.0) + mult * v
+
+        for iname in comp.order:
+            ins = comp.instructions[iname]
+            op = ins.op
+            if op == "while":
+                bm = _ATTR_BODY.search(ins.raw)
+                cm = _ATTR_COND.search(ins.raw)
+                trips = while_trip_count(comps, cm.group(1)) if cm else 1
+                stats.while_trip_counts.append(trips)
+                if bm:
+                    add_sub(trips, bm.group(1))
+                if cm:
+                    add_sub(trips, cm.group(1))
+                continue
+            if op == "conditional":
+                bm = _ATTR_BRANCHES.search(ins.raw)
+                if bm:
+                    branches = _OPERAND.findall(bm.group(1))
+                    for b in branches:  # upper bound: all branches once
+                        add_sub(1.0 / max(len(branches), 1), b)
+                continue
+            m = _ATTR_CALLS.search(ins.raw) or _ATTR_TODEF.search(ins.raw)
+            if m and op in ("fusion", "call", "map", "reduce", "sort",
+                            "reduce-window", "scatter", "custom-call"):
+                if op in ("call",):
+                    add_sub(1.0, m.group(1))
+                else:
+                    # fusion: dots inside fused computations still count
+                    f, _, c, k = comp_cost(m.group(1))
+                    flops += f
+                    for o, v in c.items():
+                        coll[o] = coll.get(o, 0.0) + v
+                    for o, v in k.items():
+                        ccnt[o] = ccnt.get(o, 0.0) + v
+            if op == "dot":
+                flops += dot_flops(comp, ins)
+            base_op = op
+            for cop in COLLECTIVES:
+                if base_op.startswith(cop) and not base_op.endswith("-done"):
+                    b = shape_bytes(ins.result_type)
+                    coll[cop] = coll.get(cop, 0.0) + b
+                    ccnt[cop] = ccnt.get(cop, 0.0) + 1
+                    break
+            if op == "dynamic-slice":
+                # reads only the slice (the operand stays in HBM); result
+                # bytes ~= slice read + write
+                hbm += 2 * shape_bytes(ins.result_type)
+            elif op == "dynamic-update-slice":
+                # in-place (donated) update: traffic ~= the update slice,
+                # not the full carried array
+                if len(ins.operands) >= 2:
+                    hbm += 2 * shape_bytes(_resolve_type(comp, ins.operands[1]))
+            elif op == "fusion" and m:
+                hbm += _fusion_bytes(
+                    comps, m.group(1),
+                    [_resolve_type(comp, o) for o in ins.operands],
+                    ins.result_type)
+            elif op not in _SKIP_BYTES_OPS:
+                hbm += shape_bytes(ins.result_type)
+                for o in ins.operands:
+                    hbm += shape_bytes(_resolve_type(comp, o))
+        memo[name] = (flops, hbm, coll, ccnt)
+        return memo[name]
+
+    f, b, c, k = comp_cost(entry)
+    stats.flops = f
+    stats.hbm_bytes = b
+    stats.collective_bytes = c
+    stats.collective_counts = k
+    return stats
+
+
+def analyze_compiled(compiled) -> HLOStats:
+    return analyze(compiled.as_text())

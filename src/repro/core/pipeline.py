@@ -1,0 +1,121 @@
+"""The Aggregate LLM Pipeline (paper §4 steps 4–5).
+
+Synthesizes workflow statistics (n_m, p_m) and per-LLM throughput-latency
+profiles into a pipeline of unique LLM stages, then predicts workflow-
+level latency and throughput for a candidate GPU allocation:
+
+    L_w(λ_w) = Σ_m L_m(λ_w · n_m / d_m ; TP_m, f_m) · n_m / p_m     (eq. 1)
+    T_w      = min_m  d_m · T_m(TP_m, f_m) / n_m                    (eq. 2)
+
+Prediction is profile lookups + arithmetic — negligible cost, which is
+what lets the GPU scheduler explore large allocation spaces (§5).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.aggregate import WorkflowStats
+from repro.core.profiler import LLMProfile
+
+
+@dataclass(frozen=True)
+class Allocation:
+    """Scheduler decision for one LLM."""
+
+    replicas: int = 1
+    tp: int = 1
+    fraction: float = 1.0  # per-replica chip share (tp chips x fraction)
+
+    @property
+    def chip_units(self) -> float:
+        return self.replicas * self.tp * self.fraction
+
+
+@dataclass
+class PipelineStage:
+    llm: str
+    cfg: ArchConfig
+    n: float  # invocations per workflow request
+    p: float  # request-level parallelism
+    profile: LLMProfile
+    mean_share: float
+
+
+@dataclass
+class Prediction:
+    latency: float  # workflow-level latency at λ_w (s)
+    max_throughput: float  # workflow requests/s
+    feasible: bool  # max_throughput >= λ_w and finite latency
+    bottleneck_llm: str
+    latency_dominant_llm: str
+    per_llm_latency: Dict[str, float] = field(default_factory=dict)
+
+
+class AggregateLLMPipeline:
+    def __init__(self, workflow: str, stages: List[PipelineStage]):
+        self.workflow = workflow
+        self.stages = {s.llm: s for s in stages}
+
+    @classmethod
+    def synthesize(cls, stats: WorkflowStats,
+                   profiles: Dict[str, LLMProfile],
+                   cfgs: Dict[str, ArchConfig]) -> "AggregateLLMPipeline":
+        stages = []
+        for m, st in stats.per_llm.items():
+            if st.n <= 0:
+                continue
+            stages.append(PipelineStage(
+                llm=m, cfg=cfgs[m], n=st.n, p=st.p, profile=profiles[m],
+                mean_share=st.mean_share))
+        return cls(stats.workflow, stages)
+
+    # ------------------------------------------------------------------
+    # Predictions
+    # ------------------------------------------------------------------
+
+    def predict(self, alloc: Dict[str, Allocation], lam_w: float,
+                percentile: str = "mean") -> Prediction:
+        total_latency = 0.0
+        per_llm: Dict[str, float] = {}
+        t_w = math.inf
+        bottleneck = ""
+        dominant = ""
+        dom_lat = -1.0
+        for m, st in self.stages.items():
+            a = alloc[m]
+            per_replica_rate = lam_w * st.n / max(a.replicas, 1)
+            lm = st.profile.latency(per_replica_rate, a.tp,
+                                    fraction=a.fraction,
+                                    percentile=percentile)
+            contrib = lm * st.n / max(st.p, 1.0)
+            per_llm[m] = contrib
+            total_latency += contrib
+            tm = (a.replicas * st.profile.max_throughput(a.tp,
+                                                         fraction=a.fraction)
+                  / st.n)
+            if tm < t_w:
+                t_w, bottleneck = tm, m
+            if contrib > dom_lat:
+                dom_lat, dominant = contrib, m
+        feasible = t_w >= lam_w and math.isfinite(total_latency)
+        return Prediction(latency=total_latency, max_throughput=t_w,
+                          feasible=feasible, bottleneck_llm=bottleneck,
+                          latency_dominant_llm=dominant,
+                          per_llm_latency=per_llm)
+
+    def latency_ratios(self, percentile: str = "mean") -> Dict[str, float]:
+        """Low-load latency contribution shares (scheduler's pruning order)."""
+        shares = {}
+        for m, st in self.stages.items():
+            tp0 = st.profile.tps()[0]
+            rate = 0.05 * st.profile.max_throughput(tp0)
+            lm = st.profile.latency(rate, tp0, percentile=percentile)
+            shares[m] = lm * st.n / max(st.p, 1.0)
+        total = sum(shares.values()) or 1.0
+        return {m: v / total for m, v in shares.items()}
+
+    def llms(self) -> List[str]:
+        return list(self.stages)

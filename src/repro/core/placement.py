@@ -1,0 +1,229 @@
+"""Topology-aware fractional placement (paper §6).
+
+Maps the scheduler's allocation (replicas × TP × fraction per LLM) onto a
+concrete cluster — hosts, high-bandwidth ICI domains (the NVLink-domain
+analogue), chips, fraction units — with the paper's hierarchical
+most-constrained-first heuristic:
+
+  1. TP instances before non-TP; within each class, larger first;
+  2. candidate hb domains scored by per-chip free-capacity *imbalance*
+     (most balanced wins), ties broken by *least* remaining capacity
+     (preserve large domains for future large placements);
+  3. sub-chip fractions pack onto already-occupied chips first (best fit);
+  4. the result is emitted as deployment manifests (the k8s-file
+     analogue) consumed by ``repro.launch.serve``; fraction limits are
+     enforced by the engine's slot scheduler (the MPS analogue).
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro import hw
+from repro.core.pipeline import Allocation
+
+
+class PlacementError(RuntimeError):
+    pass
+
+
+@dataclass
+class Chip:
+    host: int
+    domain: int  # global hb-domain id
+    index: int  # global chip id
+    free_units: int
+
+    def used(self, total: int) -> int:
+        return total - self.free_units
+
+
+@dataclass
+class PlacedInstance:
+    llm: str
+    replica: int
+    tp: int
+    chips: List[int]  # global chip ids
+    units_per_chip: int
+    host: int
+    domain: int
+
+
+@dataclass
+class Placement:
+    spec: hw.ClusterSpec
+    instances: List[PlacedInstance] = field(default_factory=list)
+
+    def chips_of(self, llm: str) -> List[int]:
+        return sorted({c for i in self.instances if i.llm == llm
+                       for c in i.chips})
+
+    def validate(self) -> None:
+        F = self.spec.fractions_per_chip
+        used: Dict[int, int] = {}
+        for inst in self.instances:
+            if inst.tp > self.spec.hb_domain_size:
+                raise PlacementError(
+                    f"{inst.llm}: TP {inst.tp} exceeds hb domain "
+                    f"{self.spec.hb_domain_size}")
+            domains = set()
+            for c in inst.chips:
+                used[c] = used.get(c, 0) + inst.units_per_chip
+                domains.add(c // self.spec.hb_domain_size)
+            if inst.tp > 1 and len(domains) != 1:
+                raise PlacementError(
+                    f"{inst.llm}: TP instance spans domains {domains}")
+        for c, u in used.items():
+            if u > F:
+                raise PlacementError(f"chip {c} oversubscribed: {u}/{F}")
+
+    def fragmentation(self) -> float:
+        """Fraction of free units stranded on partially-used chips."""
+        F = self.spec.fractions_per_chip
+        used: Dict[int, int] = {c: 0 for c in range(self.spec.num_chips)}
+        for inst in self.instances:
+            for c in inst.chips:
+                used[c] += inst.units_per_chip
+        stranded = sum(F - u for u in used.values() if 0 < u < F)
+        total_free = sum(F - u for u in used.values())
+        return stranded / total_free if total_free else 0.0
+
+    def to_deployment(self) -> dict:
+        """k8s-style deployment manifest (consumed by repro.launch.serve)."""
+        return {
+            "apiVersion": "repro/v1",
+            "kind": "WorkflowServingDeployment",
+            "cluster": {
+                "hosts": self.spec.num_hosts,
+                "chips_per_host": self.spec.chips_per_host,
+                "hb_domain_size": self.spec.hb_domain_size,
+                "fractions_per_chip": self.spec.fractions_per_chip,
+            },
+            "instances": [
+                {
+                    "name": f"{i.llm}-r{i.replica}",
+                    "llm": i.llm,
+                    "tensor_parallel": i.tp,
+                    "chips": i.chips,
+                    "chip_fraction": i.units_per_chip
+                    / self.spec.fractions_per_chip,
+                    "host": i.host,
+                    "hb_domain": i.domain,
+                }
+                for i in self.instances
+            ],
+        }
+
+
+@dataclass
+class _Cluster:
+    spec: hw.ClusterSpec
+    chips: List[Chip]
+
+    @classmethod
+    def fresh(cls, spec: hw.ClusterSpec) -> "_Cluster":
+        chips = []
+        for i in range(spec.num_chips):
+            host = i // spec.chips_per_host
+            domain = i // spec.hb_domain_size
+            chips.append(Chip(host, domain, i, spec.fractions_per_chip))
+        return cls(spec, chips)
+
+    def domains(self) -> Dict[int, List[Chip]]:
+        out: Dict[int, List[Chip]] = {}
+        for c in self.chips:
+            out.setdefault(c.domain, []).append(c)
+        return out
+
+
+def _instances_from_alloc(allocations: Dict[str, Allocation],
+                          spec: hw.ClusterSpec):
+    """Expand allocations into placeable instance descriptors."""
+    F = spec.fractions_per_chip
+    out = []
+    for llm, a in allocations.items():
+        for r in range(a.replicas):
+            if a.tp > 1 or a.fraction >= 1.0:
+                out.append((llm, r, a.tp, F))  # whole chips
+            else:
+                units = max(int(round(a.fraction * F)), 1)
+                out.append((llm, r, 1, units))
+    return out
+
+
+def place(allocations: Dict[str, Allocation],
+          spec: hw.ClusterSpec) -> Placement:
+    cluster = _Cluster.fresh(spec)
+    F = spec.fractions_per_chip
+    placement = Placement(spec)
+
+    insts = _instances_from_alloc(allocations, spec)
+    # most-constrained-first: TP desc, then whole-chip, then fraction desc
+    insts.sort(key=lambda t: (-(t[2] > 1), -t[2], -t[3]))
+
+    for llm, replica, tp, units in insts:
+        if tp >= 1 and units == F:
+            chips = _place_whole(cluster, tp)
+        else:
+            chips = _place_fraction(cluster, units)
+        if chips is None:
+            raise PlacementError(
+                f"cannot place {llm} replica {replica} (tp={tp}, "
+                f"units={units}); fragmentation too high")
+        placement.instances.append(PlacedInstance(
+            llm=llm, replica=replica, tp=tp, chips=[c.index for c in chips],
+            units_per_chip=units if tp == 1 and units < F else F,
+            host=chips[0].host, domain=chips[0].domain))
+        for c in chips:
+            c.free_units -= units if (tp == 1 and units < F) else F
+
+    placement.validate()
+    return placement
+
+
+def _place_whole(cluster: _Cluster, tp: int) -> Optional[List[Chip]]:
+    """Place a tp-chip instance inside one hb domain (fully-free chips)."""
+    F = cluster.spec.fractions_per_chip
+    candidates = []
+    for dom, chips in cluster.domains().items():
+        free = [c for c in chips if c.free_units == F]
+        if len(free) < tp:
+            continue
+        frees = [c.free_units for c in chips]
+        imbalance = max(frees) - min(frees)
+        capacity = sum(frees)
+        candidates.append((imbalance, capacity, dom, free))
+    if not candidates:
+        return None
+    candidates.sort(key=lambda t: (t[0], t[1]))
+    _, _, _, free = candidates[0]
+    return free[:tp]
+
+
+def _place_fraction(cluster: _Cluster, units: int) -> Optional[List[Chip]]:
+    """Best-fit a sub-chip fraction; prefer already-occupied chips."""
+    F = cluster.spec.fractions_per_chip
+    partial = [c for c in cluster.chips
+               if 0 < c.free_units < F and c.free_units >= units]
+    if partial:
+        partial.sort(key=lambda c: c.free_units)  # tightest fit
+        return [partial[0]]
+    # open a fresh chip in the least-capacity domain that has one
+    candidates = []
+    for dom, chips in cluster.domains().items():
+        free = [c for c in chips if c.free_units == F]
+        if not free:
+            continue
+        capacity = sum(c.free_units for c in chips)
+        candidates.append((capacity, dom, free[0]))
+    if not candidates:
+        return None
+    candidates.sort(key=lambda t: t[0])
+    return [candidates[0][2]]
+
+
+def save_deployment(placement: Placement, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(placement.to_deployment(), f, indent=2)

@@ -1,0 +1,213 @@
+"""Per-LLM profiling (paper §4 step 3).
+
+Replays all traced requests of a given LLM — across all workflow-level
+requests, *maintaining inter-request dependencies within each trace* — at
+swept arrival rates and tensor-parallel degrees, through the discrete-
+event engine simulator.  Produces the throughput-latency profiles the
+Aggregate LLM Pipeline is synthesized from.
+
+Replica counts are NOT swept (paper: replicas don't change latency;
+throughput scales linearly).  Fractional shares are NOT swept either: a
+fraction ``f`` scales the engine's service rate, which maps a profile
+exactly as  L(rate; f) = (1/f) · L(rate/f; 1)  and  T(f) = f · T(1).
+"""
+from __future__ import annotations
+
+import math
+import random
+from bisect import bisect_left
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core.trace import LLMCall, TraceStore
+from repro.serving.simulator import EngineRequest, EngineSim, EventLoop
+
+DEP_EPS = 1e-9
+RATE_GRID = (0.10, 0.30, 0.50, 0.65, 0.80, 0.90, 0.95)
+
+
+@dataclass
+class ReplayCall:
+    prompt_tokens: int
+    output_tokens: int
+    preds: List[int]  # indices within the group that must finish first
+    parent: Optional[int]  # index used for prefix-cache affinity
+
+
+@dataclass
+class ReplayGroup:
+    """The calls one workflow-level request issued to one LLM."""
+
+    calls: List[ReplayCall]
+
+
+def extract_groups(store: TraceStore, llm: str) -> List[ReplayGroup]:
+    groups: List[ReplayGroup] = []
+    for tr in store.traces:
+        calls = sorted(tr.calls_for(llm), key=lambda c: c.t_start)
+        if not calls:
+            continue
+        rcs: List[ReplayCall] = []
+        for i, c in enumerate(calls):
+            preds = [j for j in range(i)
+                     if calls[j].t_end <= c.t_start + DEP_EPS]
+            # direct predecessors only: drop preds dominated by later preds
+            direct = [j for j in preds
+                      if not any(calls[j].t_end < calls[k].t_start + DEP_EPS
+                                 for k in preds if k != j)]
+            parent = max(direct, key=lambda j: calls[j].t_end) if direct else None
+            rcs.append(ReplayCall(c.prompt_tokens, c.output_tokens,
+                                  direct, parent))
+        groups.append(ReplayGroup(rcs))
+    return groups
+
+
+def _run_replay(cfg: ArchConfig, groups: Sequence[ReplayGroup], *,
+                tp: int, group_rate: float, seed: int = 0,
+                prefix_caching: bool = True,
+                avg_context: int = 1024) -> List[EngineRequest]:
+    """Replay groups at Poisson ``group_rate`` through one engine replica."""
+    loop = EventLoop()
+    engine = EngineSim(cfg, loop, tp=tp, fraction=1.0,
+                       prefix_caching=prefix_caching, avg_context=avg_context)
+    rng = random.Random(seed)
+    completed: List[EngineRequest] = []
+    next_id = [0]
+
+    def submit_group(g: ReplayGroup, arrival: float):
+        remaining = {i: len(c.preds) for i, c in enumerate(g.calls)}
+        dependents: Dict[int, List[int]] = {i: [] for i in range(len(g.calls))}
+        ids: Dict[int, int] = {}
+        for i, c in enumerate(g.calls):
+            for j in c.preds:
+                dependents[j].append(i)
+
+        def launch(i: int, t: float):
+            c = g.calls[i]
+            next_id[0] += 1
+            rid = next_id[0]
+            ids[i] = rid
+
+            def on_done(req: EngineRequest, i=i):
+                completed.append(req)
+                for k in dependents[i]:
+                    remaining[k] -= 1
+                    if remaining[k] == 0:
+                        launch(k, loop.now)
+
+            req = EngineRequest(
+                req_id=rid, prompt_tokens=c.prompt_tokens,
+                output_tokens=max(c.output_tokens, 1), arrival=t,
+                on_complete=on_done,
+                parent_id=ids.get(c.parent) if c.parent is not None else None)
+            engine.submit(req)
+
+        for i, c in enumerate(g.calls):
+            if not c.preds:
+                loop.schedule(arrival, lambda i=i: launch(i, loop.now))
+
+    t = 0.0
+    for g in groups:
+        loop.schedule(t, lambda g=g, t=t: submit_group(g, t))
+        if group_rate == math.inf:
+            continue
+        t += rng.expovariate(group_rate)
+    loop.run()
+    return completed
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    idx = min(int(q * len(s)), len(s) - 1)
+    return s[idx]
+
+
+@dataclass
+class TPProfile:
+    tp: int
+    rates: List[float]  # call arrival rates (calls/s)
+    latency: Dict[str, List[float]]  # percentile -> latencies
+    max_throughput: float  # calls/s
+
+    def lookup(self, rate: float, percentile: str = "mean") -> float:
+        if rate >= self.max_throughput:
+            return math.inf
+        xs, ys = self.rates, self.latency[percentile]
+        if rate <= xs[0]:
+            return ys[0]
+        i = bisect_left(xs, rate)
+        if i >= len(xs):
+            # extrapolate toward saturation with an M/M/1-style blowup
+            base = ys[-1]
+            return base * (self.max_throughput - xs[-1]) / max(
+                self.max_throughput - rate, 1e-9)
+        x0, x1 = xs[i - 1], xs[i]
+        y0, y1 = ys[i - 1], ys[i]
+        w = (rate - x0) / max(x1 - x0, 1e-12)
+        return y0 + w * (y1 - y0)
+
+
+@dataclass
+class LLMProfile:
+    llm: str
+    arch: str
+    calls_per_group: float
+    by_tp: Dict[int, TPProfile]
+
+    def tps(self) -> List[int]:
+        return sorted(self.by_tp)
+
+    def latency(self, rate: float, tp: int, *, fraction: float = 1.0,
+                percentile: str = "mean") -> float:
+        prof = self.by_tp[tp]
+        if fraction <= 0:
+            return math.inf
+        return prof.lookup(rate / fraction, percentile) / fraction
+
+    def max_throughput(self, tp: int, *, fraction: float = 1.0) -> float:
+        return self.by_tp[tp].max_throughput * fraction
+
+
+def profile_llm(cfg: ArchConfig, store: TraceStore, llm: str, *,
+                tp_degrees: Sequence[int] = (1, 2, 4),
+                max_groups: int = 120, prefix_caching: bool = True,
+                seed: int = 0) -> LLMProfile:
+    groups = extract_groups(store, llm)[:max_groups]
+    if not groups:
+        raise ValueError(f"no traced calls for LLM {llm!r}")
+    n_calls = sum(len(g.calls) for g in groups)
+    calls_per_group = n_calls / len(groups)
+    prompts = [c.prompt_tokens for g in groups for c in g.calls]
+    outs = [c.output_tokens for g in groups for c in g.calls]
+    avg_context = int(sum(prompts) / len(prompts) + sum(outs) / len(outs))
+
+    by_tp: Dict[int, TPProfile] = {}
+    for tp in tp_degrees:
+        # --- capacity run: all groups at t=0 ---
+        done = _run_replay(cfg, groups, tp=tp, group_rate=math.inf,
+                           prefix_caching=prefix_caching,
+                           avg_context=avg_context, seed=seed)
+        makespan = max(r.t_done for r in done)
+        t_max = len(done) / max(makespan, 1e-9)
+
+        # --- latency sweep at fractions of capacity ---
+        rates, lat = [], {"mean": [], "p50": [], "p90": [], "p99": []}
+        for fr in RATE_GRID:
+            call_rate = fr * t_max
+            group_rate = call_rate / calls_per_group
+            done = _run_replay(cfg, groups, tp=tp, group_rate=group_rate,
+                               prefix_caching=prefix_caching,
+                               avg_context=avg_context, seed=seed + 1)
+            ls = [r.latency for r in done]
+            rates.append(call_rate)
+            lat["mean"].append(sum(ls) / len(ls))
+            lat["p50"].append(_percentile(ls, 0.50))
+            lat["p90"].append(_percentile(ls, 0.90))
+            lat["p99"].append(_percentile(ls, 0.99))
+        by_tp[tp] = TPProfile(tp=tp, rates=rates, latency=lat,
+                              max_throughput=t_max)
+    return LLMProfile(llm=llm, arch=cfg.name,
+                      calls_per_group=calls_per_group, by_tp=by_tp)

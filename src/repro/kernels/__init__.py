@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving hot-spots.
+
+flash_attention  — blocked causal/SWA prefill attention (MXU-tiled)
+decode_attention — GQA decode over a KV cache (HBM-streaming bound)
+rwkv6_scan       — chunked WKV6 linear recurrence (rwkv6-7b)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, interpret fallback off-TPU), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper: GQA layout + group padding + interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.decode_attention.kernel import decode_attention
+
+
+def decode_attention_op(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                        cache_len, *, block_s: int = 512) -> jax.Array:
+    """Model-layout entry point.
+
+    q: (B, H, D); caches: (B, KV, Smax, D).  Returns (B, H, D).
+    Pads the GQA group dim up to 8 sublanes when needed.
+    """
+    B, H, D = q.shape
+    KV = k_cache.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    Gp = max(G, 8)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    out = decode_attention(qg, k_cache, v_cache, cache_len, block_s=block_s,
+                           interpret=use_interpret())
+    return out[:, :, :G].reshape(B, H, D)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cache_len) -> jax.Array:
+    """q: (B, KV, G, D); caches: (B, KV, Smax, D). Returns (B, KV, G, D)."""
+    B, KV, G, D = q.shape
+    Smax = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(Smax) < cache_len
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper: layout adaptation + interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import use_interpret
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def flash_attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       window: int = 0, block_q: int = 128,
+                       block_kv: int = 128) -> jax.Array:
+    """Model-layout entry point.
+
+    q: (B, S, H, D); k/v: (B, S, KV, D) — as produced by attention_qkv.
+    Returns (B, S, H, D).
+    """
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, window=window, block_q=block_q,
+                          block_kv=block_kv, interpret=use_interpret())
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the WKV6 kernel (model layout + fallback)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.rwkv6_scan.kernel import wkv6_scan
+
+
+def wkv6_op(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+            u: jax.Array, state: jax.Array, *, chunk: int = 64):
+    """Model-layout entry point.
+
+    r/k/v/logw: (B, H, S, D); u: (H, D); state: (B, H, D, D) f32.
+    Returns (out (B, H, S, D), state').
+    """
+    B, H, S, D = r.shape
+    flat = lambda a: a.reshape(B * H, S, D)
+    out, s1 = wkv6_scan(flat(r), flat(k), flat(v), flat(logw), u,
+                        state.reshape(B * H, D, D), num_heads=H, chunk=chunk,
+                        interpret=use_interpret())
+    return out.reshape(B, H, S, D), s1.reshape(B, H, D, D)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the WKV6 scan: naive sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                  u: jax.Array, state: jax.Array, *, num_heads: int):
+    """Token-by-token reference. Same signature as the kernel.
+
+    r/k/v/logw: (BH, S, D); u: (H, D); state: (BH, D, D) f32.
+    """
+    BH, S, D = r.shape
+    H = num_heads
+    u_full = jnp.tile(u, (BH // H, 1))  # (BH, D) per bh row
+
+    def step(s, xs):
+        r_t, k_t, v_t, lw_t = (a.astype(jnp.float32) for a in xs)
+        out = (jnp.einsum("bk,bkv->bv", r_t, s)
+               + jnp.sum(r_t * u_full.astype(jnp.float32) * k_t,
+                         axis=-1, keepdims=True) * v_t)
+        s = (s * jnp.exp(lw_t)[..., None]
+             + k_t[..., None] * v_t[..., None, :])
+        return s, out
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (r, k, v, logw))
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2).astype(r.dtype), state

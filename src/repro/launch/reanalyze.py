@@ -1,0 +1,40 @@
+"""Re-derive hlo_stats for every dry-run cell from the saved optimized
+HLO (no recompilation) — used after analyzer improvements.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+import gzip
+import json
+from pathlib import Path
+
+from repro.analysis.hlo_stats import analyze
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def main():
+    hlo_dir = RESULTS_DIR / "hlo"
+    n = 0
+    for gz in sorted(hlo_dir.glob("*.hlo.gz")):
+        cell = gz.name.replace(".hlo.gz", "")
+        jpath = RESULTS_DIR / f"{cell}.json"
+        if not jpath.exists():
+            continue
+        rec = json.loads(jpath.read_text())
+        stats = analyze(gzip.decompress(gz.read_bytes()).decode())
+        rec["hlo_stats"] = {
+            "flops": stats.flops,
+            "hbm_bytes": stats.hbm_bytes,
+            "collective_bytes": stats.collective_bytes,
+            "collective_counts": stats.collective_counts,
+            "total_collective_bytes": stats.total_collective_bytes,
+            "while_trip_counts": stats.while_trip_counts,
+        }
+        jpath.write_text(json.dumps(rec, indent=2))
+        n += 1
+        print(f"reanalyzed {cell}", flush=True)
+    print(f"done: {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""seamless-m4t-large-v2 backbone: encoder-decoder transformer.
+
+The speech frontend is a STUB per the assignment: the encoder consumes
+``audio_frames`` — (B, num_audio_frames, d_model) precomputed frame
+embeddings (see ``input_specs``).  The decoder is a standard causal stack
+with per-layer cross-attention to the encoder output; cross K/V are
+computed once at prefill and cached.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import (
+    AXIS_MODEL, BATCH_AXES, ParamDef, attention_block_decode,
+    attention_block_prefill, attention_defs, bidirectional_attention,
+    cross_entropy_from_logits, embed_lookup, lm_head_logits, matmul,
+    mlp_block, mlp_defs, rms_norm, stacked,
+)
+from repro.models.transformer import encoder_layer, encoder_layer_defs
+
+
+def dec_layer_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), P(None), init="zeros"),
+        "self_attn": attention_defs(cfg),
+        "ln_x": ParamDef((d,), P(None), init="zeros"),
+        "wq_x": ParamDef((d, cfg.q_dim), P(None, AXIS_MODEL)),
+        "wk_x": ParamDef((d, cfg.kv_dim), P(None, AXIS_MODEL)),
+        "wv_x": ParamDef((d, cfg.kv_dim), P(None, AXIS_MODEL)),
+        "wo_x": ParamDef((cfg.q_dim, d), P(AXIS_MODEL, None)),
+        "ln2": ParamDef((d,), P(None), init="zeros"),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def _cross_apply_seq(lp, x, ck, cv, cfg):
+    """x: (B, S, d); ck/cv: (B, F, KV, D)."""
+    B, S, _ = x.shape
+    h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    q = matmul(h, lp["wq_x"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    attn = bidirectional_attention(q, ck, cv).reshape(B, S, cfg.q_dim)
+    return x + matmul(attn, lp["wo_x"])
+
+
+def make_encdec(cfg: ArchConfig, *, num_microbatches: int = 1):
+    from repro.models.transformer import ModelBundle
+
+    d, v = cfg.d_model, cfg.padded_vocab
+    defs = {
+        "embed": ParamDef((v, d), P(AXIS_MODEL, None), scale=1.0),
+        "enc_layers": stacked(encoder_layer_defs(cfg), cfg.encoder_layers),
+        "enc_norm": ParamDef((d,), P(None), init="zeros"),
+        "dec_layers": stacked(dec_layer_defs(cfg), cfg.num_layers),
+        "final_norm": ParamDef((d,), P(None), init="zeros"),
+        "lm_head": ParamDef((v, d), P(AXIS_MODEL, None)),
+    }
+
+    def encode(params, audio_frames):
+        def body(x, lp):
+            return encoder_layer(lp, x, cfg), None
+
+        x, _ = jax.lax.scan(body, audio_frames, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def dec_layer_prefill(lp, x, enc_out):
+        h, kv = attention_block_prefill(
+            lp["self_attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg)
+        x = x + h
+        B, F = enc_out.shape[0], enc_out.shape[1]
+        ck = matmul(enc_out, lp["wk_x"]).reshape(B, F, cfg.num_kv_heads,
+                                                 cfg.head_dim)
+        cv = matmul(enc_out, lp["wv_x"]).reshape(B, F, cfg.num_kv_heads,
+                                                 cfg.head_dim)
+        x = _cross_apply_seq(lp, x, ck, cv, cfg)
+        x = x + mlp_block(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                          cfg.activation)
+        return x, kv, (ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3))
+
+    def forward_loss(params, batch):
+        enc_out = encode(params, batch["audio_frames"])
+        x = embed_lookup(params["embed"], batch["tokens"])
+
+        def body(x, lp):
+            x, _, _ = dec_layer_prefill(lp, x, enc_out)
+            return x, None
+
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        logits = lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"], valid_vocab=cfg.vocab_size)
+        return cross_entropy_from_logits(logits, batch["labels"])
+
+    from repro.models.transformer import make_microbatched_loss
+    loss_fn = make_microbatched_loss(forward_loss, num_microbatches)
+
+    def prefill(params, batch):
+        tokens, audio = batch["tokens"], batch["audio_frames"]
+        enc_out = encode(params, audio)
+        x = embed_lookup(params["embed"], tokens)
+
+        def body(x, lp):
+            x, kv, ckv = dec_layer_prefill(lp, x, enc_out)
+            return x, (kv, ckv)
+
+        x, (self_kv, cross_kv) = jax.lax.scan(body, x, params["dec_layers"])
+        logits = lm_head_logits(
+            rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps),
+            params["lm_head"], valid_vocab=cfg.vocab_size)[..., :cfg.vocab_size]
+        return logits, {"self": self_kv, "cross": cross_kv}
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed_lookup(params["embed"], tokens)
+
+        def body(x, xs):
+            lp, kv, ckv = xs
+            h, kv = attention_block_decode(
+                lp["self_attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), kv,
+                pos, cfg)
+            x = x + h
+            ck, cv = ckv
+            B = x.shape[0]
+            hq = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+            q = matmul(hq, lp["wq_x"]).reshape(B, cfg.num_heads, cfg.head_dim)
+            attn = L.decode_attention(q, ck, cv, ck.shape[2])
+            x = x + matmul(attn.reshape(B, cfg.q_dim), lp["wo_x"])
+            x = x + mlp_block(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                              cfg.activation)
+            return x, (kv, ckv)
+
+        x, (self_kv, cross_kv) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+        logits = lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"],
+                                valid_vocab=cfg.vocab_size)[..., :cfg.vocab_size]
+        return logits, {"self": self_kv, "cross": cross_kv}
+
+    def cache_shape_fn(batch, max_len):
+        s = jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.head_dim),
+            L.DEFAULT_DTYPE)
+        c = jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, cfg.num_kv_heads, cfg.num_audio_frames,
+             cfg.head_dim), L.DEFAULT_DTYPE)
+        return {"self": (s, s), "cross": (c, c)}
+
+    def cache_spec_fn():
+        s = P(None, BATCH_AXES, None, AXIS_MODEL, None)
+        return {"self": (s, s), "cross": (s, s)}
+
+    def audio_spec(batch):
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.num_audio_frames, cfg.d_model), L.DEFAULT_DTYPE)
+
+    return ModelBundle(cfg, defs, loss_fn, prefill, decode_step,
+                       cache_shape_fn, cache_spec_fn,
+                       {"audio_frames": audio_spec})

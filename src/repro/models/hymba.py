@@ -1,0 +1,354 @@
+"""Hymba — hybrid layers with *parallel* attention + Mamba heads.
+
+Each layer runs, on the same normed input:
+  * GQA attention heads (sliding-window on most layers; layers
+    ``cfg.full_attn_layers`` use global attention), and
+  * Mamba-style selective-scan heads (state ``cfg.ssm_state``),
+then fuses ``x + (norm(attn) + norm(ssm)) / 2`` (the paper's mean fusion)
+followed by a SwiGLU MLP.
+
+Layer layout: full-attn layers are *unscanned* singletons, SWA layers are
+scanned groups, so each layer group carries exactly the KV cache it needs
+(full caches only for the 3 global layers — what makes long_500k decode
+fit).  Mamba prefill uses a chunked associative scan (sequential over
+chunks of 128, log-depth within).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import (
+    ACC_DTYPE, AXIS_MODEL, BATCH_AXES, ParamDef, attention_block_decode,
+    attention_block_prefill, attention_defs, cross_entropy_from_logits,
+    embed_lookup, lm_head_logits, matmul, mlp_block, mlp_defs, rms_norm,
+    stacked,
+)
+
+SSM_CHUNK = 128
+CONV_K = 4
+DT_RANK = 48
+
+
+# ---------------------------------------------------------------------------
+# Mamba head block
+# ---------------------------------------------------------------------------
+
+
+def mamba_defs(cfg: ArchConfig) -> dict:
+    d, h, n = cfg.d_model, cfg.q_dim, cfg.ssm_state
+    return {
+        "w_in": ParamDef((d, 2 * h), P(None, AXIS_MODEL)),
+        "conv_w": ParamDef((h, CONV_K), P(AXIS_MODEL, None), scale=0.5),
+        "w_xdbc": ParamDef((h, DT_RANK + 2 * n), P(AXIS_MODEL, None)),
+        "w_dt": ParamDef((DT_RANK, h), P(None, AXIS_MODEL), scale=0.1),
+        "dt_bias": ParamDef((h,), P(AXIS_MODEL), init="zeros"),
+        "a_log": ParamDef((h, n), P(AXIS_MODEL, None), init="decay_init",
+                          dtype=jnp.float32),
+        "d_skip": ParamDef((h,), P(AXIS_MODEL), init="ones"),
+        "w_out": ParamDef((h, d), P(AXIS_MODEL, None)),
+    }
+
+
+def _mamba_proj(p: dict, xz: jax.Array, n: int):
+    """Shared projections. xz: (..., 2h) -> (x, z, dt, Bc, Cc)."""
+    h = xz.shape[-1] // 2
+    x, z = xz[..., :h], xz[..., h:]
+    dbc = matmul(x, p["w_xdbc"])
+    dt_r, Bc, Cc = (dbc[..., :DT_RANK], dbc[..., DT_RANK:DT_RANK + n],
+                    dbc[..., DT_RANK + n:])
+    dt = jax.nn.softplus(matmul(dt_r, p["w_dt"]).astype(ACC_DTYPE)
+                         + p["dt_bias"].astype(ACC_DTYPE))
+    return x, z, dt, Bc, Cc
+
+
+def mamba_prefill(p: dict, xin: jax.Array, conv_state: jax.Array,
+                  ssm_state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """xin: (B, S, d). conv_state: (B, h, K-1). ssm_state: (B, h, n) f32."""
+    B, S, d = xin.shape
+    n = ssm_state.shape[-1]
+    xz = matmul(xin, p["w_in"])
+    h = xz.shape[-1] // 2
+    x, z = xz[..., :h], xz[..., h:]
+    # causal depthwise conv over time
+    x_t = x.transpose(0, 2, 1)  # (B, h, S)
+    x_pad = jnp.concatenate([conv_state, x_t], axis=-1)
+    conv = sum(x_pad[:, :, i:i + S] * p["conv_w"][None, :, i:i + 1]
+               for i in range(CONV_K))
+    new_conv_state = x_pad[:, :, -(CONV_K - 1):]
+    x = jax.nn.silu(conv.transpose(0, 2, 1))  # (B, S, h)
+    dbc = matmul(x, p["w_xdbc"])
+    dt = jax.nn.softplus(matmul(dbc[..., :DT_RANK], p["w_dt"]).astype(ACC_DTYPE)
+                         + p["dt_bias"].astype(ACC_DTYPE))  # (B,S,h)
+    Bc = dbc[..., DT_RANK:DT_RANK + n].astype(ACC_DTYPE)  # (B,S,n)
+    Cc = dbc[..., DT_RANK + n:].astype(ACC_DTYPE)
+    A = -jnp.exp(p["a_log"].astype(ACC_DTYPE))  # (h, n)
+
+    C_ = min(SSM_CHUNK, S)
+    assert S % C_ == 0
+    n_chunks = S // C_
+
+    def chunk_body(s0, xs):
+        x_c, dt_c, b_c, c_c = xs  # (B,C,h) / (B,C,h) / (B,C,n) / (B,C,n)
+        decay = jnp.exp(dt_c[..., None] * A)  # (B,C,h,n)
+        add = (dt_c * x_c.astype(ACC_DTYPE))[..., None] * b_c[:, :, None, :]
+
+        def combine(a, b):
+            return (b[0] * a[0], b[0] * a[1] + b[1])
+
+        cumdecay, s_intra = jax.lax.associative_scan(combine, (decay, add), axis=1)
+        s_all = s_intra + cumdecay * s0[:, None]  # (B,C,h,n)
+        y = jnp.einsum("bchn,bcn->bch", s_all, c_c)
+        y = y + p["d_skip"].astype(ACC_DTYPE) * x_c.astype(ACC_DTYPE)
+        return s_all[:, -1], y.astype(xin.dtype)
+
+    xs = tuple(a.reshape(B, n_chunks, C_, -1).transpose(1, 0, 2, 3)
+               for a in (x, dt, Bc, Cc))
+    ssm_state, ys = jax.lax.scan(chunk_body, ssm_state.astype(ACC_DTYPE), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, h)
+    y = y * jax.nn.silu(z)
+    return matmul(y, p["w_out"]), new_conv_state, ssm_state
+
+
+def mamba_decode(p: dict, xin: jax.Array, conv_state: jax.Array,
+                 ssm_state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """xin: (B, d) one token."""
+    B, d = xin.shape
+    n = ssm_state.shape[-1]
+    xz = matmul(xin, p["w_in"])
+    h = xz.shape[-1] // 2
+    x, z = xz[..., :h], xz[..., h:]
+    x_hist = jnp.concatenate([conv_state, x[..., None]], axis=-1)  # (B,h,K)
+    conv = jnp.sum(x_hist * p["conv_w"][None], axis=-1)
+    new_conv_state = x_hist[:, :, 1:]
+    x = jax.nn.silu(conv)
+    dbc = matmul(x, p["w_xdbc"])
+    dt = jax.nn.softplus(matmul(dbc[..., :DT_RANK], p["w_dt"]).astype(ACC_DTYPE)
+                         + p["dt_bias"].astype(ACC_DTYPE))  # (B,h)
+    Bc = dbc[..., DT_RANK:DT_RANK + n].astype(ACC_DTYPE)
+    Cc = dbc[..., DT_RANK + n:].astype(ACC_DTYPE)
+    A = -jnp.exp(p["a_log"].astype(ACC_DTYPE))
+    decay = jnp.exp(dt[..., None] * A)  # (B,h,n)
+    ssm_state = (ssm_state * decay
+                 + (dt * x.astype(ACC_DTYPE))[..., None] * Bc[:, None, :])
+    y = jnp.einsum("bhn,bn->bh", ssm_state, Cc)
+    y = y + p["d_skip"].astype(ACC_DTYPE) * x.astype(ACC_DTYPE)
+    y = y.astype(xin.dtype) * jax.nn.silu(z)
+    return matmul(y, p["w_out"]), new_conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Hymba layer (parallel attn + mamba, mean fusion)
+# ---------------------------------------------------------------------------
+
+
+def hymba_layer_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), P(None), init="zeros"),
+        "attn": attention_defs(cfg),
+        "mamba": mamba_defs(cfg),
+        "fuse_na": ParamDef((d,), P(None), init="zeros"),
+        "fuse_ns": ParamDef((d,), P(None), init="zeros"),
+        "ln2": ParamDef((d,), P(None), init="zeros"),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def hymba_layer_prefill(lp: dict, x: jax.Array, cfg: ArchConfig, window: int,
+                        conv_state, ssm_state):
+    h_in = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, kv = attention_block_prefill(lp["attn"], h_in, cfg, window=window)
+    ssm_out, conv_state, ssm_state = mamba_prefill(lp["mamba"], h_in,
+                                                   conv_state, ssm_state)
+    fused = 0.5 * (rms_norm(attn_out, lp["fuse_na"], cfg.norm_eps)
+                   + rms_norm(ssm_out, lp["fuse_ns"], cfg.norm_eps))
+    x = x + fused
+    x = x + mlp_block(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                      cfg.activation)
+    return x, kv, conv_state, ssm_state
+
+
+def hymba_layer_decode(lp: dict, x: jax.Array, cfg: ArchConfig, window: int,
+                       kv, pos, conv_state, ssm_state):
+    h_in = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, kv = attention_block_decode(lp["attn"], h_in, kv, pos, cfg,
+                                          window=window)
+    ssm_out, conv_state, ssm_state = mamba_decode(lp["mamba"], h_in,
+                                                  conv_state, ssm_state)
+    fused = 0.5 * (rms_norm(attn_out, lp["fuse_na"], cfg.norm_eps)
+                   + rms_norm(ssm_out, lp["fuse_ns"], cfg.norm_eps))
+    x = x + fused
+    x = x + mlp_block(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                      cfg.activation)
+    return x, kv, conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Group structure: full-attn singletons + scanned SWA groups
+# ---------------------------------------------------------------------------
+
+
+def _groups(cfg: ArchConfig):
+    """Split layer indices into alternating (is_full, count) groups."""
+    full = set(cfg.full_attn_layers)
+    groups = []
+    i = 0
+    while i < cfg.num_layers:
+        if i in full:
+            groups.append(("full", 1))
+            i += 1
+        else:
+            j = i
+            while j < cfg.num_layers and j not in full:
+                j += 1
+            groups.append(("swa", j - i))
+            i = j
+    return groups
+
+
+def make_hymba(cfg: ArchConfig, *, num_microbatches: int = 1):
+    from repro.models.transformer import ModelBundle
+
+    d, v = cfg.d_model, cfg.padded_vocab
+    groups = _groups(cfg)
+    defs = {"embed": ParamDef((v, d), P(AXIS_MODEL, None), scale=1.0),
+            "final_norm": ParamDef((d,), P(None), init="zeros"),
+            "lm_head": ParamDef((v, d), P(AXIS_MODEL, None)),
+            "groups": []}
+    for kind, count in groups:
+        ld = hymba_layer_defs(cfg)
+        defs["groups"].append(ld if kind == "full" else stacked(ld, count))
+    defs["groups"] = tuple(defs["groups"])
+
+    h, n = cfg.q_dim, cfg.ssm_state
+
+    def group_cache_shapes(kind, count, batch, max_len):
+        kvlen = max_len if kind == "full" else min(cfg.sliding_window, max_len)
+        lead = () if kind == "full" else (count,)
+        mk = lambda s, dt=L.DEFAULT_DTYPE: jax.ShapeDtypeStruct(lead + s, dt)
+        return {
+            "k": mk((batch, cfg.num_kv_heads, kvlen, cfg.head_dim)),
+            "v": mk((batch, cfg.num_kv_heads, kvlen, cfg.head_dim)),
+            "conv": mk((batch, h, CONV_K - 1)),
+            "ssm": mk((batch, h, n), jnp.float32),
+        }
+
+    def cache_shape_fn(batch, max_len):
+        return tuple(group_cache_shapes(kind, count, batch, max_len)
+                     for kind, count in groups)
+
+    def cache_spec_fn():
+        out = []
+        for kind, count in groups:
+            lead = () if kind == "full" else (None,)
+            out.append({
+                "k": P(*(lead + (BATCH_AXES, None, AXIS_MODEL, None))),
+                "v": P(*(lead + (BATCH_AXES, None, AXIS_MODEL, None))),
+                "conv": P(*(lead + (BATCH_AXES, AXIS_MODEL, None))),
+                "ssm": P(*(lead + (BATCH_AXES, AXIS_MODEL, None))),
+            })
+        return tuple(out)
+
+    def fresh_group_states(batch, count=None):
+        lead = () if count is None else (count,)
+        return (jnp.zeros(lead + (batch, h, CONV_K - 1), L.DEFAULT_DTYPE),
+                jnp.zeros(lead + (batch, h, n), jnp.float32))
+
+    def run_prefill(params, x, collect_cache: bool):
+        B, S = x.shape[0], x.shape[1]
+        caches = []
+        for gi, (kind, count) in enumerate(groups):
+            gp = params["groups"][gi]
+            window = 0 if kind == "full" else cfg.sliding_window
+            if kind == "full":
+                conv0, ssm0 = fresh_group_states(B)
+                x, kv, conv, ssm = hymba_layer_prefill(gp, x, cfg, window,
+                                                       conv0, ssm0)
+                if collect_cache:
+                    kvlen = S
+                    caches.append({"k": kv[0], "v": kv[1], "conv": conv,
+                                   "ssm": ssm})
+            else:
+                conv0, ssm0 = fresh_group_states(B, count)
+
+                if collect_cache:
+                    def body(x, xs):
+                        lp, c0, s0 = xs
+                        x, kv, c1, s1 = hymba_layer_prefill(lp, x, cfg, window,
+                                                            c0, s0)
+                        W = min(cfg.sliding_window, S)
+                        return x, (kv[0][:, :, -W:], kv[1][:, :, -W:], c1, s1)
+
+                    x, (ks, vs, convs, ssms) = jax.lax.scan(
+                        body, x, (gp, conv0, ssm0))
+                    caches.append({"k": ks, "v": vs, "conv": convs,
+                                   "ssm": ssms})
+                else:
+                    def body(x, xs):
+                        lp, c0, s0 = xs
+                        x, _, _, _ = hymba_layer_prefill(lp, x, cfg, window,
+                                                         c0, s0)
+                        return x, None
+
+                    body = jax.checkpoint(
+                        body, policy=jax.checkpoint_policies.nothing_saveable)
+                    x, _ = jax.lax.scan(body, x, (gp, conv0, ssm0))
+        return x, tuple(caches)
+
+    def forward_loss(params, batch):
+        x = embed_lookup(params["embed"], batch["tokens"])
+        x, _ = run_prefill(params, x, collect_cache=False)
+        logits = lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"], valid_vocab=cfg.vocab_size)
+        return cross_entropy_from_logits(logits, batch["labels"])
+
+    from repro.models.transformer import make_microbatched_loss
+    loss_fn = make_microbatched_loss(forward_loss, num_microbatches)
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        x = embed_lookup(params["embed"], tokens)
+        x, caches = run_prefill(params, x, collect_cache=True)
+        logits = lm_head_logits(
+            rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps),
+            params["lm_head"], valid_vocab=cfg.vocab_size)[..., :cfg.vocab_size]
+        return logits, caches
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed_lookup(params["embed"], tokens)
+        new_cache = []
+        for gi, (kind, count) in enumerate(groups):
+            gp = params["groups"][gi]
+            gc = cache[gi]
+            window = 0 if kind == "full" else cfg.sliding_window
+            if kind == "full":
+                x, kv, conv, ssm = hymba_layer_decode(
+                    gp, x, cfg, window, (gc["k"], gc["v"]), pos,
+                    gc["conv"], gc["ssm"])
+                new_cache.append({"k": kv[0], "v": kv[1], "conv": conv,
+                                  "ssm": ssm})
+            else:
+                def body(x, xs):
+                    lp, k, v_, c0, s0 = xs
+                    x, kv, c1, s1 = hymba_layer_decode(
+                        lp, x, cfg, window, (k, v_), pos, c0, s0)
+                    return x, (kv[0], kv[1], c1, s1)
+
+                x, (ks, vs, convs, ssms) = jax.lax.scan(
+                    body, x, (gp, gc["k"], gc["v"], gc["conv"], gc["ssm"]))
+                new_cache.append({"k": ks, "v": vs, "conv": convs,
+                                  "ssm": ssms})
+        logits = lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"],
+                                valid_vocab=cfg.vocab_size)[..., :cfg.vocab_size]
+        return logits, tuple(new_cache)
+
+    return ModelBundle(cfg, defs, loss_fn, prefill, decode_step,
+                       cache_shape_fn, cache_spec_fn, {})

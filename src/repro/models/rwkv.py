@@ -1,0 +1,340 @@
+"""RWKV6 "Finch" — attention-free, data-dependent decay (rwkv6-7b).
+
+The WKV6 recurrence per head (head_dim = 64):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state: head_dim x head_dim)
+    o_t = r_t S_{t-1} + (r_t . (u (.) k_t)) v_t   (bonus for current token)
+
+Prefill runs a *chunked* formulation (sequential lax.scan over chunks of
+``CHUNK`` tokens; within a chunk the pairwise decays are computed directly
+as masked exponentials, all exponents <= 0 so it is numerically stable in
+f32 without the overflow-prone 1/decay factorisation).  The Pallas kernel
+in ``repro.kernels.rwkv6_scan`` implements the same chunked contraction
+for TPU; this module is its jnp oracle and the dry-run path.
+
+Decode is the O(1) recurrence; long_500k is native for this arch.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import (
+    ACC_DTYPE, AXIS_MODEL, BATCH_AXES, ParamDef, activate,
+    cross_entropy_from_logits, embed_lookup, init_params, lm_head_logits,
+    matmul, rms_norm, stacked,
+)
+
+CHUNK = 64
+LORA_R = 64  # decay lora rank
+DDLERP_R = 32  # data-dependent lerp rank
+
+
+# ---------------------------------------------------------------------------
+# Chunked WKV6
+# ---------------------------------------------------------------------------
+
+
+def wkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                 u: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6 over a full sequence.
+
+    r, k, v: (B, H, S, D); logw: (B, H, S, D) (<= 0); u: (H, D);
+    state: (B, H, D, D) f32 (k-dim x v-dim).  Returns (out (B,H,S,D), state').
+    """
+    B, H, S, D = r.shape
+    C = min(CHUNK, S)
+    assert S % C == 0, f"seq {S} not divisible by chunk {C}"
+    n_chunks = S // C
+
+    def chunk_body(carry, xs):
+        S0 = carry
+        rc, kc, vc, lwc = xs  # (B, H, C, D)
+        rc32, kc32, vc32 = (a.astype(ACC_DTYPE) for a in (rc, kc, vc))
+        cum = jnp.cumsum(lwc, axis=2)  # inclusive cumulative log-decay
+        excl = cum - lwc  # exclusive (= cum at t-1)
+        # inter-chunk: r_t decayed to chunk start, applied to carried state
+        r_dec = rc32 * jnp.exp(excl)
+        out_inter = jnp.einsum("bhck,bhkv->bhcv", r_dec, S0)
+        # intra-chunk pairwise: decay[t, tau] = exp(excl_t - cum_tau), tau < t
+        diff = excl[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,Ct,Ctau,D)
+        t_idx = jnp.arange(C)
+        mask = (t_idx[:, None] > t_idx[None, :])[None, None, :, :, None]
+        decay = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+        A = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rc32, kc32, decay)
+        a_diag = jnp.einsum("bhtk,hk,bhtk->bht", rc32,
+                            u.astype(ACC_DTYPE), kc32)
+        out_intra = (jnp.einsum("bhts,bhsv->bhtv", A, vc32)
+                     + a_diag[..., None] * vc32)
+        # state update to chunk end
+        k_dec = kc32 * jnp.exp(cum[:, :, -1:, :] - cum)
+        S1 = (S0 * jnp.exp(cum[:, :, -1, :])[..., None]
+              + jnp.einsum("bhck,bhcv->bhkv", k_dec, vc32))
+        return S1, (out_inter + out_intra).astype(r.dtype)
+
+    xs = tuple(a.reshape(B, H, n_chunks, C, D).transpose(2, 0, 1, 3, 4)
+               for a in (r, k, v, logw.astype(ACC_DTYPE)))
+    state, outs = jax.lax.scan(chunk_body, state.astype(ACC_DTYPE), xs)
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, D)
+    return out, state
+
+
+def wkv6_step(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+              u: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. r,k,v,logw: (B, H, D); state: (B, H, D, D)."""
+    r32, k32, v32 = (a.astype(ACC_DTYPE) for a in (r, k, v))
+    out = (jnp.einsum("bhk,bhkv->bhv", r32, state)
+           + jnp.einsum("bhk,hk,bhk->bh", r32, u.astype(ACC_DTYPE), k32)[..., None] * v32)
+    state = (state * jnp.exp(logw.astype(ACC_DTYPE))[..., None]
+             + k32[..., None] * v32[..., None, :])
+    return out.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Layer definitions
+# ---------------------------------------------------------------------------
+
+
+def rwkv_layer_defs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln1": ParamDef((d,), P(None), init="zeros"),
+        "tm": {
+            # data-dependent lerp (5 targets: r, k, v, w, g)
+            "mu_x": ParamDef((d,), P(None), init="zeros"),
+            "mu": ParamDef((5, d), P(None, None), init="zeros"),
+            "ddl_w1": ParamDef((d, 5 * DDLERP_R), P(None, None), scale=1e-2),
+            "ddl_w2": ParamDef((5, DDLERP_R, d), P(None, None, None), scale=1e-2),
+            "wr": ParamDef((d, d), P(None, AXIS_MODEL)),
+            "wk": ParamDef((d, d), P(None, AXIS_MODEL)),
+            "wv": ParamDef((d, d), P(None, AXIS_MODEL)),
+            "wg": ParamDef((d, d), P(None, AXIS_MODEL)),
+            "wo": ParamDef((d, d), P(AXIS_MODEL, None)),
+            "w0": ParamDef((d,), P(AXIS_MODEL), init="decay_init", dtype=jnp.float32),
+            "w_lora1": ParamDef((d, LORA_R), P(None, None), scale=1e-2),
+            "w_lora2": ParamDef((LORA_R, d), P(None, AXIS_MODEL), scale=1e-2),
+            "u": ParamDef((d,), P(AXIS_MODEL), init="zeros", dtype=jnp.float32),
+            "gn_scale": ParamDef((d,), P(AXIS_MODEL), init="ones"),
+            "gn_bias": ParamDef((d,), P(AXIS_MODEL), init="zeros"),
+        },
+        "ln2": ParamDef((d,), P(None), init="zeros"),
+        "cm": {
+            "mu_k": ParamDef((d,), P(None), init="zeros"),
+            "mu_r": ParamDef((d,), P(None), init="zeros"),
+            "wk": ParamDef((d, f), P(None, AXIS_MODEL)),
+            "wv": ParamDef((f, d), P(AXIS_MODEL, None)),
+            "wr": ParamDef((d, d), P(None, None)),
+        },
+    }
+
+
+def _ddlerp(tm: dict, x: jax.Array, xx: jax.Array) -> Tuple[jax.Array, ...]:
+    """RWKV6 data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    base = x + (xx - x) * tm["mu_x"]
+    lora = jnp.tanh(matmul(base, tm["ddl_w1"]))
+    B_, S_ = x.shape[0], x.shape[1] if x.ndim == 3 else None
+    r = lora.shape[-1] // 5
+    lora = lora.reshape(lora.shape[:-1] + (5, r))
+    delta = jnp.einsum("...nr,nrd->...nd", lora.astype(ACC_DTYPE),
+                       tm["ddl_w2"].astype(ACC_DTYPE)).astype(x.dtype)
+    mixed = []
+    for i in range(5):
+        mu_i = tm["mu"][i] + delta[..., i, :]
+        mixed.append(x + (xx - x) * mu_i)
+    return tuple(mixed)
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                eps: float = 64e-5) -> jax.Array:
+    """Per-head groupnorm over head_dim. x: (..., H, D) flattened to (..., H*D)."""
+    xf = x.astype(ACC_DTYPE)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return normed
+
+
+def time_mix_prefill(tm: dict, x: jax.Array, cfg: ArchConfig,
+                     tm_state: jax.Array, wkv_state: jax.Array):
+    """x: (B, S, d). Returns (out, (last_x, wkv_state'))."""
+    B, S, d = x.shape
+    H, D = cfg.num_heads, cfg.head_dim
+    xx = jnp.concatenate([tm_state[:, None, :], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(tm, x, xx)
+    r = matmul(xr, tm["wr"]).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    k = matmul(xk, tm["wk"]).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    v = matmul(xv, tm["wv"]).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    g = activate(matmul(xg, tm["wg"]), "silu")
+    logw = -jnp.exp(tm["w0"].astype(ACC_DTYPE)
+                    + matmul(jnp.tanh(matmul(xw, tm["w_lora1"])),
+                             tm["w_lora2"]).astype(ACC_DTYPE))
+    logw = logw.reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    u = tm["u"].reshape(H, D)
+    out, wkv_state = wkv6_chunked(r, k, v, logw, u, wkv_state)
+    out = out.transpose(0, 2, 1, 3)  # (B, S, H, D)
+    normed = _group_norm(out, None, None).reshape(B, S, H * D)
+    normed = (normed * tm["gn_scale"].astype(ACC_DTYPE)
+              + tm["gn_bias"].astype(ACC_DTYPE)).astype(x.dtype)
+    return matmul(normed * g, tm["wo"]), (x[:, -1], wkv_state)
+
+
+def time_mix_decode(tm: dict, x: jax.Array, cfg: ArchConfig,
+                    tm_state: jax.Array, wkv_state: jax.Array):
+    """x: (B, d) one token."""
+    B, d = x.shape
+    H, D = cfg.num_heads, cfg.head_dim
+    xr, xk, xv, xw, xg = _ddlerp(tm, x, tm_state)
+    r = matmul(xr, tm["wr"]).reshape(B, H, D)
+    k = matmul(xk, tm["wk"]).reshape(B, H, D)
+    v = matmul(xv, tm["wv"]).reshape(B, H, D)
+    g = activate(matmul(xg, tm["wg"]), "silu")
+    logw = -jnp.exp(tm["w0"].astype(ACC_DTYPE)
+                    + matmul(jnp.tanh(matmul(xw, tm["w_lora1"])),
+                             tm["w_lora2"]).astype(ACC_DTYPE))
+    logw = logw.reshape(B, H, D)
+    u = tm["u"].reshape(H, D)
+    out, wkv_state = wkv6_step(r, k, v, logw, u, wkv_state)
+    normed = _group_norm(out, None, None).reshape(B, H * D)
+    normed = (normed * tm["gn_scale"].astype(ACC_DTYPE)
+              + tm["gn_bias"].astype(ACC_DTYPE)).astype(x.dtype)
+    return matmul(normed * g, tm["wo"]), (x, wkv_state)
+
+
+def channel_mix(cm: dict, x: jax.Array, cm_state: jax.Array, prefill: bool):
+    if prefill:
+        xx = jnp.concatenate([cm_state[:, None, :], x[:, :-1]], axis=1)
+        new_state = x[:, -1]
+    else:
+        xx = cm_state
+        new_state = x
+    xk = x + (xx - x) * cm["mu_k"]
+    xr = x + (xx - x) * cm["mu_r"]
+    kk = activate(matmul(xk, cm["wk"]), "relu_sq")
+    kv = matmul(kk, cm["wv"])
+    return jax.nn.sigmoid(matmul(xr, cm["wr"]).astype(ACC_DTYPE)).astype(x.dtype) * kv, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def rwkv_state_shapes(cfg: ArchConfig, batch: int):
+    Lr = cfg.num_layers
+    d, H, D = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wkv": jax.ShapeDtypeStruct((Lr, batch, H, D, D), jnp.float32),
+        "tm_x": jax.ShapeDtypeStruct((Lr, batch, d), L.DEFAULT_DTYPE),
+        "cm_x": jax.ShapeDtypeStruct((Lr, batch, d), L.DEFAULT_DTYPE),
+    }
+
+
+def rwkv_state_specs():
+    return {
+        "wkv": P(None, BATCH_AXES, AXIS_MODEL, None, None),
+        "tm_x": P(None, BATCH_AXES, None),
+        "cm_x": P(None, BATCH_AXES, None),
+    }
+
+
+def make_rwkv(cfg: ArchConfig, *, num_microbatches: int = 1):
+    from repro.models.transformer import ModelBundle  # circular-safe
+
+    d, v = cfg.d_model, cfg.padded_vocab
+    defs = {
+        "embed": ParamDef((v, d), P(AXIS_MODEL, None), scale=1.0),
+        "layers": stacked(rwkv_layer_defs(cfg), cfg.num_layers),
+        "final_norm": ParamDef((d,), P(None), init="zeros"),
+        "lm_head": ParamDef((v, d), P(AXIS_MODEL, None)),
+    }
+
+    def layer_prefill(lp, x, states):
+        tm_x, cm_x, wkv = states
+        h, (tm_x, wkv) = time_mix_prefill(
+            lp["tm"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, tm_x, wkv)
+        x = x + h
+        h, cm_x = channel_mix(lp["cm"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                              cm_x, prefill=True)
+        return x + h, (tm_x, cm_x, wkv)
+
+    def run_stack_prefill(params, x, states):
+        def body(x, xs):
+            lp, tm_x, cm_x, wkv = xs
+            x, (tm_x, cm_x, wkv) = layer_prefill(lp, x, (tm_x, cm_x, wkv))
+            return x, (tm_x, cm_x, wkv)
+
+        x, (tm_x, cm_x, wkv) = jax.lax.scan(
+            body, x, (params["layers"], states["tm_x"], states["cm_x"], states["wkv"]))
+        return x, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+    def fresh_states(params, B):
+        shapes = rwkv_state_shapes(cfg, B)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    remat_prefill = jax.checkpoint(
+        layer_prefill, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def forward_loss(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = embed_lookup(params["embed"], tokens)
+        states = fresh_states(params, B)
+
+        def body(x, xs):
+            lp, tm_x, cm_x, wkv = xs
+            x, _ = remat_prefill(lp, x, (tm_x, cm_x, wkv))
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, (params["layers"], states["tm_x"],
+                                      states["cm_x"], states["wkv"]))
+        logits = lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"], valid_vocab=cfg.vocab_size)
+        return cross_entropy_from_logits(logits, batch["labels"])
+
+    from repro.models.transformer import make_microbatched_loss
+    loss_fn = make_microbatched_loss(forward_loss, num_microbatches)
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = embed_lookup(params["embed"], tokens)
+        x, states = run_stack_prefill(params, x, fresh_states(params, B))
+        last = x[:, -1]
+        logits = lm_head_logits(rms_norm(last, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"],
+                                valid_vocab=cfg.vocab_size)[..., :cfg.vocab_size]
+        return logits, states
+
+    def decode_step(params, cache, tokens, pos):
+        del pos  # recurrence carries position implicitly
+        x = embed_lookup(params["embed"], tokens)
+
+        def body(x, xs):
+            lp, tm_x, cm_x, wkv = xs
+            h, (tm_x, wkv) = time_mix_decode(
+                lp["tm"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, tm_x, wkv)
+            x = x + h
+            h, cm_x = channel_mix(lp["cm"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                                  cm_x, prefill=False)
+            return x + h, (tm_x, cm_x, wkv)
+
+        x, (tm_x, cm_x, wkv) = jax.lax.scan(
+            body, x, (params["layers"], cache["tm_x"], cache["cm_x"], cache["wkv"]))
+        logits = lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"],
+                                valid_vocab=cfg.vocab_size)[..., :cfg.vocab_size]
+        return logits, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+    def cache_shape_fn(batch, max_len):
+        del max_len  # O(1) state
+        return rwkv_state_shapes(cfg, batch)
+
+    return ModelBundle(cfg, defs, loss_fn, prefill, decode_step,
+                       cache_shape_fn, rwkv_state_specs, {})

@@ -1,0 +1,314 @@
+"""Decoder-only LM stack (dense + MoE) and encoder-only models.
+
+The stack scans over layer-stacked params (HLO O(1) in depth).  Exposes a
+:class:`ModelBundle` with a uniform API consumed by the training loop, the
+serving engine and the dry-run:
+
+    loss_fn(params, batch)                       train_4k
+    prefill(params, tokens[, lengths])           prefill_32k
+    decode_step(params, cache, tokens, pos)      decode_32k / long_500k
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import (
+    AXIS_MODEL, BATCH_AXES, ParamDef, attention_block_decode,
+    attention_block_prefill, attention_defs, causal_flash_attention,
+    bidirectional_attention, cross_entropy_from_logits, embed_lookup,
+    init_params, lm_head_logits, matmul, mlp_block, mlp_defs, param_shapes,
+    param_specs, rms_norm, stacked,
+)
+from repro.models.moe import moe_block, moe_defs
+
+# Cache partition: (B, KV, S, D) -> batch over (pod,data), seq over model
+# (flash-decoding style merge; uniform across archs incl. kv=2).
+CACHE_SPEC = P(BATCH_AXES, None, AXIS_MODEL, None)
+ACT_SPEC = P(BATCH_AXES, None, None)  # (B, S, d)
+TOK_SPEC = P(BATCH_AXES, None)  # (B, S)
+
+
+def make_microbatched_loss(forward_loss: Callable, num_microbatches: int
+                           ) -> Callable:
+    """Gradient-accumulation wrapper shared by all model families.
+
+    Two essentials for the memory plan to hold:
+      * the per-microbatch forward is itself rematerialized — otherwise
+        grad-of-scan saves every microbatch's layer-scan residuals
+        (O(µ · L · B · S · d), a ~100+ GiB/device blowup);
+      * microbatch slices are sharding-constrained back onto the batch
+        axes — a bare reshape assigns each microbatch to a few data
+        shards (contiguous-block split) and SPMD then replicates.
+    """
+    if num_microbatches <= 1:
+        return forward_loss
+
+    remat_fwd = jax.checkpoint(
+        forward_loss, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def loss_fn(params, batch: Dict[str, jax.Array]):
+        names = sorted(batch)
+
+        def split(a):
+            mb = a.shape[0] // num_microbatches
+            a = a.reshape((num_microbatches, mb) + a.shape[1:])
+            return L.shard_hint(a, None, BATCH_AXES,
+                                *([None] * (a.ndim - 2)))
+
+        xs = tuple(split(batch[n]) for n in names)
+
+        def body(acc, mbs):
+            mb_batch = dict(zip(names, mbs))
+            return acc + remat_fwd(params, mb_batch), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+        return total / num_microbatches
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Model bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    defs: Any  # pytree of ParamDef
+    loss_fn: Callable  # (params, batch) -> scalar
+    prefill: Callable  # (params, batch) -> (last_logits, cache)
+    decode_step: Optional[Callable]  # (params, cache, tokens, pos) -> (logits, cache)
+    cache_shape_fn: Optional[Callable]  # (batch, max_len) -> pytree of ShapeDtypeStruct
+    cache_spec_fn: Optional[Callable]  # () -> pytree of P
+    extra_inputs: Dict[str, Callable] = None  # name -> (batch)->ShapeDtypeStruct (stub frontends)
+
+    def init(self, rng: jax.Array):
+        return init_params(self.defs, rng)
+
+    def specs(self):
+        return param_specs(self.defs)
+
+    def shapes(self):
+        return param_shapes(self.defs)
+
+    def init_cache(self, batch: int, max_len: int):
+        shapes = self.cache_shape_fn(batch, max_len)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE decoder layer
+# ---------------------------------------------------------------------------
+
+
+def decoder_layer_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    defs = {
+        "ln1": ParamDef((d,), P(None), init="zeros"),
+        "attn": attention_defs(cfg),
+        "ln2": ParamDef((d,), P(None), init="zeros"),
+    }
+    defs["mlp"] = moe_defs(cfg) if cfg.is_moe else mlp_defs(cfg)
+    return defs
+
+
+def _ffn(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.is_moe:
+        return moe_block(p["mlp"], x, cfg)
+    return mlp_block(p["mlp"], x, cfg.activation)
+
+
+def decoder_layer_train(p: dict, x: jax.Array, cfg: ArchConfig,
+                        window: int = 0) -> jax.Array:
+    h, _ = attention_block_prefill(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                   cfg, window=window)
+    x = x + h
+    x = x + _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x
+
+
+def decoder_layer_prefill(p: dict, x: jax.Array, cfg: ArchConfig,
+                          window: int = 0):
+    h, kv = attention_block_prefill(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                    cfg, window=window)
+    x = x + h
+    x = x + _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x, kv
+
+
+def decoder_layer_decode(p: dict, x: jax.Array, kv, pos, cfg: ArchConfig,
+                         window: int = 0):
+    h, kv = attention_block_decode(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                   kv, pos, cfg, window=window)
+    x = x + h
+    x = x + _ffn(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# Dense decoder LM
+# ---------------------------------------------------------------------------
+
+
+def dense_lm_defs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    defs = {
+        "embed": ParamDef((v, d), P(AXIS_MODEL, None), scale=1.0),
+        "layers": stacked(decoder_layer_defs(cfg), cfg.num_layers),
+        "final_norm": ParamDef((d,), P(None), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((v, d), P(AXIS_MODEL, None))
+    return defs
+
+
+def _embed_in(params, tokens, cfg):
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.name.startswith("gemma"):
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _logits_out(params, x, cfg):
+    table = params.get("lm_head", params["embed"])
+    return lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                          table, valid_vocab=cfg.vocab_size)
+
+
+def make_dense_lm(cfg: ArchConfig, *, num_microbatches: int = 1) -> ModelBundle:
+    defs = dense_lm_defs(cfg)
+    remat_layer = jax.checkpoint(
+        partial(decoder_layer_train, cfg=cfg),
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def forward_loss(params, batch):
+        x = _embed_in(params, batch["tokens"], cfg)
+
+        def body(x, lp):
+            return remat_layer(lp, x), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        logits = _logits_out(params, x, cfg)
+        return cross_entropy_from_logits(logits, batch["labels"])
+
+    loss_fn = make_microbatched_loss(forward_loss, num_microbatches)
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        x = _embed_in(params, tokens, cfg)
+
+        def body(x, lp):
+            x, kv = decoder_layer_prefill(lp, x, cfg)
+            return x, kv
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+        lengths = batch.get("lengths")
+        if lengths is None:
+            last = x[:, -1]
+        else:
+            last = jnp.take_along_axis(
+                x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = _logits_out(params, last, cfg)[..., :cfg.vocab_size]
+        return logits, cache
+
+    def decode_step(params, cache, tokens, pos):
+        x = _embed_in(params, tokens, cfg)
+
+        def body(x, xs):
+            lp, kv = xs
+            x, kv = decoder_layer_decode(lp, x, kv, pos, cfg)
+            return x, kv
+
+        x, cache = jax.lax.scan(body, x, (params["layers"], cache))
+        logits = _logits_out(params, x, cfg)[..., :cfg.vocab_size]
+        return logits, cache
+
+    def cache_shape_fn(batch, max_len):
+        s = jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, cfg.num_kv_heads, max_len, cfg.head_dim),
+            L.DEFAULT_DTYPE)
+        return (s, s)
+
+    def cache_spec_fn(layout: str = "seq"):
+        """KV-cache partitioning for decode.
+
+        "seq"   — sequence dim over `model` (flash-decoding merges; works
+                  for any head count incl. kv=2);
+        "heads" — kv heads over `model` (fully local decode attention, no
+                  softmax all-reduces, in-place cache update on an
+                  unsharded seq dim) — the §Perf choice when
+                  num_kv_heads divides the model axis.
+        """
+        if layout == "heads":
+            spec = P(None, BATCH_AXES, AXIS_MODEL, None, None)
+        else:
+            spec = P(None, BATCH_AXES, None, AXIS_MODEL, None)
+        return (spec, spec)
+
+    return ModelBundle(cfg, defs, loss_fn, prefill, decode_step,
+                       cache_shape_fn, cache_spec_fn, {})
+
+
+# ---------------------------------------------------------------------------
+# Encoder-only model (e5 embedder, reranker; bidirectional)
+# ---------------------------------------------------------------------------
+
+
+def encoder_layer_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), P(None), init="zeros"),
+        "attn": attention_defs(cfg),
+        "ln2": ParamDef((d,), P(None), init="zeros"),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def encoder_layer(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = L.attention_qkv(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                              positions, cfg)
+    h = bidirectional_attention(q, k, v)
+    x = x + matmul(h.reshape(B, S, cfg.q_dim), p["attn"]["wo"])
+    x = x + mlp_block(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.activation)
+    return x
+
+
+def make_encoder(cfg: ArchConfig) -> ModelBundle:
+    d, v = cfg.d_model, cfg.padded_vocab
+    defs = {
+        "embed": ParamDef((v, d), P(AXIS_MODEL, None), scale=1.0),
+        "layers": stacked(encoder_layer_defs(cfg), cfg.num_layers),
+        "final_norm": ParamDef((d,), P(None), init="zeros"),
+    }
+
+    def encode(params, tokens):
+        x = embed_lookup(params["embed"], tokens)
+
+        def body(x, lp):
+            return encoder_layer(lp, x, cfg), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return jnp.mean(x, axis=1)  # mean-pooled embedding
+
+    def loss_fn(params, batch):
+        # contrastive-style surrogate: match pooled embedding to target
+        emb = encode(params, batch["tokens"])
+        return jnp.mean(jnp.square(emb.astype(jnp.float32)))
+
+    def prefill(params, batch):
+        return encode(params, batch["tokens"]), None
+
+    return ModelBundle(cfg, defs, loss_fn, prefill, None, None, None, {})

@@ -1,0 +1,184 @@
+"""llama-3.2-vision-11b backbone: decoder with interleaved cross-attention.
+
+The image frontend is a STUB per the assignment: ``image_embeds`` —
+(B, num_image_tokens, vision_d_model) precomputed patch embeddings — are a
+model *input* (see ``input_specs``).  Structure: groups of
+``cross_attn_every`` self-attention layers followed by one gated
+cross-attention layer; the whole model is a nested scan
+(outer: groups, inner: self layers) so HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import (
+    ACC_DTYPE, AXIS_MODEL, BATCH_AXES, ParamDef, bidirectional_attention,
+    cross_entropy_from_logits, embed_lookup, lm_head_logits, matmul,
+    mlp_block, mlp_defs, rms_norm, stacked,
+)
+from repro.models.transformer import (
+    decoder_layer_decode, decoder_layer_defs, decoder_layer_prefill,
+    decoder_layer_train,
+)
+
+
+def cross_layer_defs(cfg: ArchConfig) -> dict:
+    d, vd = cfg.d_model, cfg.vision_d_model
+    return {
+        "ln": ParamDef((d,), P(None), init="zeros"),
+        "wq": ParamDef((d, cfg.q_dim), P(None, AXIS_MODEL)),
+        "wk": ParamDef((vd, cfg.kv_dim), P(None, AXIS_MODEL)),
+        "wv": ParamDef((vd, cfg.kv_dim), P(None, AXIS_MODEL)),
+        "wo": ParamDef((cfg.q_dim, d), P(AXIS_MODEL, None)),
+        "gate": ParamDef((), P(), init="zeros", dtype=jnp.float32),
+        "ln_mlp": ParamDef((d,), P(None), init="zeros"),
+        "mlp": mlp_defs(cfg),
+        "gate_mlp": ParamDef((), P(), init="zeros", dtype=jnp.float32),
+    }
+
+
+def cross_kv(cp: dict, image_embeds: jax.Array, cfg: ArchConfig):
+    """(B, I, vd) -> k, v (B, I, KV, D)."""
+    B, I, _ = image_embeds.shape
+    k = matmul(image_embeds, cp["wk"]).reshape(B, I, cfg.num_kv_heads, cfg.head_dim)
+    v = matmul(image_embeds, cp["wv"]).reshape(B, I, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def cross_layer_apply(cp: dict, x: jax.Array, k: jax.Array, v: jax.Array,
+                      cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, d); k/v: (B, I, KV, D) precomputed from image embeds."""
+    B, S, _ = x.shape
+    h = rms_norm(x, cp["ln"], cfg.norm_eps)
+    q = matmul(h, cp["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    attn = bidirectional_attention(q, k, v).reshape(B, S, cfg.q_dim)
+    x = x + jnp.tanh(cp["gate"]).astype(x.dtype) * matmul(attn, cp["wo"])
+    h = mlp_block(cp["mlp"], rms_norm(x, cp["ln_mlp"], cfg.norm_eps),
+                  cfg.activation)
+    return x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * h
+
+
+def make_vlm(cfg: ArchConfig, *, num_microbatches: int = 1):
+    from repro.models.transformer import ModelBundle
+
+    d, v = cfg.d_model, cfg.padded_vocab
+    G = cfg.num_layers // cfg.cross_attn_every  # groups
+    per = cfg.cross_attn_every
+
+    self_defs = stacked(stacked(decoder_layer_defs(cfg), per), G)
+    defs = {
+        "embed": ParamDef((v, d), P(AXIS_MODEL, None), scale=1.0),
+        "self_layers": self_defs,  # (G, per, ...)
+        "cross_layers": stacked(cross_layer_defs(cfg), G),
+        "final_norm": ParamDef((d,), P(None), init="zeros"),
+        "lm_head": ParamDef((v, d), P(AXIS_MODEL, None)),
+    }
+
+    remat_self = jax.checkpoint(
+        lambda lp, x: decoder_layer_train(lp, x, cfg),
+        policy=jax.checkpoint_policies.nothing_saveable)
+
+    def forward_loss(params, batch):
+        image_embeds = batch["image_embeds"]
+        x = embed_lookup(params["embed"], batch["tokens"])
+
+        def outer(x, xs):
+            sp, cp = xs
+
+            def inner(x, lp):
+                return remat_self(lp, x), None
+
+            x, _ = jax.lax.scan(inner, x, sp)
+            k, v_ = cross_kv(cp, image_embeds, cfg)
+            return cross_layer_apply(cp, x, k, v_, cfg), None
+
+        x, _ = jax.lax.scan(outer, x, (params["self_layers"],
+                                       params["cross_layers"]))
+        logits = lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"], valid_vocab=cfg.vocab_size)
+        return cross_entropy_from_logits(logits, batch["labels"])
+
+    from repro.models.transformer import make_microbatched_loss
+    loss_fn = make_microbatched_loss(forward_loss, num_microbatches)
+
+    def prefill(params, batch):
+        tokens, img = batch["tokens"], batch["image_embeds"]
+        x = embed_lookup(params["embed"], tokens)
+
+        def outer(x, xs):
+            sp, cp = xs
+
+            def inner(x, lp):
+                return decoder_layer_prefill(lp, x, cfg)
+
+            x, kv = jax.lax.scan(inner, x, sp)
+            ck, cv = cross_kv(cp, img, cfg)
+            x = cross_layer_apply(cp, x, ck, cv, cfg)
+            return x, (kv, (ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3)))
+
+        x, (self_kv, cross_cache) = jax.lax.scan(
+            outer, x, (params["self_layers"], params["cross_layers"]))
+        logits = lm_head_logits(
+            rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps),
+            params["lm_head"], valid_vocab=cfg.vocab_size)[..., :cfg.vocab_size]
+        return logits, {"self": self_kv, "cross": cross_cache}
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed_lookup(params["embed"], tokens)
+
+        def outer(x, xs):
+            sp, cp, skv, ckv = xs
+
+            def inner(x, xs2):
+                lp, kv = xs2
+                x, kv = decoder_layer_decode(lp, x, kv, pos, cfg)
+                return x, kv
+
+            x, skv = jax.lax.scan(inner, x, (sp, skv))
+            ck, cv = ckv  # (B, KV, I, D) cached
+            B = x.shape[0]
+            h = rms_norm(x, cp["ln"], cfg.norm_eps)
+            q = matmul(h, cp["wq"]).reshape(B, cfg.num_heads, cfg.head_dim)
+            attn = L.decode_attention(q, ck, cv, ck.shape[2])
+            x = x + jnp.tanh(cp["gate"]).astype(x.dtype) * matmul(
+                attn.reshape(B, cfg.q_dim), cp["wo"])
+            hm = mlp_block(cp["mlp"], rms_norm(x, cp["ln_mlp"], cfg.norm_eps),
+                           cfg.activation)
+            x = x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * hm
+            return x, (skv, ckv)
+
+        x, (self_kv, cross_cache) = jax.lax.scan(
+            outer, x, (params["self_layers"], params["cross_layers"],
+                       cache["self"], cache["cross"]))
+        logits = lm_head_logits(rms_norm(x, params["final_norm"], cfg.norm_eps),
+                                params["lm_head"],
+                                valid_vocab=cfg.vocab_size)[..., :cfg.vocab_size]
+        return logits, {"self": self_kv, "cross": cross_cache}
+
+    def cache_shape_fn(batch, max_len):
+        s = jax.ShapeDtypeStruct(
+            (G, per, batch, cfg.num_kv_heads, max_len, cfg.head_dim),
+            L.DEFAULT_DTYPE)
+        c = jax.ShapeDtypeStruct(
+            (G, batch, cfg.num_kv_heads, cfg.num_image_tokens, cfg.head_dim),
+            L.DEFAULT_DTYPE)
+        return {"self": (s, s), "cross": (c, c)}
+
+    def cache_spec_fn():
+        s = P(None, None, BATCH_AXES, None, AXIS_MODEL, None)
+        c = P(None, BATCH_AXES, None, None, None)  # image KV replicated
+        return {"self": (s, s), "cross": (c, c)}
+
+    def image_embeds_spec(batch):
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.vision_d_model), L.DEFAULT_DTYPE)
+
+    return ModelBundle(cfg, defs, loss_fn, prefill, decode_step,
+                       cache_shape_fn, cache_spec_fn,
+                       {"image_embeds": image_embeds_spec})

@@ -1,0 +1,25 @@
+"""Model zoo dispatcher: ArchConfig -> ModelBundle."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import make_encdec
+from repro.models.hymba import make_hymba
+from repro.models.rwkv import make_rwkv
+from repro.models.transformer import ModelBundle, make_dense_lm, make_encoder
+from repro.models.vision import make_vlm
+
+
+def build_model(cfg: ArchConfig, *, num_microbatches: int = 1) -> ModelBundle:
+    if cfg.family in ("dense", "moe"):
+        return make_dense_lm(cfg, num_microbatches=num_microbatches)
+    if cfg.family == "vlm":
+        return make_vlm(cfg, num_microbatches=num_microbatches)
+    if cfg.family == "audio":
+        return make_encdec(cfg, num_microbatches=num_microbatches)
+    if cfg.family == "hybrid":
+        return make_hymba(cfg, num_microbatches=num_microbatches)
+    if cfg.family == "ssm":
+        return make_rwkv(cfg, num_microbatches=num_microbatches)
+    if cfg.family == "encoder":
+        return make_encoder(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,147 @@
+"""Analytical step-cost model for LLM serving on TPU v5e.
+
+One implementation shared by (a) the discrete-event cluster simulator that
+the Scepsy profiler replays traces through, and (b) the §Roofline report —
+so scheduling decisions and the roofline are mutually consistent
+(DESIGN.md decision 6).
+
+Every step time is the classic three-term roofline:
+
+    t = max(FLOPs / (chips·peak·eff), bytes / (chips·bw·eff)) + t_collective
+
+with TP collectives modeled explicitly (2 all-reduces per layer, ring
+over the `model` axis inside one ICI domain).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro import hw
+from repro.configs.base import ArchConfig
+
+BYTES_PER_PARAM = 2  # bf16 weights
+KV_BYTES = 2  # bf16 cache
+
+
+@dataclass(frozen=True)
+class StepCost:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def total(self) -> float:
+        return max(self.compute_s, self.memory_s) + self.collective_s
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+
+def flops_per_token(cfg: ArchConfig, context: int) -> float:
+    """Forward FLOPs for one token at the given attention context length."""
+    base = 2.0 * cfg.active_param_count()
+    if cfg.attn_free:
+        # WKV state update+readout: ~4*D ops per channel per token
+        return base + 4.0 * cfg.num_layers * cfg.d_model * cfg.head_dim
+    attn = 0.0
+    for layer in range(cfg.num_layers):
+        if cfg.sliding_window and cfg.full_attn_layers:
+            span = (context if layer in cfg.full_attn_layers
+                    else min(context, cfg.sliding_window))
+        else:
+            span = context
+        attn += 4.0 * cfg.num_heads * cfg.head_dim * span
+    if cfg.ssm_state and not cfg.attn_free:  # hymba mamba heads
+        attn += 6.0 * cfg.num_layers * cfg.q_dim * cfg.ssm_state
+    return base + attn
+
+
+def kv_bytes_per_seq(cfg: ArchConfig, context: int) -> float:
+    """KV-cache bytes held (and streamed per decode step) for one sequence."""
+    if cfg.attn_free:
+        return (cfg.num_layers * cfg.num_heads * cfg.head_dim ** 2 * 4
+                + 2 * cfg.num_layers * cfg.d_model * KV_BYTES)
+    per_layer = 2 * cfg.kv_dim * KV_BYTES
+    total = 0.0
+    for layer in range(cfg.num_layers):
+        if cfg.sliding_window and cfg.full_attn_layers:
+            span = (context if layer in cfg.full_attn_layers
+                    else min(context, cfg.sliding_window))
+        else:
+            span = context
+        total += per_layer * span
+    if cfg.ssm_state and not cfg.attn_free:
+        total += cfg.num_layers * cfg.q_dim * cfg.ssm_state * 4
+    return total
+
+
+def model_bytes(cfg: ArchConfig) -> float:
+    return cfg.param_count() * BYTES_PER_PARAM
+
+
+def tp_collective_time(cfg: ArchConfig, tokens: int, tp: int) -> float:
+    """2 ring all-reduces of (tokens, d_model) bf16 per layer over TP."""
+    if tp <= 1:
+        return 0.0
+    payload = tokens * cfg.d_model * BYTES_PER_PARAM
+    ring = 2.0 * (tp - 1) / tp * payload / hw.ICI_LINK_BW
+    n_coll = 2 * (cfg.num_layers + cfg.encoder_layers)
+    return n_coll * (ring + hw.COLLECTIVE_LATENCY)
+
+
+def prefill_cost(cfg: ArchConfig, prompt_tokens: int, *, tp: int = 1,
+                 fraction: float = 1.0, cached_tokens: int = 0) -> StepCost:
+    """Cost of prefilling one sequence (processed as one chunked pass)."""
+    new = max(prompt_tokens - cached_tokens, 1)
+    # attention span grows with position; integrate: avg span ~ prompt/2
+    flops = 0.0
+    avg_ctx = cached_tokens + new / 2
+    flops = new * flops_per_token(cfg, int(avg_ctx))
+    compute = flops / (tp * fraction * hw.PEAK_FLOPS_BF16 * hw.MXU_EFFICIENCY)
+    # prefill is compute-bound; weight reads amortize over tokens
+    bytes_ = model_bytes(cfg) / max(new / 256.0, 1.0)
+    memory = bytes_ / (tp * fraction * hw.HBM_BW * hw.HBM_EFFICIENCY)
+    coll = tp_collective_time(cfg, new, tp)
+    return StepCost(compute, memory, coll)
+
+
+def decode_step_cost(cfg: ArchConfig, batch: int, avg_context: int, *,
+                     tp: int = 1, fraction: float = 1.0) -> StepCost:
+    """Cost of one engine iteration decoding ``batch`` sequences."""
+    batch = max(batch, 1)
+    flops = batch * flops_per_token(cfg, avg_context)
+    compute = flops / (tp * fraction * hw.PEAK_FLOPS_BF16 * hw.MXU_EFFICIENCY)
+    bytes_ = (model_bytes(cfg)
+              + batch * kv_bytes_per_seq(cfg, avg_context))
+    memory = bytes_ / (tp * fraction * hw.HBM_BW * hw.HBM_EFFICIENCY)
+    coll = tp_collective_time(cfg, batch, tp)
+    return StepCost(compute, memory, coll)
+
+
+def max_batch_size(cfg: ArchConfig, avg_context: int, *, tp: int = 1,
+                   fraction: float = 1.0, headroom: float = 0.9) -> int:
+    """KV-capacity-limited max concurrent sequences per replica."""
+    budget = tp * fraction * hw.HBM_BYTES * headroom - model_bytes(cfg)
+    if budget <= 0:
+        return 0
+    per_seq = kv_bytes_per_seq(cfg, avg_context)
+    return max(int(budget / max(per_seq, 1.0)), 0)
+
+
+def min_fraction_units(cfg: ArchConfig, spec, avg_context: int = 2048,
+                       min_seqs: int = 1) -> int:
+    """Minimum GPU-fraction units to load params + a minimal KV cache
+    (the scheduler's per-LLM lower bound, paper §5)."""
+    need = (model_bytes(cfg)
+            + min_seqs * kv_bytes_per_seq(cfg, avg_context)) / 0.9
+    units = math.ceil(need / hw.HBM_BYTES * spec.fractions_per_chip)
+    return max(units, 1)
+
+
+def swap_cost(cfg: ArchConfig) -> float:
+    """Model-swap (weight reload) time — Aegaeon baseline overhead."""
+    return model_bytes(cfg) / hw.HOST_TO_HBM_BW

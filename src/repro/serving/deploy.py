@@ -1,0 +1,24 @@
+"""Bridge: Scepsy scheduler output -> simulated serving deployment."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.pipeline import Allocation
+from repro.serving.simulator import EngineSim, EventLoop, Router
+from repro.workflows.runtime import Workflow
+
+
+def routers_from_allocations(wf: Workflow, allocations: Dict[str, Allocation],
+                             loop: EventLoop, *, prefix_caching: bool = True,
+                             avg_context: int = 1024) -> Dict[str, Router]:
+    routers: Dict[str, Router] = {}
+    for llm, alloc in allocations.items():
+        cfg = wf.llms[llm]
+        engines = [
+            EngineSim(cfg, loop, tp=alloc.tp, fraction=alloc.fraction,
+                      name=f"{llm}/{r}", prefix_caching=prefix_caching,
+                      avg_context=avg_context)
+            for r in range(alloc.replicas)
+        ]
+        routers[llm] = Router(engines)
+    return routers

@@ -1,0 +1,124 @@
+"""KV-cache data structures for the JAX serving engine.
+
+* :class:`PagedKVCache` — vLLM-style paged cache: a global page pool per
+  layer plus per-sequence block tables; pages are allocated/freed by a
+  host-side free list.  ``gather_seq`` materializes a sequence's
+  contiguous view (the pure-jnp oracle the paged decode path is tested
+  against).
+* :class:`SlotKVCache` — contiguous per-slot cache used by the engine's
+  lockstep decode (simpler layout, same semantics).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PagedKVCache:
+    """Page pool: k/v are (L, num_pages, KV, page, D)."""
+
+    k: jax.Array
+    v: jax.Array
+    page_size: int
+    free_pages: List[int] = field(default_factory=list)
+    tables: Dict[int, List[int]] = field(default_factory=dict)  # seq -> pages
+    lengths: Dict[int, int] = field(default_factory=dict)
+
+    @classmethod
+    def create(cls, layers: int, num_pages: int, kv_heads: int,
+               page_size: int, head_dim: int, dtype=jnp.bfloat16):
+        shape = (layers, num_pages, kv_heads, page_size, head_dim)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   page_size=page_size,
+                   free_pages=list(range(num_pages)))
+
+    # -- host-side allocator --
+    def alloc_seq(self, seq_id: int) -> None:
+        self.tables[seq_id] = []
+        self.lengths[seq_id] = 0
+
+    def free_seq(self, seq_id: int) -> None:
+        self.free_pages.extend(self.tables.pop(seq_id, []))
+        self.lengths.pop(seq_id, None)
+
+    def _ensure_capacity(self, seq_id: int, new_len: int) -> None:
+        need = (new_len + self.page_size - 1) // self.page_size
+        table = self.tables[seq_id]
+        while len(table) < need:
+            if not self.free_pages:
+                raise MemoryError("KV page pool exhausted")
+            table.append(self.free_pages.pop())
+
+    # -- device-side writes --
+    def append(self, seq_id: int, k_new: jax.Array, v_new: jax.Array) -> None:
+        """k_new/v_new: (L, KV, T, D) — T new tokens for one sequence."""
+        T = k_new.shape[2]
+        start = self.lengths[seq_id]
+        self._ensure_capacity(seq_id, start + T)
+        table = self.tables[seq_id]
+        ps = self.page_size
+        for t in range(T):
+            pos = start + t
+            page = table[pos // ps]
+            off = pos % ps
+            self.k = self.k.at[:, page, :, off, :].set(k_new[:, :, t, :])
+            self.v = self.v.at[:, page, :, off, :].set(v_new[:, :, t, :])
+        self.lengths[seq_id] = start + T
+
+    def gather_seq(self, seq_id: int) -> Tuple[jax.Array, jax.Array, int]:
+        """Contiguous (L, KV, len_padded, D) view of a sequence."""
+        table = jnp.asarray(self.tables[seq_id], jnp.int32)
+        k = jnp.take(self.k, table, axis=1)  # (L, n_pages, KV, ps, D)
+        v = jnp.take(self.v, table, axis=1)
+        L, n, KV, ps, D = k.shape
+        k = k.transpose(0, 2, 1, 3, 4).reshape(L, KV, n * ps, D)
+        v = v.transpose(0, 2, 1, 3, 4).reshape(L, KV, n * ps, D)
+        return k, v, self.lengths[seq_id]
+
+
+@dataclass
+class SlotKVCache:
+    """Contiguous (L, slots, KV, Smax, D) cache with per-slot lengths."""
+
+    k: jax.Array
+    v: jax.Array
+    lengths: np.ndarray  # host-side (slots,) int32
+    free_slots: List[int] = field(default_factory=list)
+
+    @classmethod
+    def create(cls, layers: int, slots: int, kv_heads: int, max_len: int,
+               head_dim: int, dtype=jnp.bfloat16):
+        shape = (layers, slots, kv_heads, max_len, head_dim)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   lengths=np.zeros(slots, np.int32),
+                   free_slots=list(range(slots)))
+
+    def alloc(self) -> int:
+        return self.free_slots.pop()
+
+    def free(self, slot: int) -> None:
+        self.lengths[slot] = 0
+        self.free_slots.append(slot)
+
+    def write_prefill(self, slot: int, k_new: jax.Array, v_new: jax.Array,
+                      length: int) -> None:
+        """k_new/v_new: (L, KV, S, D) from a prefill."""
+        S = k_new.shape[2]
+        self.k = jax.lax.dynamic_update_slice(
+            self.k, k_new[:, None].astype(self.k.dtype), (0, slot, 0, 0, 0))
+        self.v = jax.lax.dynamic_update_slice(
+            self.v, v_new[:, None].astype(self.v.dtype), (0, slot, 0, 0, 0))
+        self.lengths[slot] = length
+
+    def copy_prefix(self, src_slot: int, dst_slot: int, length: int) -> None:
+        """Prefix-cache hit: duplicate the first ``length`` tokens."""
+        sl = self.k[:, src_slot, :, :length, :]
+        self.k = self.k.at[:, dst_slot, :, :length, :].set(sl)
+        self.v = self.v.at[:, dst_slot, :, :length, :].set(
+            self.v[:, src_slot, :, :length, :])
+        self.lengths[dst_slot] = length

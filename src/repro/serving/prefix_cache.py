@@ -1,0 +1,81 @@
+"""Host-side radix-style prefix cache (token-id trie).
+
+Maps token prefixes to (slot, length) of a sequence whose KV covers that
+prefix; the engine copies the prefix KV instead of recomputing prefill.
+Eviction is LRU over leaves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class _Node:
+    children: Dict[int, "_Node"] = field(default_factory=dict)
+    slot: Optional[int] = None  # slot whose cache covers the path to here
+    depth: int = 0
+    stamp: int = 0
+
+
+class PrefixCache:
+    def __init__(self, max_entries: int = 1024):
+        self.root = _Node()
+        self.max_entries = max_entries
+        self.entries = 0
+        self.clock = 0
+
+    def insert(self, tokens: Sequence[int], slot: int) -> None:
+        self.clock += 1
+        node = self.root
+        for t in tokens:
+            if t not in node.children:
+                node.children[t] = _Node(depth=node.depth + 1)
+                self.entries += 1
+            node = node.children[t]
+            node.stamp = self.clock
+        node.slot = slot
+        if self.entries > self.max_entries:
+            self._evict()
+
+    def longest_prefix(self, tokens: Sequence[int]) -> Tuple[int, Optional[int]]:
+        """Returns (matched_length, slot) of the deepest cached ancestor."""
+        self.clock += 1
+        node = self.root
+        best = (0, None)
+        for t in tokens:
+            nxt = node.children.get(t)
+            if nxt is None:
+                break
+            node = nxt
+            node.stamp = self.clock
+            if node.slot is not None:
+                best = (node.depth, node.slot)
+        return best
+
+    def invalidate_slot(self, slot: int) -> None:
+        def walk(n: _Node):
+            if n.slot == slot:
+                n.slot = None
+            for c in n.children.values():
+                walk(c)
+
+        walk(self.root)
+
+    def _evict(self) -> None:
+        # drop the oldest leaf chain
+        def oldest_leaf(n: _Node, path):
+            if not n.children:
+                return (n.stamp, path)
+            return min((oldest_leaf(c, path + [t])
+                        for t, c in n.children.items()),
+                       key=lambda x: x[0])
+
+        _, path = oldest_leaf(self.root, [])
+        if not path:
+            return
+        node = self.root
+        for t in path[:-1]:
+            node = node.children[t]
+        node.children.pop(path[-1], None)
+        self.entries -= 1

@@ -1,0 +1,253 @@
+"""Discrete-event simulation of LLM serving engines on a (fractional) TPU
+cluster.
+
+The container is CPU-only, so Scepsy's per-LLM profiling (paper §4 step 3)
+replays traced requests through this simulator instead of a live vLLM
+deployment; per-iteration costs come from the analytical roofline cost
+model (`repro.serving.costmodel`) — the same model the §Roofline report
+uses, so predictions and the roofline are consistent.
+
+Fidelity notes (what is modeled):
+  * continuous batching at iteration granularity with chunked prefill
+    (Sarathi-style): each engine iteration admits waiting prefills up to a
+    token budget and decodes the running batch; decode advances in quanta
+    of ``decode_quantum`` tokens between scheduling points;
+  * KV-capacity admission control (max concurrent sequences from HBM
+    budget), queueing, and per-request latency accounting;
+  * prefix caching: a request whose parent was served by the same replica
+    skips prefill FLOPs for the shared prefix (radix-cache effect that
+    dominates beam search);
+  * fractional chip shares scale compute/bandwidth linearly (static
+    MPS-like partitioning); TP scales per the cost model incl. collectives;
+  * model swapping (for the Aegaeon-like baseline) pays the weight reload.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.serving import costmodel as cm
+
+
+class EventLoop:
+    def __init__(self):
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._counter = itertools.count()
+        self.now = 0.0
+
+    def schedule(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (max(t, self.now), next(self._counter), fn))
+
+    def run(self, until: float = math.inf) -> None:
+        while self._heap and self._heap[0][0] <= until:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            fn()
+
+    def empty(self) -> bool:
+        return not self._heap
+
+
+@dataclass
+class EngineRequest:
+    req_id: int
+    prompt_tokens: int
+    output_tokens: int
+    arrival: float
+    on_complete: Optional[Callable[["EngineRequest"], None]] = None
+    parent_id: Optional[int] = None  # for prefix caching
+    workflow_request: Optional[int] = None
+    # filled by the engine:
+    cached_prefix: int = 0
+    t_start_service: float = -1.0
+    t_first_token: float = -1.0
+    t_done: float = -1.0
+    remaining: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.arrival
+
+
+class EngineSim:
+    """One serving-engine replica (one LLM, one TP group, one fraction)."""
+
+    def __init__(self, cfg: ArchConfig, loop: EventLoop, *, tp: int = 1,
+                 fraction: float = 1.0, name: str = "",
+                 prefix_caching: bool = True, avg_context: int = 1024,
+                 prefill_chunk: int = 2048, decode_quantum: int = 8,
+                 max_batch_override: Optional[int] = None):
+        self.cfg = cfg
+        self.loop = loop
+        self.tp = tp
+        self.fraction = fraction
+        self.name = name or cfg.name
+        self.prefix_caching = prefix_caching
+        self.prefill_chunk = prefill_chunk
+        self.decode_quantum = decode_quantum
+        mb = cm.max_batch_size(cfg, avg_context, tp=tp, fraction=fraction)
+        self.max_batch = max_batch_override or max(min(mb, 256), 1)
+        self.waiting: List[EngineRequest] = []
+        self.running: List[EngineRequest] = []
+        self.done: List[EngineRequest] = []
+        self.busy = False
+        self.busy_time = 0.0
+        self._served: Dict[int, None] = {}  # request ids with live KV here
+        self.current_model: Optional[str] = cfg.name  # for swap modeling
+        self.swap_overhead_pending = 0.0
+        self.failed = False
+
+    # -- queue introspection (router) --
+    @property
+    def load(self) -> float:
+        return (sum(r.remaining + r.prompt_tokens for r in self.waiting)
+                + sum(r.remaining for r in self.running))
+
+    def has_parent(self, parent_id: Optional[int]) -> bool:
+        return parent_id is not None and parent_id in self._served
+
+    # -- submission --
+    def submit(self, req: EngineRequest) -> None:
+        if self.prefix_caching and self.has_parent(req.parent_id):
+            req.cached_prefix = min(int(req.prompt_tokens * 0.85),
+                                    req.prompt_tokens - 1)
+        req.remaining = req.output_tokens
+        self.waiting.append(req)
+        if not self.busy:
+            self.busy = True
+            self.loop.schedule(self.loop.now, self._iterate)
+
+    def request_swap(self, seconds: float) -> None:
+        self.swap_overhead_pending += seconds
+
+    def fail(self, resubmit: Optional[Callable[[EngineRequest], None]] = None
+             ) -> List[EngineRequest]:
+        """Chip/host failure: drop this replica; in-flight work is lost
+        (KV gone) and re-dispatched via ``resubmit`` (router failover)."""
+        self.failed = True
+        orphans = self.waiting + self.running
+        self.waiting, self.running = [], []
+        self._served.clear()
+        for r in orphans:
+            r.cached_prefix = 0  # KV lost; full prefill elsewhere
+            r.remaining = r.output_tokens
+            if resubmit is not None:
+                resubmit(r)
+        return orphans
+
+    # -- engine loop --
+    def _iterate(self) -> None:
+        if self.failed or (not self.waiting and not self.running):
+            self.busy = False
+            return
+        t0 = self.loop.now
+        duration = 0.0
+        if self.swap_overhead_pending > 0:
+            duration += self.swap_overhead_pending
+            self.swap_overhead_pending = 0.0
+
+        # 1) admit prefills within chunk budget and batch capacity
+        budget = self.prefill_chunk
+        admitted: List[EngineRequest] = []
+        while (self.waiting and len(self.running) + len(admitted) < self.max_batch
+               and budget > 0):
+            req = self.waiting[0]
+            new_tokens = req.prompt_tokens - req.cached_prefix
+            if new_tokens > budget and admitted:
+                break
+            self.waiting.pop(0)
+            admitted.append(req)
+            budget -= new_tokens
+            cost = cm.prefill_cost(self.cfg, req.prompt_tokens, tp=self.tp,
+                                   fraction=self.fraction,
+                                   cached_tokens=req.cached_prefix)
+            duration += cost.total
+            req.t_start_service = t0
+
+        # 2) decode quantum for the (new) running batch
+        batch = self.running + admitted
+        self.running = batch  # committed now so fail() can re-dispatch
+        if batch:
+            q = min(self.decode_quantum, min(r.remaining for r in batch))
+            q = max(q, 1)
+            ctx = sum(r.prompt_tokens + (r.output_tokens - r.remaining)
+                      for r in batch) / len(batch)
+            step = cm.decode_step_cost(self.cfg, len(batch), int(ctx),
+                                       tp=self.tp, fraction=self.fraction)
+            duration += q * step.total
+            for r in batch:
+                r.remaining -= q
+                if r.t_first_token < 0:
+                    r.t_first_token = t0 + duration
+
+        t1 = t0 + max(duration, 1e-6)
+        self.busy_time += t1 - t0
+
+        def finish():
+            if self.failed:  # iteration died with the chip; work was
+                return       # already re-dispatched by fail()
+            still: List[EngineRequest] = []
+            for r in batch:
+                if r.remaining <= 0:
+                    r.t_done = t1
+                    self.done.append(r)
+                    self._served[r.req_id] = None
+                    if r.on_complete:
+                        r.on_complete(r)
+                else:
+                    still.append(r)
+            self.running = still
+            self._iterate()
+
+        self.loop.schedule(t1, finish)
+
+
+class Router:
+    """KV-cache-aware + least-loaded routing across one LLM's replicas."""
+
+    def __init__(self, replicas: List[EngineSim], *, affinity: bool = True):
+        assert replicas
+        self.replicas = replicas
+        self.affinity = affinity
+
+    def submit(self, req: EngineRequest) -> None:
+        live = [r for r in self.replicas if not getattr(r, "failed", False)]
+        if not live:
+            raise RuntimeError("no live replicas")
+        target = None
+        if self.affinity and req.parent_id is not None:
+            for r in live:
+                if r.has_parent(req.parent_id):
+                    target = r
+                    break
+        if target is None:
+            target = min(live, key=lambda r: r.load)
+        target.submit(req)
+
+    def fail_replica(self, idx: int) -> None:
+        """Kill one replica and re-dispatch its in-flight requests."""
+        self.replicas[idx].fail(resubmit=self.submit)
+
+
+@dataclass
+class ReplicaSpec:
+    """One deployed replica of an LLM (scheduler output, simulator input)."""
+
+    llm: str
+    cfg: ArchConfig
+    tp: int = 1
+    fraction: float = 1.0  # per-chip share (1.0 = whole chip(s))
+
+
+def build_llm_service(specs: List[ReplicaSpec], loop: EventLoop, *,
+                      prefix_caching: bool = True,
+                      avg_context: int = 1024) -> Router:
+    engines = [EngineSim(s.cfg, loop, tp=s.tp, fraction=s.fraction,
+                         name=f"{s.llm}/{i}", prefix_caching=prefix_caching,
+                         avg_context=avg_context)
+               for i, s in enumerate(specs)]
+    return Router(engines)

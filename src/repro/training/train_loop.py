@@ -1,0 +1,29 @@
+"""Training step assembly: loss -> grads -> AdamW update.
+
+The same ``make_train_step`` is used by the CPU smoke tests, the
+end-to-end training example, and the multi-pod dry-run (where it is
+lowered with ShapeDtypeStructs and never executed).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelBundle
+from repro.training.optimizer import AdamWConfig, AdamWState, apply_updates
+
+
+def make_train_step(bundle: ModelBundle,
+                    opt_cfg: AdamWConfig = AdamWConfig()) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]):
+        loss, grads = jax.value_and_grad(bundle.loss_fn)(params, batch)
+        params, opt_state = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,236 @@
+"""Baseline serving systems (paper §7.2 comparisons), on the same
+discrete-event simulator so comparisons are apples-to-apples.
+
+* :class:`KubernetesHPA` — reactive per-LLM autoscaling on observed
+  utilization; whole-chip tp=1 replicas (the HPA knows nothing about
+  tensor parallelism), cold-start weight loads, and the oscillation
+  behavior the paper describes emerges from the control loop.
+* :class:`AegaeonLike` — token-level GPU pooling with static
+  prefill/decode instance splits, model swapping between requests of
+  different LLMs, KV transfer at the P->D handoff, and NO prefix caching
+  (its two weaknesses in §7.2).
+* :class:`AyoLike` — workflow-aware request scheduling over a
+  user-specified *static* allocation (equal chips per LLM, tp=1).
+  Request-level optimizations are modeled by prefix caching + batched
+  parallel stages; the throughput ceiling of a demand-blind allocation
+  emerges naturally.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro import hw
+from repro.configs.base import ArchConfig
+from repro.serving import costmodel as cm
+from repro.serving.simulator import EngineRequest, EngineSim, EventLoop, Router
+from repro.workflows.runtime import Workflow
+
+
+# ---------------------------------------------------------------------------
+# Kubernetes HPA autoscaler
+# ---------------------------------------------------------------------------
+
+
+class KubernetesHPA:
+    def __init__(self, wf: Workflow, spec: hw.ClusterSpec, loop: EventLoop, *,
+                 sync_period: float = 15.0, target_util: float = 0.75,
+                 scale_down_util: float = 0.30, prefix_caching: bool = True):
+        self.wf = wf
+        self.spec = spec
+        self.loop = loop
+        self.sync_period = sync_period
+        self.target_util = target_util
+        self.scale_down_util = scale_down_util
+        self.prefix_caching = prefix_caching
+        self.free_chips = spec.num_chips - len(wf.llms)
+        assert self.free_chips >= 0, "cluster smaller than one chip per LLM"
+        self.replicas: Dict[str, List[EngineSim]] = {}
+        self.routers: Dict[str, Router] = {}
+        self._last_busy: Dict[str, float] = {}
+        for llm, cfg in wf.llms.items():
+            eng = self._new_engine(llm, cfg, cold=False)
+            self.replicas[llm] = [eng]
+            # plain least-loaded balancing: KV-aware affinity routing is
+            # part of Scepsy's stack (SGLang gateway), not a stock HPA
+            self.routers[llm] = Router(self.replicas[llm], affinity=False)
+            self._last_busy[llm] = 0.0
+        loop.schedule(sync_period, self._sync)
+
+    def _new_engine(self, llm: str, cfg: ArchConfig, cold: bool = True) -> EngineSim:
+        eng = EngineSim(cfg, self.loop, tp=1, fraction=1.0,
+                        name=f"{llm}/hpa", prefix_caching=self.prefix_caching)
+        if cold:
+            eng.request_swap(cm.swap_cost(cfg))  # cold-start weight load
+        return eng
+
+    def _sync(self) -> None:
+        for llm, engines in self.replicas.items():
+            busy = sum(e.busy_time for e in engines)
+            util = ((busy - self._last_busy[llm])
+                    / (self.sync_period * max(len(engines), 1)))
+            self._last_busy[llm] = busy
+            n = len(engines)
+            desired = max(1, math.ceil(n * util / self.target_util))
+            if util < self.scale_down_util and n > 1:
+                desired = max(1, n - 1)
+            if desired > n:
+                add = min(desired - n, self.free_chips)
+                for _ in range(add):
+                    engines.append(self._new_engine(llm, self.wf.llms[llm]))
+                    self.free_chips -= 1
+            elif desired < n:
+                # drain the least-loaded replica; chip returns to the pool
+                engines.sort(key=lambda e: e.load)
+                victim = engines.pop(0)
+                victim.prefix_caching = False  # drained; won't get new work
+                self.free_chips += 1
+        self.loop.schedule(self.loop.now + self.sync_period, self._sync)
+
+
+# ---------------------------------------------------------------------------
+# Aegaeon-like P/D pooled multiplexing
+# ---------------------------------------------------------------------------
+
+
+class SwapPoolEngine:
+    """A pooled instance serving any model, with swap overhead on model
+    change.  FIFO, batches consecutive same-model requests."""
+
+    def __init__(self, loop: EventLoop, phase: str, name: str = ""):
+        self.loop = loop
+        self.phase = phase  # "prefill" | "decode"
+        self.name = name
+        self.queue: List[tuple] = []  # (req, cfg, callback)
+        self.busy = False
+        self.busy_time = 0.0
+        self.current_model: Optional[str] = None
+        self.max_batch = 64
+
+    @property
+    def load(self) -> float:
+        return sum(r.prompt_tokens + r.remaining for r, _, _ in self.queue)
+
+    def submit(self, req: EngineRequest, cfg: ArchConfig, callback) -> None:
+        req.remaining = req.output_tokens
+        self.queue.append((req, cfg, callback))
+        if not self.busy:
+            self.busy = True
+            self.loop.schedule(self.loop.now, self._iterate)
+
+    def _iterate(self) -> None:
+        if not self.queue:
+            self.busy = False
+            return
+        t0 = self.loop.now
+        req0, cfg, _ = self.queue[0]
+        batch = []
+        while (self.queue and len(batch) < self.max_batch
+               and self.queue[0][1].name == cfg.name):
+            batch.append(self.queue.pop(0))
+        duration = 0.0
+        if self.current_model != cfg.name:
+            duration += cm.swap_cost(cfg)
+            self.current_model = cfg.name
+        if self.phase == "prefill":
+            for r, c, _ in batch:
+                duration += cm.prefill_cost(c, r.prompt_tokens).total
+        else:
+            # decode the batch in quanta until all finish
+            remaining = [r.output_tokens for r, _, _ in batch]
+            while any(x > 0 for x in remaining):
+                q = max(min(8, min(x for x in remaining if x > 0)), 1)
+                live = sum(1 for x in remaining if x > 0)
+                ctx = sum(r.prompt_tokens for r, _, _ in batch) / len(batch)
+                step = cm.decode_step_cost(cfg, live, int(ctx))
+                duration += q * step.total
+                remaining = [max(x - q, 0) if x > 0 else 0 for x in remaining]
+        t1 = t0 + max(duration, 1e-6)
+        self.busy_time += t1 - t0
+
+        def finish():
+            for r, c, cb in batch:
+                cb(r, t1)
+            self._iterate()
+
+        self.loop.schedule(t1, finish)
+
+
+class AegaeonLike:
+    """Static P/D split pools; encoders served by prefill instances."""
+
+    def __init__(self, wf: Workflow, spec: hw.ClusterSpec, loop: EventLoop, *,
+                 prefill_per_node: int = 2, decode_per_node: int = 2):
+        self.wf = wf
+        self.loop = loop
+        per_node = spec.chips_per_host
+        assert prefill_per_node + decode_per_node == per_node or True
+        self.prefill_pool: List[SwapPoolEngine] = []
+        self.decode_pool: List[SwapPoolEngine] = []
+        for h in range(spec.num_hosts):
+            for i in range(prefill_per_node):
+                self.prefill_pool.append(
+                    SwapPoolEngine(loop, "prefill", f"P{h}.{i}"))
+            for i in range(decode_per_node):
+                self.decode_pool.append(
+                    SwapPoolEngine(loop, "decode", f"D{h}.{i}"))
+        self.routers = {llm: _AegaeonRouter(self, cfg)
+                        for llm, cfg in wf.llms.items()}
+
+
+class _AegaeonRouter:
+    def __init__(self, system: AegaeonLike, cfg: ArchConfig):
+        self.system = system
+        self.cfg = cfg
+
+    def submit(self, req: EngineRequest) -> None:
+        sysm = self.system
+        pe = min(sysm.prefill_pool, key=lambda e: e.load)
+        encoder_like = req.output_tokens <= 2
+
+        def after_prefill(r: EngineRequest, t: float):
+            if encoder_like:
+                r.t_done = t
+                r.t_start_service = max(r.t_start_service, r.arrival)
+                if r.on_complete:
+                    r.on_complete(r)
+                return
+            # KV transfer P -> D over ICI
+            kv = cm.kv_bytes_per_seq(self.cfg, r.prompt_tokens)
+            xfer = kv / hw.ICI_LINK_BW
+            de = min(sysm.decode_pool, key=lambda e: e.load)
+
+            def after_decode(r2: EngineRequest, t2: float):
+                r2.t_done = t2
+                if r2.on_complete:
+                    r2.on_complete(r2)
+
+            sysm.loop.schedule(t + xfer,
+                               lambda: de.submit(r, self.cfg, after_decode))
+
+        req.t_start_service = self.system.loop.now
+        pe.submit(req, self.cfg, after_prefill)
+
+
+# ---------------------------------------------------------------------------
+# Ayo-like static workflow-aware serving
+# ---------------------------------------------------------------------------
+
+
+class AyoLike:
+    def __init__(self, wf: Workflow, spec: hw.ClusterSpec, loop: EventLoop, *,
+                 engine_efficiency: float = 0.9):
+        """Equal static chip split per LLM (user-specified allocation),
+        tp=1 replicas; ``engine_efficiency`` models the older engine
+        generation the paper had to use for comparability."""
+        self.routers: Dict[str, Router] = {}
+        llms = list(wf.llms)
+        chips_each = max(spec.num_chips // len(llms), 1)
+        for llm in llms:
+            cfg = wf.llms[llm]
+            engines = [EngineSim(cfg, loop, tp=1,
+                                 fraction=engine_efficiency,
+                                 name=f"{llm}/ayo{i}", prefix_caching=True)
+                       for i in range(chips_each)]
+            self.routers[llm] = Router(engines)

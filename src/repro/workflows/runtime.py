@@ -1,0 +1,192 @@
+"""Framework-agnostic workflow runtime.
+
+A workflow is *any* Python generator: it yields groups of LLM calls (or
+tool calls) and receives their results — Scepsy never inspects the
+program, mirroring the paper's "unrestricted programming model" property.
+Two executors drive the same programs:
+
+  * :func:`trace_workflow` — the tracing deployment (paper §4 step 1):
+    each workflow-level request runs against an *unloaded* engine (nominal
+    cost-model durations, no queueing), and the TracingProxy captures the
+    LLM-level telemetry;
+  * :class:`ClusterDriver` — the full discrete-event cluster execution
+    used by the end-to-end benchmarks: Poisson arrivals, routing,
+    continuous batching, prefix caching.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Generator, List, Optional, Sequence
+
+from repro.configs.base import ArchConfig
+from repro.core.trace import LLMCall, TracingProxy, TraceStore
+from repro.serving import costmodel as cm
+from repro.serving.simulator import EngineRequest, EventLoop, Router
+
+
+@dataclass
+class Call:
+    llm: str
+    prompt_tokens: int
+    output_tokens: int
+    parent: Optional[int] = None  # handle of a prior call (prefix sharing)
+
+
+@dataclass
+class Tool:
+    seconds: float = 0.005  # non-LLM step; negligible per the paper
+
+
+@dataclass
+class CallResult:
+    handle: int
+    t_start: float
+    t_end: float
+
+
+WorkflowProgram = Callable[[random.Random], Generator]
+
+
+@dataclass
+class Workflow:
+    name: str
+    program: WorkflowProgram
+    llms: Dict[str, ArchConfig]  # logical name -> architecture
+
+
+# ---------------------------------------------------------------------------
+# Tracing executor (unloaded deployment, nominal durations)
+# ---------------------------------------------------------------------------
+
+
+def nominal_call_seconds(cfg: ArchConfig, prompt: int, out: int,
+                         cached: int = 0) -> float:
+    pf = cm.prefill_cost(cfg, prompt, cached_tokens=cached).total
+    dc = cm.decode_step_cost(cfg, 1, prompt + out // 2).total
+    return pf + out * dc
+
+
+def trace_workflow(wf: Workflow, n_requests: int, *, seed: int = 0,
+                   cache_aware: bool = True) -> TraceStore:
+    proxy = TracingProxy(wf.name)
+    handle_counter = [0]
+    for rid in range(n_requests):
+        rng = random.Random((seed << 20) + rid)
+        gen = wf.program(rng)
+        proxy.begin_request(rid, 0.0)
+        t = 0.0
+        handles: Dict[int, CallResult] = {}
+        try:
+            group = next(gen)
+            while True:
+                if isinstance(group, Tool):
+                    t += group.seconds
+                    group = gen.send([])
+                    continue
+                calls: Sequence[Call] = group
+                results = []
+                t_end_group = t
+                for c in calls:
+                    cfg = wf.llms[c.llm]
+                    cached = 0
+                    if cache_aware and c.parent is not None and c.parent in handles:
+                        cached = min(int(c.prompt_tokens * 0.85),
+                                     c.prompt_tokens - 1)
+                    dur = nominal_call_seconds(cfg, c.prompt_tokens,
+                                               c.output_tokens, cached)
+                    handle_counter[0] += 1
+                    h = handle_counter[0]
+                    res = CallResult(h, t, t + dur)
+                    handles[h] = res
+                    results.append(res)
+                    proxy.record(LLMCall(
+                        workflow_request=rid, llm=c.llm, t_start=t,
+                        t_end=t + dur, prompt_tokens=c.prompt_tokens,
+                        output_tokens=c.output_tokens,
+                        cached_prefix_tokens=cached))
+                    t_end_group = max(t_end_group, t + dur)
+                t = t_end_group
+                group = gen.send(results)
+        except StopIteration:
+            pass
+        proxy.end_request(rid, t)
+    return proxy.store
+
+
+# ---------------------------------------------------------------------------
+# Cluster executor (end-to-end benchmark driver)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RequestRecord:
+    request_id: int
+    arrival: float
+    done: float = -1.0
+
+    @property
+    def latency(self) -> float:
+        return self.done - self.arrival
+
+
+class ClusterDriver:
+    """Drives workflow requests through routed engine replicas."""
+
+    def __init__(self, wf: Workflow, routers: Dict[str, Router],
+                 loop: EventLoop):
+        self.wf = wf
+        self.routers = routers
+        self.loop = loop
+        self.records: List[RequestRecord] = []
+        self._id_counter = [0]
+
+    def run_open_loop(self, arrival_rate: float, n_requests: int, *,
+                      seed: int = 0, until: float = math.inf
+                      ) -> List[RequestRecord]:
+        rng = random.Random(seed)
+        t = 0.0
+        for rid in range(n_requests):
+            self.loop.schedule(t, lambda rid=rid: self._start(rid, seed))
+            t += rng.expovariate(arrival_rate)
+        self.loop.run(until)
+        return [r for r in self.records if r.done >= 0]
+
+    def _start(self, rid: int, seed: int) -> None:
+        rec = RequestRecord(rid, self.loop.now)
+        self.records.append(rec)
+        rng = random.Random((seed << 20) + rid)
+        gen = self.wf.program(rng)
+        self._advance(gen, rec, None)
+
+    def _advance(self, gen: Generator, rec: RequestRecord, send_val) -> None:
+        try:
+            group = next(gen) if send_val is None else gen.send(send_val)
+        except StopIteration:
+            rec.done = self.loop.now
+            return
+        if isinstance(group, Tool):
+            self.loop.schedule(self.loop.now + group.seconds,
+                               lambda: self._advance(gen, rec, []))
+            return
+        calls: Sequence[Call] = group
+        pending = [len(calls)]
+        results: List[Optional[CallResult]] = [None] * len(calls)
+
+        for i, c in enumerate(calls):
+            self._id_counter[0] += 1
+            h = self._id_counter[0]
+
+            def on_done(req: EngineRequest, i=i, h=h):
+                results[i] = CallResult(h, req.t_start_service, req.t_done)
+                pending[0] -= 1
+                if pending[0] == 0:
+                    self._advance(gen, rec, results)
+
+            req = EngineRequest(
+                req_id=h, prompt_tokens=c.prompt_tokens,
+                output_tokens=max(c.output_tokens, 1), arrival=self.loop.now,
+                on_complete=on_done, parent_id=c.parent,
+                workflow_request=rec.request_id)
+            self.routers[c.llm].submit(req)

@@ -1,0 +1,182 @@
+"""Unit tests for the Scepsy core (trace → aggregate → pipeline →
+scheduler → placement)."""
+import math
+
+import pytest
+
+from repro import hw
+from repro.core.aggregate import aggregate, merged_busy_time, request_parallelism
+from repro.core.pipeline import AggregateLLMPipeline, Allocation
+from repro.core.placement import PlacementError, place
+from repro.core.profiler import extract_groups, profile_llm
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.core.trace import LLMCall, TraceStore, WorkflowTrace
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+from repro.workflows.runtime import trace_workflow
+
+
+def _mk_trace(calls, rid=0):
+    t_end = max(c.t_end for c in calls)
+    return WorkflowTrace(request_id=rid, workflow="t", t_start=0.0,
+                         t_end=t_end, calls=calls)
+
+
+def test_merged_busy_time():
+    assert merged_busy_time([(0, 1), (2, 3)]) == 2.0
+    assert merged_busy_time([(0, 2), (1, 3)]) == 3.0
+    assert merged_busy_time([(0, 5), (1, 2)]) == 5.0
+
+
+def test_request_parallelism_sequential_vs_parallel():
+    seq = [LLMCall(0, "m", 0, 1, 10, 10), LLMCall(0, "m", 1, 2, 10, 10)]
+    par = [LLMCall(0, "m", 0, 1, 10, 10), LLMCall(0, "m", 0, 1, 10, 10),
+           LLMCall(0, "m", 0, 1, 10, 10)]
+    assert request_parallelism(seq) == pytest.approx(1.0)
+    assert request_parallelism(par) == pytest.approx(3.0)
+
+
+def test_aggregate_n_and_p():
+    tr = _mk_trace([
+        LLMCall(0, "gen", 0, 1, 100, 50),
+        LLMCall(0, "gen", 0, 1, 100, 50),
+        LLMCall(0, "ver", 1, 2, 100, 2),
+    ])
+    store = TraceStore(workflow="t", traces=[tr])
+    stats = aggregate(store)
+    assert stats.per_llm["gen"].n == 2
+    assert stats.per_llm["gen"].p == pytest.approx(2.0)
+    assert stats.per_llm["ver"].n == 1
+    assert stats.per_llm["gen"].mean_share == pytest.approx(2 / 3)
+
+
+def test_relative_share_more_stable_than_absolute():
+    """The paper's §2.4 observation on our beam-search traces."""
+    store = trace_workflow(BEAM_SEARCH, 25, seed=3)
+    stats = aggregate(store)
+    for m, st in stats.per_llm.items():
+        assert st.share_cov < 0.5 * st.abs_cov, (
+            f"{m}: share cov {st.share_cov} not ≪ abs cov {st.abs_cov}")
+
+
+def test_extract_groups_dependencies():
+    tr = _mk_trace([
+        LLMCall(0, "m", 0.0, 1.0, 10, 5),
+        LLMCall(0, "m", 0.0, 1.2, 10, 5),  # parallel with first
+        LLMCall(0, "m", 1.5, 2.0, 10, 5),  # depends on both
+    ])
+    store = TraceStore(workflow="t", traces=[tr])
+    groups = extract_groups(store, "m")
+    assert len(groups) == 1
+    g = groups[0]
+    assert g.calls[0].preds == [] and g.calls[1].preds == []
+    assert set(g.calls[2].preds) == {0, 1}
+
+
+@pytest.fixture(scope="module")
+def beam_pipeline():
+    from repro.core.scepsy import build_pipeline
+
+    pipeline, stats, store = build_pipeline(
+        BEAM_SEARCH, n_trace_requests=12, tp_degrees=(1, 2),
+        max_profile_groups=10)
+    return pipeline
+
+
+def test_profile_monotonic_latency(beam_pipeline):
+    for st in beam_pipeline.stages.values():
+        for prof in st.profile.by_tp.values():
+            lat = prof.latency["mean"]
+            # latency should not decrease as load rises (within noise)
+            assert lat[-1] >= lat[0] * 0.8
+            assert prof.max_throughput > 0
+
+
+def test_pipeline_predict_monotone_in_replicas(beam_pipeline):
+    base = {m: Allocation(replicas=1, tp=1, fraction=1.0)
+            for m in beam_pipeline.llms()}
+    more = {m: Allocation(replicas=2, tp=1, fraction=1.0)
+            for m in beam_pipeline.llms()}
+    lam = 0.05
+    p1 = beam_pipeline.predict(base, lam)
+    p2 = beam_pipeline.predict(more, lam)
+    assert p2.max_throughput >= p1.max_throughput
+    if p1.feasible and p2.feasible:
+        assert p2.latency <= p1.latency * 1.05
+
+
+def test_pipeline_eq2_bottleneck(beam_pipeline):
+    alloc = {m: Allocation(replicas=1, tp=1, fraction=1.0)
+             for m in beam_pipeline.llms()}
+    pred = beam_pipeline.predict(alloc, 0.01)
+    expected = min(
+        st.profile.max_throughput(1) / st.n
+        for st in beam_pipeline.stages.values())
+    assert pred.max_throughput == pytest.approx(expected, rel=1e-6)
+
+
+def test_scheduler_feasible_and_within_budget(beam_pipeline):
+    spec = hw.PAPER_CLUSTER_16
+    res = schedule(beam_pipeline, spec, lam_target=0.3, config=SchedulerConfig())
+    total_units = sum(
+        a.replicas * a.tp * (a.fraction if a.tp == 1 else 1.0)
+        * spec.fractions_per_chip
+        for a in res.allocations.values())
+    assert total_units <= spec.total_units + 1e-6
+    assert res.feasible
+    assert res.prediction.max_throughput >= 0.3
+    for a in res.allocations.values():
+        assert a.tp <= spec.hb_domain_size
+        assert a.fraction <= 1.0
+
+
+def test_scheduler_higher_rate_needs_more_throughput(beam_pipeline):
+    spec = hw.PAPER_CLUSTER_16
+    lo = schedule(beam_pipeline, spec, lam_target=0.1)
+    hi = schedule(beam_pipeline, spec, lam_target=0.8)
+    if lo.feasible and hi.feasible:
+        assert hi.prediction.max_throughput >= lo.prediction.max_throughput * 0.9
+
+
+def test_placement_valid_and_topology_constrained(beam_pipeline):
+    spec = hw.PAPER_CLUSTER_16
+    res = schedule(beam_pipeline, spec, lam_target=0.3)
+    pl = place(res.allocations, spec)
+    pl.validate()  # raises on oversubscription / domain violations
+    dep = pl.to_deployment()
+    assert dep["kind"] == "WorkflowServingDeployment"
+    assert len(dep["instances"]) == sum(
+        a.replicas for a in res.allocations.values())
+
+
+def test_placement_rejects_oversubscription():
+    spec = hw.ClusterSpec(num_hosts=1, chips_per_host=2, hb_domain_size=2,
+                          fractions_per_chip=10)
+    allocs = {f"m{i}": Allocation(replicas=1, tp=1, fraction=0.9)
+              for i in range(4)}
+    with pytest.raises(PlacementError):
+        place(allocs, spec)
+
+
+def test_placement_tp_in_one_domain():
+    spec = hw.ClusterSpec(num_hosts=2, chips_per_host=4, hb_domain_size=2)
+    allocs = {"big": Allocation(replicas=2, tp=2, fraction=1.0),
+              "small": Allocation(replicas=3, tp=1, fraction=0.3)}
+    pl = place(allocs, spec)
+    for inst in pl.instances:
+        if inst.tp > 1:
+            domains = {c // spec.hb_domain_size for c in inst.chips}
+            assert len(domains) == 1
+
+
+def test_rag_fractional_colocation():
+    """Tiny embedder/reranker should get sub-chip shares (paper §5)."""
+    from repro.core.scepsy import build_pipeline
+
+    pipeline, _, _ = build_pipeline(RAG_RERANKER, n_trace_requests=10,
+                                    tp_degrees=(1, 2), max_profile_groups=8)
+    res = schedule(pipeline, hw.PAPER_CLUSTER_16, lam_target=4.0)
+    gen_units = res.units["gen"]
+    emb_units = res.units["emb"]
+    assert gen_units > emb_units
+    assert res.allocations["emb"].fraction < 1.0 or res.allocations["emb"].tp == 1

@@ -1,0 +1,129 @@
+"""Integration tests: full Scepsy flow against the cluster simulator,
+baselines, multi-workflow scheduling, and pod-scale placement."""
+import math
+
+import pytest
+
+from repro import hw
+from repro.core.scepsy import build_pipeline, deploy
+from repro.core.scheduler import SchedulerConfig, schedule, schedule_multi
+from repro.core.placement import place
+from repro.serving.deploy import routers_from_allocations
+from repro.serving.simulator import EventLoop
+from repro.workflows.baselines import AegaeonLike, AyoLike, KubernetesHPA
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.rag_reranker import RAG_RERANKER
+from repro.workflows.runtime import ClusterDriver
+
+
+@pytest.fixture(scope="module")
+def beam_pipe():
+    p, _, _ = build_pipeline(BEAM_SEARCH, n_trace_requests=12,
+                             tp_degrees=(1, 2), max_profile_groups=10)
+    return p
+
+
+def _run(wf, routers, loop, rate, n):
+    driver = ClusterDriver(wf, routers, loop)
+    recs = driver.run_open_loop(rate, n, seed=11, until=1e5)
+    recs = [r for r in recs if r.done >= 0]
+    assert recs, "no requests completed"
+    lats = [r.latency for r in recs]
+    span = max(r.done for r in recs) - min(r.arrival for r in recs)
+    return len(recs) / span, sum(lats) / len(lats), len(recs)
+
+
+def test_scepsy_end_to_end_serving(beam_pipe):
+    spec = hw.PAPER_CLUSTER_8
+    res = schedule(beam_pipe, spec, 0.3, SchedulerConfig(max_tp=2))
+    assert res.feasible
+    place(res.allocations, spec).validate()
+    loop = EventLoop()
+    routers = routers_from_allocations(BEAM_SEARCH, res.allocations, loop)
+    tput, lat, n = _run(BEAM_SEARCH, routers, loop, 0.3, 25)
+    assert n == 25
+    assert math.isfinite(lat)
+    # served near the offered rate (not saturated at the target)
+    assert tput > 0.2
+
+
+def test_scepsy_beats_multiplexing_baseline(beam_pipe):
+    spec = hw.PAPER_CLUSTER_8
+    rate, n = 0.4, 25
+    res = schedule(beam_pipe, spec, rate, SchedulerConfig(max_tp=2))
+    loop = EventLoop()
+    routers = routers_from_allocations(BEAM_SEARCH, res.allocations, loop)
+    s_tput, s_lat, _ = _run(BEAM_SEARCH, routers, loop, rate, n)
+
+    loop2 = EventLoop()
+    aeg = AegaeonLike(BEAM_SEARCH, spec, loop2)
+    a_tput, a_lat, _ = _run(BEAM_SEARCH, aeg.routers, loop2, rate, n)
+    assert s_lat < a_lat, f"scepsy {s_lat} vs aegaeon {a_lat}"
+    assert s_tput >= a_tput * 0.9
+
+
+def test_k8s_and_ayo_baselines_run():
+    spec = hw.PAPER_CLUSTER_4
+    for cls in (KubernetesHPA, AyoLike):
+        loop = EventLoop()
+        sysm = cls(RAG_RERANKER, spec, loop)
+        tput, lat, n = _run(RAG_RERANKER, sysm.routers, loop, 2.0, 20)
+        assert n == 20 and math.isfinite(lat)
+
+
+def test_multi_workflow_schedule():
+    pipes = {}
+    for wf in (BEAM_SEARCH, RAG_RERANKER):
+        pipes[wf.name], _, _ = build_pipeline(
+            wf, n_trace_requests=10, tp_degrees=(1, 2), max_profile_groups=8)
+    res = schedule_multi(pipes, hw.PAPER_CLUSTER_16,
+                         {"beam_search": 0.2, "rag_reranker": 2.0},
+                         SchedulerConfig(max_tp=2), split_step=2)
+    assert res.chip_split["beam_search"] + res.chip_split["rag_reranker"] == 16
+    assert 0.0 <= res.welfare <= 1.0
+    for r in res.per_workflow.values():
+        assert r.feasible
+
+
+def test_pod_scale_placement(beam_pipe):
+    """Scheduler + placement on a 256-chip pod-scale serving cluster."""
+    spec = hw.POD_CLUSTER_256
+    res = schedule(beam_pipe, spec, 8.0,
+                   SchedulerConfig(max_tp=spec.hb_domain_size, units_grid=6))
+    pl = place(res.allocations, spec)
+    pl.validate()
+    assert res.prediction.max_throughput >= 8.0
+    # every TP instance stays inside one hb domain
+    for inst in pl.instances:
+        if inst.tp > 1:
+            assert len({c // spec.hb_domain_size for c in inst.chips}) == 1
+
+
+def test_deployment_manifest_roundtrip(tmp_path, beam_pipe):
+    from repro.core.placement import save_deployment
+    import json
+
+    spec = hw.PAPER_CLUSTER_8
+    dep = deploy(BEAM_SEARCH, spec, 0.3, pipeline=beam_pipe)
+    path = tmp_path / "deploy.json"
+    save_deployment(dep.placement, str(path))
+    manifest = json.loads(path.read_text())
+    assert manifest["kind"] == "WorkflowServingDeployment"
+    total_frac = sum(i["chip_fraction"] * len(i["chips"]) if i["tensor_parallel"] > 1
+                     else i["chip_fraction"] for i in manifest["instances"])
+    assert total_frac <= spec.num_chips + 1e-9
+
+def test_replica_failover_completes_all_requests(beam_pipe):
+    """Kill a replica mid-run; router failover re-dispatches in-flight
+    work (KV lost -> full prefill) and every workflow still completes."""
+    spec = hw.PAPER_CLUSTER_8
+    res = schedule(beam_pipe, spec, 0.3, SchedulerConfig(max_tp=2))
+    loop = EventLoop()
+    routers = routers_from_allocations(BEAM_SEARCH, res.allocations, loop)
+    victim_router = max(routers.values(), key=lambda r: len(r.replicas))
+    assert len(victim_router.replicas) >= 2, "need >=2 replicas to fail one"
+    driver = ClusterDriver(BEAM_SEARCH, routers, loop)
+    loop.schedule(20.0, lambda: victim_router.fail_replica(0))
+    recs = driver.run_open_loop(0.3, 20, seed=3, until=1e5)
+    done = [r for r in recs if r.done >= 0]
+    assert len(done) == 20, f"only {len(done)}/20 completed after failover"

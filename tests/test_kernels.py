@@ -1,0 +1,164 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention_op, decode_attention_ref
+from repro.kernels.flash_attention import flash_attention_op, flash_attention_ref
+from repro.kernels.rwkv6_scan import wkv6_op, wkv6_scan_ref
+from repro.models.layers import causal_flash_attention
+from repro.models.rwkv import wkv6_chunked
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 2, 2, 128, 64),   # MHA
+    (2, 4, 2, 256, 64),   # GQA group 2
+    (1, 8, 1, 128, 128),  # MQA, wide head
+    (1, 2, 2, 192, 64),   # non-power-of-two seq (block padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, S, D, dtype):
+    if S % 64 != 0:
+        pytest.skip("kernel requires block-divisible seq")
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = (jax.random.normal(ks[0], (B, S, H, D)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, KV, D)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, KV, D)) * 0.5).astype(dtype)
+    out = flash_attention_op(q, k, v, block_q=64, block_kv=64)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dtype),
+                               rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_window(window):
+    B, H, KV, S, D = 1, 4, 2, 256, 64
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, KV, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, KV, D)) * 0.5
+    out = flash_attention_op(q, k, v, window=window, block_q=64, block_kv=64)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3),
+                              window=window).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model-layer chunked flash used by the dry-run."""
+    B, H, KV, S, D = 2, 4, 4, 128, 32
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, KV, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, KV, D)) * 0.5
+    out_kernel = flash_attention_op(q, k, v, block_q=64, block_kv=64)
+    out_model = causal_flash_attention(q, k, v, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_model),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,KV,D,Smax,clen", [
+    (2, 8, 2, 64, 256, 200),
+    (1, 16, 16, 128, 512, 512),  # MHA full cache
+    (4, 4, 4, 64, 128, 1),       # single valid entry
+    (2, 32, 2, 64, 256, 130),    # glm4-style extreme GQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, KV, D, Smax, clen, dtype):
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = (jax.random.normal(ks[0], (B, H, D)) * 0.5).astype(dtype)
+    kc = (jax.random.normal(ks[1], (B, KV, Smax, D)) * 0.5).astype(dtype)
+    vc = (jax.random.normal(ks[2], (B, KV, Smax, D)) * 0.5).astype(dtype)
+    out = decode_attention_op(q, kc, vc, jnp.asarray(clen), block_s=64)
+    ref = decode_attention_ref(q.reshape(B, KV, H // KV, D), kc, vc,
+                               clen).reshape(B, H, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dtype),
+                               rtol=_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,S,D,chunk", [
+    (1, 2, 64, 32, 32),
+    (2, 3, 128, 64, 64),
+    (1, 1, 256, 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(B, H, S, D, chunk, dtype):
+    ks = jax.random.split(jax.random.key(4), 5)
+    r, k, v = ((jax.random.normal(ks[i], (B, H, S, D)) * 0.5).astype(dtype)
+               for i in range(3))
+    logw = (-jnp.exp(jax.random.normal(ks[3], (B, H, S, D)) * 0.5 - 1.0)
+            ).astype(jnp.float32)
+    u = (jax.random.normal(ks[4], (H, D)) * 0.2).astype(jnp.float32)
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    out, s1 = wkv6_op(r, k, v, logw.astype(dtype), u, s0, chunk=chunk)
+    fl = lambda a: a.reshape(B * H, S, D)
+    ref, sref = wkv6_scan_ref(fl(r), fl(k), fl(v), fl(logw.astype(dtype)), u,
+                              s0.reshape(B * H, D, D), num_heads=H)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref.reshape(B, H, S, D), np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(sref.reshape(B, H, D, D)),
+                               atol=tol, rtol=tol)
+
+
+def test_wkv6_state_carry():
+    """Two half-sequence kernel calls == one full call (state threading)."""
+    B, H, S, D = 1, 2, 128, 32
+    ks = jax.random.split(jax.random.key(5), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, H, S, D)) * 0.5 for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, S, D)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (H, D)) * 0.2
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    full, s_full = wkv6_op(r, k, v, logw, u, s0, chunk=32)
+    h = S // 2
+    a, s_mid = wkv6_op(r[:, :, :h], k[:, :, :h], v[:, :, :h], logw[:, :, :h],
+                       u, s0, chunk=32)
+    b, s_end = wkv6_op(r[:, :, h:], k[:, :, h:], v[:, :, h:], logw[:, :, h:],
+                       u, s_mid, chunk=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([a, b], axis=2)),
+                               np.asarray(full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_end), np.asarray(s_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_model_wkv_chunked_matches_kernel():
+    """The model's jnp chunked WKV (dry-run path) == kernel == naive scan."""
+    B, H, S, D = 1, 2, 128, 32
+    ks = jax.random.split(jax.random.key(6), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, H, S, D)) * 0.5 for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, S, D)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (H, D)) * 0.2
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    out_model, s_model = wkv6_chunked(r, k, v, logw, u, s0)
+    out_kernel, s_kernel = wkv6_op(r, k, v, logw, u, s0, chunk=64)
+    np.testing.assert_allclose(np.asarray(out_model), np.asarray(out_kernel),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_model), np.asarray(s_kernel),
+                               atol=1e-4, rtol=1e-4)

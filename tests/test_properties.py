@@ -1,0 +1,176 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro import hw
+from repro.core.aggregate import merged_busy_time, request_parallelism
+from repro.core.pipeline import Allocation
+from repro.core.placement import PlacementError, place
+from repro.core.trace import LLMCall
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.models.layers import causal_flash_attention
+from repro.serving import costmodel as cm
+from repro.configs.registry import ASSIGNED, get_config
+
+# ---------------------------------------------------------------------------
+# sweep-line aggregation
+# ---------------------------------------------------------------------------
+
+intervals = st.lists(
+    st.tuples(st.floats(0, 100, allow_nan=False),
+              st.floats(0.01, 50, allow_nan=False)).map(
+        lambda t: (t[0], t[0] + t[1])),
+    min_size=1, max_size=30)
+
+
+@given(intervals)
+@settings(max_examples=100, deadline=None)
+def test_merged_busy_time_bounds(ivs):
+    union = merged_busy_time(ivs)
+    total = sum(e - s for s, e in ivs)
+    longest = max(e - s for s, e in ivs)
+    span = max(e for _, e in ivs) - min(s for s, _ in ivs)
+    assert longest - 1e-9 <= union <= min(total, span) + 1e-9
+
+
+@given(intervals)
+@settings(max_examples=100, deadline=None)
+def test_parallelism_bounds(ivs):
+    calls = [LLMCall(0, "m", s, e, 1, 1) for s, e in ivs]
+    p = request_parallelism(calls)
+    assert 1.0 - 1e-9 <= p <= len(calls) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# placement invariants
+# ---------------------------------------------------------------------------
+
+alloc_strategy = st.dictionaries(
+    st.sampled_from(["a", "b", "c", "d"]),
+    st.builds(Allocation,
+              replicas=st.integers(1, 3),
+              tp=st.sampled_from([1, 2]),
+              fraction=st.sampled_from([0.2, 0.5, 1.0])),
+    min_size=1, max_size=4)
+
+
+@given(alloc_strategy)
+@settings(max_examples=60, deadline=None)
+def test_placement_never_oversubscribes(allocs):
+    # normalize: tp>1 implies whole chips
+    allocs = {m: (Allocation(a.replicas, a.tp, 1.0) if a.tp > 1 else a)
+              for m, a in allocs.items()}
+    spec = hw.ClusterSpec(num_hosts=2, chips_per_host=4, hb_domain_size=2)
+    try:
+        pl = place(allocs, spec)
+    except PlacementError:
+        return  # refusing is always allowed; placing invalidly is not
+    pl.validate()
+    F = spec.fractions_per_chip
+    used = {}
+    for inst in pl.instances:
+        for c in inst.chips:
+            used[c] = used.get(c, 0) + inst.units_per_chip
+    assert all(v <= F for v in used.values())
+    # every requested replica was placed
+    want = sum(a.replicas for a in allocs.values())
+    assert len(pl.instances) == want
+
+
+# ---------------------------------------------------------------------------
+# cost model invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from(sorted(ASSIGNED)),
+       st.integers(1, 64), st.integers(128, 8192))
+@settings(max_examples=30, deadline=None)
+def test_decode_cost_monotone(arch, batch, ctx):
+    cfg = get_config(arch)
+    c1 = cm.decode_step_cost(cfg, batch, ctx)
+    c2 = cm.decode_step_cost(cfg, batch + 1, ctx)
+    c3 = cm.decode_step_cost(cfg, batch, ctx, tp=2)
+    assert c2.total >= c1.total - 1e-12  # more work never cheaper
+    assert c3.compute_s <= c1.compute_s + 1e-12  # TP divides compute
+    assert c1.total > 0
+
+
+@given(st.sampled_from(sorted(ASSIGNED)), st.integers(64, 4096))
+@settings(max_examples=40, deadline=None)
+def test_prefill_cache_discount(arch, prompt):
+    cfg = get_config(arch)
+    full = cm.prefill_cost(cfg, prompt)
+    cached = cm.prefill_cost(cfg, prompt, cached_tokens=prompt // 2)
+    assert cached.compute_s <= full.compute_s + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# model-layer invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 2), st.sampled_from([2, 4]), st.sampled_from([1, 2]),
+       st.sampled_from([32, 64]))
+@settings(max_examples=6, deadline=None)
+def test_flash_attention_chunk_invariance(b, h, kv_div, s_mult):
+    """Output must not depend on the query-chunk size."""
+    kv = max(h // kv_div, 1)
+    S, D = 16 * s_mult, 8
+    ks = jax.random.split(jax.random.key(b * 7 + h), 3)
+    q = jax.random.normal(ks[0], (b, S, h, D))
+    k = jax.random.normal(ks[1], (b, S, kv, D))
+    v = jax.random.normal(ks[2], (b, S, kv, D))
+    o1 = causal_flash_attention(q, k, v, q_chunk=8)
+    o2 = causal_flash_attention(q, k, v, q_chunk=S)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5,
+                               rtol=2e-5)
+
+
+@given(st.integers(10, 500))
+@settings(max_examples=30, deadline=None)
+def test_quantize_roundtrip_error_bound(n):
+    x = jax.random.normal(jax.random.key(n), (n,)) * (n % 7 + 1)
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s, x.shape)
+    assert float(jnp.max(jnp.abs(deq - x))) <= float(
+        jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariant: allocations never exceed the cluster
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(0.05, 1.5), st.sampled_from([4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_scheduler_budget_property(rate, chips):
+    from repro.core.scepsy import build_pipeline
+    from repro.core.scheduler import SchedulerConfig, schedule
+    from repro.workflows.rag_reranker import RAG_RERANKER
+
+    global _PIPE_CACHE
+    try:
+        _PIPE_CACHE
+    except NameError:
+        _PIPE_CACHE, _, _ = build_pipeline(
+            RAG_RERANKER, n_trace_requests=8, tp_degrees=(1, 2),
+            max_profile_groups=6)
+    spec = hw.ClusterSpec(num_hosts=max(chips // 4, 1), chips_per_host=4)
+    try:
+        res = schedule(_PIPE_CACHE, spec, rate,
+                       SchedulerConfig(max_tp=spec.hb_domain_size))
+    except (ValueError, RuntimeError):
+        return
+    used = 0.0
+    for a in res.allocations.values():
+        per = a.tp * spec.fractions_per_chip if a.tp > 1 or a.fraction >= 1.0 \
+            else round(a.fraction * spec.fractions_per_chip)
+        used += a.replicas * per
+    assert used <= spec.total_units + 1e-9
+    for a in res.allocations.values():
+        assert a.tp <= spec.hb_domain_size
