@@ -2,44 +2,12 @@
 other swept; egalitarian multi-workflow scheduling adapts the split."""
 from __future__ import annotations
 
-import statistics
-
+from benchmarks.common import joint_run
 from repro import hw
 from repro.core.scepsy import build_pipeline
 from repro.core.scheduler import SchedulerConfig, schedule_multi
-from repro.serving.deploy import routers_from_allocations
-from repro.serving.simulator import EventLoop
 from repro.workflows.beam_search import BEAM_SEARCH
 from repro.workflows.rag_reranker import RAG_RERANKER
-from repro.workflows.runtime import ClusterDriver
-
-
-def _joint_run(wf_allocs, rates, n_req, seed=0):
-    """wf_allocs: list of (Workflow, allocations)."""
-    loop = EventLoop()
-    drivers = {}
-    for wf, allocs in wf_allocs:
-        routers = routers_from_allocations(wf, allocs, loop)
-        drivers[wf.name] = ClusterDriver(wf, routers, loop)
-    # interleave arrivals of both workflows on one loop
-    import random
-
-    for wf, _ in wf_allocs:
-        drv = drivers[wf.name]
-        rng = random.Random(seed + hash(wf.name) % 1000)
-        t = 0.0
-        for rid in range(n_req):
-            loop.schedule(t, lambda rid=rid, d=drv: d._start(rid, seed))
-            t += rng.expovariate(rates[wf.name])
-    loop.run(1e5)
-    out = {}
-    for name, drv in drivers.items():
-        recs = [r for r in drv.records if r.done >= 0]
-        if recs:
-            out[name] = statistics.mean(r.latency for r in recs)
-        else:
-            out[name] = float("inf")
-    return out
 
 
 def run(quick: bool = False):
@@ -68,7 +36,8 @@ def run(quick: bool = False):
                 continue
             wf_allocs = [(wfs[n], res.per_workflow[n].allocations)
                          for n in pipes]
-            lats = _joint_run(wf_allocs, lams, n_req)
+            lats = {n: m["mean_latency_s"]
+                    for n, m in joint_run(wf_allocs, lams, n_req).items()}
             print(f"{fixed},{frate},{swept},{sr},"
                   f"{lats['beam_search']:.2f},{lats['rag_reranker']:.2f},"
                   f"\"{res.chip_split}\"")

@@ -68,6 +68,26 @@ def run(quick: bool = False):
         spec = hw.ClusterSpec(num_hosts=4, chips_per_host=4,
                               fractions_per_chip=frac)
         one("fractions_per_gpu", frac, _pipeline(3), spec)
+
+    # 4) option-table memoization: same assignment count, lower search
+    # time (best_option_for depends only on (llm, units), so its results
+    # are shared across enumerated splits)
+    print("memoize,num_llms,chips,search_time_s,evaluated")
+    for n_llms, spec in ((3, hw.PAPER_CLUSTER_16),
+                         (4, hw.PAPER_CLUSTER_16)):
+        evaluated = {}
+        for memo in (False, True):
+            cfg = SchedulerConfig(max_tp=spec.hb_domain_size, memoize=memo)
+            t0 = time.perf_counter()
+            res = schedule(_pipeline(n_llms), spec, lam_target=0.5,
+                           config=cfg)
+            dt = time.perf_counter() - t0
+            evaluated[memo] = res.evaluated
+            print(f"{memo},{n_llms},{spec.num_chips},{dt:.4f},"
+                  f"{res.evaluated}")
+            results.append((f"memoize_{memo}", n_llms, dt, res.evaluated))
+        assert evaluated[True] == evaluated[False], \
+            "memoization must not change the searched assignment count"
     return results
 
 

@@ -65,6 +65,37 @@ def measure(wf: Workflow, routers: Dict[str, Router], rate: float,
         completed=len(recs))
 
 
+def joint_run(wf_allocs, rates: Dict[str, float], n_req: int, *,
+              seed: int = 0, horizon: float = 1e5) -> Dict[str, dict]:
+    """Drive several workflows' ClusterDrivers on one shared EventLoop
+    (interleaved Poisson arrivals); per-workflow completion + mean
+    latency.  ``wf_allocs`` is a list of (Workflow, allocations)."""
+    import random
+
+    loop = EventLoop()
+    drivers: Dict[str, ClusterDriver] = {}
+    for wf, allocs in wf_allocs:
+        routers = routers_from_allocations(wf, allocs, loop)
+        drivers[wf.name] = ClusterDriver(wf, routers, loop)
+    for k, (wf, _) in enumerate(wf_allocs):
+        drv = drivers[wf.name]
+        rng = random.Random(seed * 1000 + k)
+        t = 0.0
+        for rid in range(n_req):
+            loop.schedule(t, lambda rid=rid, d=drv: d.start_request(rid, seed))
+            t += rng.expovariate(rates[wf.name])
+    loop.run(horizon)
+    out: Dict[str, dict] = {}
+    for name, drv in drivers.items():
+        recs = [r for r in drv.records if r.done >= 0]
+        out[name] = {
+            "completed": len(recs),
+            "mean_latency_s": (statistics.mean(r.latency for r in recs)
+                               if recs else math.inf),
+        }
+    return out
+
+
 def cluster_for(chips: int) -> hw.ClusterSpec:
     if chips <= 4:
         return hw.PAPER_CLUSTER_4

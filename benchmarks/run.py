@@ -16,10 +16,10 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_ablation, bench_combined, bench_e2e,
-                            bench_kernels, bench_multiplexing,
-                            bench_pipeline_accuracy, bench_roofline,
-                            bench_scheduler, bench_stability,
-                            bench_workflow_aware)
+                            bench_kernels, bench_multi_workflow,
+                            bench_multiplexing, bench_pipeline_accuracy,
+                            bench_roofline, bench_scheduler,
+                            bench_stability, bench_workflow_aware)
 
     sections = [
         ("fig3_stability", bench_stability),
@@ -29,6 +29,7 @@ def main() -> None:
         ("fig9_combined_workflows", bench_combined),
         ("fig10_ablation", bench_ablation),
         ("fig11_scheduler_search", bench_scheduler),
+        ("multi_workflow_fleet", bench_multi_workflow),
         ("pipeline_accuracy", bench_pipeline_accuracy),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),

@@ -1,0 +1,20 @@
+"""Repo-wide pytest config: auto-mark the long model-build/training
+parametrizations ``slow`` so ``pytest -m "not slow"`` gives a fast
+iteration tier.  Tier-1 CI runs the full suite (no deselection)."""
+import pytest
+
+# node-id substrings of the heavyweight tests (full model builds + jitted
+# train/decode steps; several seconds each on CPU)
+SLOW_NODE_PATTERNS = (
+    "test_models_smoke.py::",
+    "test_training.py::test_loss_decreases",
+    "test_substrates.py::test_engine_batched_equals_solo",
+    "test_substrates.py::test_training_resumes_identically",
+)
+
+
+def pytest_collection_modifyitems(config, items):
+    slow = pytest.mark.slow
+    for item in items:
+        if any(p in item.nodeid for p in SLOW_NODE_PATTERNS):
+            item.add_marker(slow)

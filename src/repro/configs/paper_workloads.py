@@ -1,7 +1,9 @@
-"""The paper's own workload LLMs (§7.1).
+"""Workload LLMs: the paper's own (§7.1) plus the agentic-fleet models.
 
 RAG+reranker: e5-base-v2 (embedder) + a reranker + Llama-3-8B (generator).
 Beam search:  Llama-3.2-1B (generator) + Llama-3.1-8B-PRM (verifier).
+Fleet workloads (ReAct agent / map-reduce / debate) additionally use a
+mid-size Qwen2.5-3B-shaped agent model.
 
 These are the models the Scepsy scheduler allocates in the end-to-end
 benchmarks.  The exact public configs are used so the analytical cost
@@ -82,7 +84,26 @@ RERANKER_MINILM = ArchConfig(
     source="hf:cross-encoder/ms-marco-MiniLM-L-6-v2",
 )
 
+# Mid-size tool-calling agent (Qwen2.5-3B shape) for the agentic-fleet
+# workloads — sits between the 1B drafters and the 8B generators so the
+# scheduler has three distinct model sizes to pack.
+QWEN_2_5_3B_AGENT = ArchConfig(
+    name="qwen2.5-3b-agent",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    d_ff=11008,
+    vocab_size=151_936,
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen2.5-3B-Instruct",
+)
+
 PAPER_LLMS = {
     c.name: c
-    for c in (LLAMA_3_2_1B, LLAMA_3_1_8B, LLAMA_3_1_8B_PRM, E5_BASE_V2, RERANKER_MINILM)
+    for c in (LLAMA_3_2_1B, LLAMA_3_1_8B, LLAMA_3_1_8B_PRM, E5_BASE_V2,
+              RERANKER_MINILM, QWEN_2_5_3B_AGENT)
 }

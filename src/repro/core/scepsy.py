@@ -46,6 +46,12 @@ def build_pipeline(wf: Workflow, *, n_trace_requests: int = 60,
     return pipeline, stats, store
 
 
+def _default_tp_degrees(spec: hw.ClusterSpec) -> list:
+    """TP degrees to profile: 1/2/4 capped by the hb domain, plus the
+    domain size itself (one grid for single-workflow and fleet deploys)."""
+    return sorted({1, 2, min(4, spec.hb_domain_size), spec.hb_domain_size})
+
+
 def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
            n_trace_requests: int = 60, seed: int = 0,
            scheduler_config: Optional[SchedulerConfig] = None,
@@ -54,13 +60,104 @@ def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
     """Full flow: returns the chosen allocation + concrete placement."""
     cfg = scheduler_config or SchedulerConfig(max_tp=spec.hb_domain_size)
     if pipeline is None:
-        tps = sorted({1, 2, min(4, spec.hb_domain_size),
-                      spec.hb_domain_size})
         pipeline, stats, _ = build_pipeline(
             wf, n_trace_requests=n_trace_requests,
-            tp_degrees=[t for t in tps if t >= 1], seed=seed)
+            tp_degrees=_default_tp_degrees(spec), seed=seed)
     else:
         stats = None
     result = schedule(pipeline, spec, lam_target, cfg)
     placement = place(result.allocations, spec)
     return ScepsyDeployment(wf.name, stats, pipeline, result, placement)
+
+
+@dataclass
+class ScepsyFleetDeployment:
+    """N workflows sharing one cluster via an egalitarian chip split.
+
+    Each per-workflow placement is *slice-local*: chip ids are numbered
+    from 0 within that workflow's sub-cluster.  ``chip_offsets`` maps a
+    workflow to the start of its (hb-domain-aligned, disjoint) slice of
+    the physical cluster; :meth:`global_instances` applies them.
+    """
+
+    deployments: Dict[str, ScepsyDeployment]
+    chip_split: Dict[str, int]
+    welfare: float
+    schedule: MultiScheduleResult
+    spec: Optional[hw.ClusterSpec] = None
+    chip_offsets: Dict[str, int] = None
+
+    def global_instances(self):
+        """Every placed instance with slice-local chip/host/domain ids
+        translated to physical cluster coordinates."""
+        import dataclasses as dc
+
+        out = []
+        for name, dep in self.deployments.items():
+            off = self.chip_offsets[name]
+            for inst in dep.placement.instances:
+                chips = [c + off for c in inst.chips]
+                out.append(dc.replace(
+                    inst, chips=chips,
+                    host=chips[0] // self.spec.chips_per_host,
+                    domain=chips[0] // self.spec.hb_domain_size))
+        return out
+
+
+def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
+                 lam_targets: Dict[str, float], *,
+                 n_trace_requests: int = 60, seed: int = 0,
+                 scheduler_config: Optional[SchedulerConfig] = None,
+                 pipelines: Optional[Dict[str, AggregateLLMPipeline]] = None,
+                 split_step: int = 1, search: str = "auto"
+                 ) -> ScepsyFleetDeployment:
+    """Fleet flow: trace/profile each workflow, split the cluster with
+    :func:`schedule_multi`, and place every workflow on its sub-cluster.
+
+    Placements are slice-local (see :class:`ScepsyFleetDeployment`);
+    the returned ``chip_offsets`` give each workflow a disjoint,
+    hb-domain-aligned range of physical chips so TP groups never span
+    a domain boundary after translation.
+    """
+    from repro.core.placement import PlacementError
+    from repro.core.scheduler import _subcluster
+
+    cfg = scheduler_config or SchedulerConfig(max_tp=spec.hb_domain_size)
+    stats_by_name: Dict[str, Optional[WorkflowStats]] = {}
+    if pipelines is None:
+        pipelines = {}
+        for wf in wfs:
+            pipeline, stats, _ = build_pipeline(
+                wf, n_trace_requests=n_trace_requests,
+                tp_degrees=_default_tp_degrees(spec), seed=seed)
+            pipelines[wf.name] = pipeline
+            stats_by_name[wf.name] = stats
+    else:
+        stats_by_name = {n: None for n in pipelines}
+    multi = schedule_multi(pipelines, spec, lam_targets, cfg,
+                           split_step=split_step, search=search)
+    deployments: Dict[str, ScepsyDeployment] = {}
+    for name, result in multi.per_workflow.items():
+        sub = _subcluster(spec, multi.chip_split[name])
+        placement = place(result.allocations, sub)
+        deployments[name] = ScepsyDeployment(
+            name, stats_by_name.get(name), pipelines[name], result,
+            placement)
+    # disjoint hb-domain-aligned slice starts (the split sums to the
+    # cluster, and _subcluster truncation leaves slack, so the aligned
+    # layout fits except in pathological many-tiny-workflow cases)
+    dom = spec.hb_domain_size
+    offsets: Dict[str, int] = {}
+    cursor = 0
+    for name in multi.chip_split:
+        used = 1 + max((c for inst in deployments[name].placement.instances
+                        for c in inst.chips), default=0)
+        offsets[name] = cursor
+        cursor += (used + dom - 1) // dom * dom
+    if cursor > spec.num_chips:
+        raise PlacementError(
+            f"fleet needs {cursor} chips for disjoint hb-aligned slices, "
+            f"cluster has {spec.num_chips}")
+    return ScepsyFleetDeployment(deployments, multi.chip_split,
+                                 multi.welfare, multi, spec=spec,
+                                 chip_offsets=offsets)

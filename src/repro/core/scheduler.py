@@ -37,6 +37,7 @@ class SchedulerConfig:
     max_assignments: int = 200_000  # hard cap on enumerated unit splits
     allow_fractional: bool = True  # ablation: co-location via GPU fractions
     allow_parallelism: bool = True  # ablation: TP > 1
+    memoize: bool = True  # cache best_option_for(m, units) across splits
 
 
 @dataclass
@@ -130,8 +131,24 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
     best_infeasible: Optional[Tuple[float, Dict[str, Allocation], Prediction,
                                     Dict[str, int]]] = None
 
+    # best_option_for depends only on (m, units) — not on the rest of the
+    # assignment being scored — so its result is shared across every
+    # enumerated unit split (and the slack post-pass).  On large clusters
+    # this collapses the search's hot path from O(splits × options) to
+    # O(distinct (m, units) × options) option scans.
+    option_cache: Dict[Tuple[str, int],
+                       Optional[Tuple[Allocation, float, float]]] = {}
+
     def best_option_for(m: str, units: int) -> Optional[Tuple[Allocation, float, float]]:
         """(alloc, latency_contrib, llm_tput) minimizing latency s.t. tput."""
+        if config.memoize:
+            key = (m, units)
+            if key not in option_cache:
+                option_cache[key] = _best_option_uncached(m, units)
+            return option_cache[key]
+        return _best_option_uncached(m, units)
+
+    def _best_option_uncached(m: str, units: int) -> Optional[Tuple[Allocation, float, float]]:
         st = pipeline.stages[m]
         opts = _parallelism_options(st.cfg, units, spec, lo[m], max_tp,
                                     config.allow_fractional)
@@ -272,57 +289,264 @@ class MultiScheduleResult:
     chip_split: Dict[str, int]
     welfare: float
     search_time_s: float
+    utilities: Dict[str, float] = field(default_factory=dict)
+    evaluated_splits: int = 0
+    schedule_calls: int = 0
+    search_mode: str = "enumerate"
 
 
 def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
                    spec: hw.ClusterSpec, lam_targets: Dict[str, float],
                    config: SchedulerConfig = SchedulerConfig(),
-                   split_step: int = 1) -> MultiScheduleResult:
-    """Split the cluster between workflows; egalitarian (max-min) welfare.
+                   split_step: int = 1, *,
+                   search: str = "auto",
+                   max_enumerated_splits: int = 4096) -> MultiScheduleResult:
+    """Split the cluster between N >= 2 workflows; egalitarian welfare.
 
     Utility of a workflow = L_ref / L (reference = its latency given the
-    whole cluster), so utilities are comparable across workflows.
+    whole cluster), so utilities are comparable across workflows; welfare
+    is the minimum utility (max-min fairness).
+
+    Small composition spaces are enumerated exhaustively — for two
+    workflows this reproduces the paper's evaluated 2-way split exactly.
+    Larger fleets/clusters fall back to greedy water-filling on welfare
+    (seeded proportionally to per-workflow demand) with local-exchange
+    refinement.  Either way, per-(workflow, chips) schedules are computed
+    once and shared across every split candidate.
     """
     t0 = time.perf_counter()
     names = list(pipelines)
-    assert len(names) == 2, "enumerated split supports 2 workflows (paper's eval)"
-    a, b = names
-    refs = {}
-    for n in names:
-        r = schedule(pipelines[n], spec, lam_targets[n], config)
-        refs[n] = r.prediction.latency if r.feasible else math.inf
+    if len(names) < 2:
+        raise ValueError("schedule_multi needs >= 2 workflows")
+    if search not in ("auto", "enumerate", "greedy"):
+        raise ValueError(f"unknown search mode {search!r}")
+    missing = [n for n in names if n not in lam_targets]
+    if missing:
+        raise ValueError(f"no arrival-rate target for workflows {missing}")
+    G = spec.num_chips
 
     lo_chips = {
-        n: math.ceil(sum(cm.min_fraction_units(pipelines[n].stages[m].cfg, spec)
-                         for m in pipelines[n].stages)
-                     / spec.fractions_per_chip)
+        n: _min_chips_for_units(
+            sum(cm.min_fraction_units(pipelines[n].stages[m].cfg, spec)
+                for m in pipelines[n].stages), spec)
         for n in names
     }
-    G = spec.num_chips
-    best = None
-    for ca in range(lo_chips[a], G - lo_chips[b] + 1, split_step):
-        cb = G - ca
-        sub_a = _subcluster(spec, ca)
-        sub_b = _subcluster(spec, cb)
-        try:
-            ra = schedule(pipelines[a], sub_a, lam_targets[a], config)
-            rb = schedule(pipelines[b], sub_b, lam_targets[b], config)
-        except (ValueError, RuntimeError):
-            continue
-        utils = {}
-        for n, r in ((a, ra), (b, rb)):
-            if not r.feasible or not math.isfinite(r.prediction.latency):
-                utils[n] = 0.0
-            else:
-                utils[n] = min(refs[n] / r.prediction.latency, 1.0) if refs[n] > 0 else 0.0
-        welfare = min(utils.values())  # egalitarian
+    if sum(lo_chips.values()) > G:
+        raise ValueError(
+            f"cluster too small for {len(names)} workflows: need "
+            f">= {sum(lo_chips.values())} chips, have {G}")
+
+    # reference schedules (whole cluster each) double as cache seeds
+    stats = {"schedule_calls": 0, "evaluated_splits": 0}
+    sched_cache: Dict[Tuple[str, int], Optional[ScheduleResult]] = {}
+
+    def sched(n: str, chips: int) -> Optional[ScheduleResult]:
+        if chips < lo_chips[n]:
+            return None
+        # key on the chip count _subcluster actually models: counts that
+        # truncate to the same sub-cluster (9, 10, 11 -> 8 on a
+        # 4-chip/host spec) share one search
+        key = (n, _effective_chips(spec, chips))
+        if key not in sched_cache:
+            stats["schedule_calls"] += 1
+            try:
+                sched_cache[key] = schedule(
+                    pipelines[n], _subcluster(spec, chips),
+                    lam_targets[n], config)
+            except (ValueError, RuntimeError):
+                sched_cache[key] = None
+        return sched_cache[key]
+
+    refs = {}
+    for n in names:
+        r = sched(n, G)
+        refs[n] = (r.prediction.latency
+                   if r is not None and r.feasible else math.inf)
+
+    def utility(n: str, r: Optional[ScheduleResult]) -> float:
+        if (r is None or not r.feasible
+                or not math.isfinite(r.prediction.latency)
+                or r.prediction.latency <= 0):
+            return 0.0
+        if refs[n] <= 0:
+            return 0.0
+        return min(refs[n] / r.prediction.latency, 1.0)
+
+    def score(split: Dict[str, int]):
+        """(welfare, utils, per-workflow results) or None if any schedule
+        call failed outright for this split."""
+        stats["evaluated_splits"] += 1
+        per: Dict[str, ScheduleResult] = {}
+        for n in names:
+            r = sched(n, split[n])
+            if r is None:
+                return None
+            per[n] = r
+        utils = {n: utility(n, per[n]) for n in names}
+        return min(utils.values()), utils, per
+
+    best: Optional[Tuple[float, Dict[str, float], Dict[str, ScheduleResult],
+                         Dict[str, int]]] = None
+
+    def consider(split: Dict[str, int]) -> None:
+        nonlocal best
+        s = score(split)
+        if s is None:
+            return
+        welfare, utils, per = s
         if best is None or welfare > best[0]:
-            best = (welfare, {a: ra, b: rb}, {a: ca, b: cb})
+            best = (welfare, utils, per, dict(split))
+
+    splits = (None if search == "greedy"
+              else _enumerate_splits(names, lo_chips, G, split_step,
+                                     max_enumerated_splits))
+    if splits is None and search == "enumerate":
+        raise ValueError(
+            f"enumeration bound {max_enumerated_splits} exceeded; use "
+            "search='auto'/'greedy' or raise max_enumerated_splits")
+    mode = "enumerate" if splits is not None else "greedy"
+    if splits is not None:
+        for split in splits:
+            consider(split)
+    else:
+        for split in _greedy_splits(names, lo_chips, G, split_step,
+                                    lam_targets, refs, sched, utility):
+            consider(split)
     if best is None:
         raise RuntimeError("no feasible multi-workflow split")
-    welfare, per_wf, split = best
+    welfare, utils, per_wf, split = best
     return MultiScheduleResult(per_wf, split, welfare,
-                               time.perf_counter() - t0)
+                               time.perf_counter() - t0,
+                               utilities=utils,
+                               evaluated_splits=stats["evaluated_splits"],
+                               schedule_calls=stats["schedule_calls"],
+                               search_mode=mode)
+
+
+def _effective_chips(spec: hw.ClusterSpec, chips: int) -> int:
+    """Chip count :func:`_subcluster` actually provides (partial hosts
+    beyond the first are truncated)."""
+    cph = spec.chips_per_host
+    return chips if chips <= cph else (chips // cph) * cph
+
+
+def _min_chips_for_units(units_needed: int, spec: hw.ClusterSpec) -> int:
+    """Smallest chip count whose :func:`_subcluster` actually provides
+    ``units_needed`` fraction units.
+
+    ``_subcluster`` truncates partial hosts beyond the first, so chip
+    counts between host multiples provide no more units than the multiple
+    below them — a lower bound that ignores this can strand the greedy
+    split search on slices that can never become feasible.
+    """
+    chips = max(math.ceil(units_needed / spec.fractions_per_chip), 1)
+    cph = spec.chips_per_host
+    if chips <= cph:
+        return chips
+    return math.ceil(chips / cph) * cph
+
+
+def _enumerate_splits(names: Sequence[str], lo: Dict[str, int], G: int,
+                      step: int, cap: int) -> Optional[List[Dict[str, int]]]:
+    """All N-way chip compositions (step granularity, remainder to the
+    last workflow), or None if there are more than ``cap``."""
+    out: List[Dict[str, int]] = []
+    tails = {n: sum(lo[m] for m in names[i + 1:])
+             for i, n in enumerate(names)}
+
+    def rec(i: int, remaining: int, cur: Dict[str, int]) -> bool:
+        n = names[i]
+        if i == len(names) - 1:
+            if remaining >= lo[n]:
+                if len(out) >= cap:
+                    return False
+                out.append({**cur, n: remaining})
+            return True
+        for c in range(lo[n], remaining - tails[n] + 1, step):
+            cur[n] = c
+            if not rec(i + 1, remaining - c, cur):
+                return False
+        cur.pop(n, None)
+        return True
+
+    if not rec(0, G, {}):
+        return None
+    return out
+
+
+def _greedy_splits(names: Sequence[str], lo: Dict[str, int], G: int,
+                   step: int, lam_targets: Dict[str, float],
+                   refs: Dict[str, float], sched, utility):
+    """Candidate splits from greedy water-filling + local exchange.
+
+    Yields complete splits (the caller keeps the best-scoring one):
+      1. a proportional seed — lower bounds plus the leftover split by
+         demand weight lam_n * L_ref,n (offered work per workflow);
+      2. water-filling — chips granted ``step`` at a time to whichever
+         workflow raises egalitarian welfare most (ties: largest own
+         utility gain, then heaviest demand);
+      3. local exchange — chip moves between workflow pairs kept while
+         they strictly improve welfare.
+    """
+    weight = {}
+    for n in names:
+        ref = refs[n] if math.isfinite(refs[n]) and refs[n] > 0 else 1.0
+        weight[n] = max(lam_targets[n], 1e-9) * ref
+    total_w = sum(weight.values()) or 1.0
+
+    split = dict(lo)
+    pool = G - sum(split.values())
+    # 1) proportional seed, floored to step multiples so water-filling
+    # keeps granularity
+    for n in names:
+        give = int(pool * weight[n] / total_w) // step * step
+        split[n] += give
+    pool = G - sum(split.values())
+
+    # 2) water-filling on welfare
+    while pool > 0:
+        g = min(step, pool)
+        cur_util = {n: utility(n, sched(n, split[n])) for n in names}
+        best_n, best_key = None, None
+        for n in names:
+            new_u = utility(n, sched(n, split[n] + g))
+            new_welfare = min(new_u,
+                              min(cur_util[m] for m in names if m != n))
+            key = (new_welfare, new_u - cur_util[n], weight[n])
+            if best_key is None or key > best_key:
+                best_n, best_key = n, key
+        split[best_n] += g
+        pool -= g
+    yield dict(split)
+
+    # 3) local-exchange refinement
+    def welfare_of(sp: Dict[str, int]) -> float:
+        us = []
+        for n in names:
+            r = sched(n, sp[n])
+            if r is None:
+                return -math.inf
+            us.append(utility(n, r))
+        return min(us)
+
+    cur = welfare_of(split)
+    max_rounds = 2 * len(names) * len(names)
+    for _ in range(max_rounds):
+        improved = False
+        for i in names:
+            for j in names:
+                if i == j or split[i] - step < lo[i]:
+                    continue
+                cand = dict(split)
+                cand[i] -= step
+                cand[j] += step
+                w = welfare_of(cand)
+                if w > cur + 1e-12:
+                    split, cur = cand, w
+                    yield dict(split)
+                    improved = True
+        if not improved:
+            break
 
 
 def _subcluster(spec: hw.ClusterSpec, chips: int) -> hw.ClusterSpec:

@@ -20,6 +20,7 @@ Usage:
 Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
 """
 import argparse
+import contextlib
 import json
 import re
 import time
@@ -92,9 +93,23 @@ def pick_microbatches(cfg: ArchConfig, shape: InputShape, mesh) -> int:
 # ---------------------------------------------------------------------------
 
 
+@contextlib.contextmanager
+def _mesh_context(mesh):
+    """Enter the mesh — and, where the installed JAX has it, the
+    abstract-mesh context that newer shard_hint paths read.  Older JAX
+    (no ``use_abstract_mesh``) exposes the physical mesh to tracing via
+    the pxla thread-resources env, which shard_hint falls back to."""
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(mesh)
+        use_am = getattr(jax.sharding, "use_abstract_mesh", None)
+        if use_am is not None:
+            stack.enter_context(use_am(mesh.abstract_mesh))
+        yield
+
+
 def lower_cell(cfg: ArchConfig, shape: InputShape, mesh, mesh_name: str):
     t0 = time.time()
-    with mesh, jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+    with _mesh_context(mesh):
         if shape.kind == "train":
             nmb = pick_microbatches(cfg, shape, mesh)
             bundle = build_model(cfg, num_microbatches=nmb)
@@ -165,6 +180,9 @@ def lower_cell(cfg: ArchConfig, shape: InputShape, mesh, mesh_name: str):
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # older JAX returns one dict per device program in a list
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled)
     from repro.analysis.hlo_stats import analyze_compiled
     hlo = analyze_compiled(compiled)

@@ -54,6 +54,29 @@ AXIS_MODEL = "model"
 BATCH_AXES = (AXIS_POD, AXIS_DATA)
 
 
+def _ambient_mesh_axis_names() -> set:
+    """Axis names of the ambient mesh, across JAX versions.
+
+    ``jax.sharding.get_abstract_mesh`` only exists in newer JAX; older
+    releases expose the ambient mesh via the pxla thread-resources env.
+    Outside any mesh context (or if neither API exists) returns the empty
+    set, making :func:`shard_hint` a no-op hint.
+    """
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        mesh = get_am()
+        return set(getattr(mesh, "axis_names", ()) or ())
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return set(mesh.axis_names)
+    except (ImportError, AttributeError):
+        pass
+    return set()
+
+
 def shard_hint(x: jax.Array, *entries) -> jax.Array:
     """with_sharding_constraint against whatever mesh axes exist.
 
@@ -61,8 +84,7 @@ def shard_hint(x: jax.Array, *entries) -> jax.Array:
     from the ambient mesh are dropped, and with no mesh this is a no-op —
     so model code can carry sharding hints without breaking CPU tests.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    names = set(getattr(mesh, "axis_names", ()) or ())
+    names = _ambient_mesh_axis_names()
     if not names:
         return x
 

@@ -1,0 +1,31 @@
+"""Workflow registry: every servable workload by name.
+
+The fleet scheduler (:func:`repro.core.scheduler.schedule_multi`) and the
+benchmarks look workloads up here, so adding a scenario is one module +
+one entry.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.workflows.beam_search import BEAM_SEARCH
+from repro.workflows.debate import DEBATE
+from repro.workflows.map_reduce import MAP_REDUCE
+from repro.workflows.rag_reranker import RAG_RERANKER
+from repro.workflows.react_agent import REACT_AGENT
+from repro.workflows.runtime import Workflow
+
+WORKFLOWS: Dict[str, Workflow] = {
+    wf.name: wf
+    for wf in (BEAM_SEARCH, RAG_RERANKER, REACT_AGENT, MAP_REDUCE, DEBATE)
+}
+
+
+def get_workflow(name: str) -> Workflow:
+    if name not in WORKFLOWS:
+        raise KeyError(f"unknown workflow {name!r}; known: {sorted(WORKFLOWS)}")
+    return WORKFLOWS[name]
+
+
+def workflow_names() -> List[str]:
+    return sorted(WORKFLOWS)

@@ -153,6 +153,11 @@ class ClusterDriver:
         self.loop.run(until)
         return [r for r in self.records if r.done >= 0]
 
+    def start_request(self, rid: int, seed: int = 0) -> None:
+        """Begin one workflow-level request now (external arrival
+        control — e.g. several drivers interleaved on one loop)."""
+        self._start(rid, seed)
+
     def _start(self, rid: int, seed: int) -> None:
         rec = RequestRecord(rid, self.loop.now)
         self.records.append(rec)

@@ -1,6 +1,11 @@
 """Hypothesis property tests on the system's invariants."""
 import math
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; skip where absent")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,245 @@
+"""Scheduler search tests: option-table memoization parity, N-workflow
+egalitarian splits (incl. 2-workflow parity with the enumerated loop),
+welfare monotonicity, and infeasible-cluster error paths.
+
+Synthetic analytic profiles (no discrete-event replay) keep these fast
+and deterministic — only the search itself is under test.
+"""
+import math
+
+import pytest
+
+from repro import hw
+from repro.configs.base import ArchConfig
+from repro.core.pipeline import AggregateLLMPipeline, PipelineStage
+from repro.core.profiler import LLMProfile, TPProfile
+from repro.core.scheduler import (SchedulerConfig, _min_chips_for_units,
+                                  _subcluster, schedule, schedule_multi)
+from repro.serving import costmodel as cm
+
+
+def _synthetic_stage(name: str, size_gb: float, n: float = 4.0,
+                     p: float = 2.0, cfg: ArchConfig = None) -> PipelineStage:
+    """Analytic M/M/1-flavored profile for a model of the given size."""
+    base_lat = 0.05 * size_gb
+    t_max = 40.0 / size_gb
+    by_tp = {}
+    for tp in (1, 2):
+        tmax = t_max * (tp ** 0.85)
+        rates = [f * tmax for f in (0.1, 0.3, 0.5, 0.7, 0.9)]
+        lat = [base_lat / tp / max(1 - r / tmax, 0.05) for r in rates]
+        by_tp[tp] = TPProfile(tp=tp, rates=rates,
+                              latency={"mean": lat, "p50": lat,
+                                       "p90": [2 * x for x in lat],
+                                       "p99": [4 * x for x in lat]},
+                              max_throughput=tmax)
+    if cfg is None:
+        cfg = ArchConfig(name=name, family="dense", num_layers=16,
+                         d_model=2048, num_heads=16, num_kv_heads=8,
+                         d_ff=8192, vocab_size=32_000)
+    prof = LLMProfile(llm=name, arch=name, calls_per_group=n, by_tp=by_tp)
+    return PipelineStage(llm=name, cfg=cfg, n=n, p=p, profile=prof,
+                         mean_share=1.0)
+
+
+def _pipeline(tag: str, sizes, n: float = 2.0) -> AggregateLLMPipeline:
+    stages = [_synthetic_stage(f"{tag}-m{i}", s, n=n + i)
+              for i, s in enumerate(sizes)]
+    return AggregateLLMPipeline(tag, stages)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return {
+        "wf0": _pipeline("wf0", (1.0, 4.0)),
+        "wf1": _pipeline("wf1", (2.0, 3.0)),
+        "wf2": _pipeline("wf2", (1.5, 5.0)),
+    }
+
+
+LAMS = {"wf0": 0.5, "wf1": 0.3, "wf2": 0.4}
+
+
+# ---------------------------------------------------------------------------
+# memoization parity
+# ---------------------------------------------------------------------------
+
+
+def test_memoized_search_matches_brute_recomputation(fleet):
+    pipe = _pipeline("memo", (1.0, 3.0, 6.0))
+    spec = hw.PAPER_CLUSTER_8
+    results = {}
+    for memo in (False, True):
+        cfg = SchedulerConfig(max_tp=2, memoize=memo)
+        results[memo] = schedule(pipe, spec, 0.4, cfg)
+    a, b = results[False], results[True]
+    assert a.evaluated == b.evaluated
+    assert a.units == b.units
+    assert a.allocations == b.allocations
+    assert a.feasible == b.feasible
+    assert a.prediction.latency == pytest.approx(b.prediction.latency)
+
+
+# ---------------------------------------------------------------------------
+# N-workflow splits
+# ---------------------------------------------------------------------------
+
+
+def _seed_two_way_loop(pipelines, spec, lam_targets, config, split_step=1):
+    """The pre-generalization enumerated 2-workflow split, verbatim
+    semantics: first strictly-better split wins."""
+    names = list(pipelines)
+    a, b = names
+    refs = {}
+    for n in names:
+        r = schedule(pipelines[n], spec, lam_targets[n], config)
+        refs[n] = r.prediction.latency if r.feasible else math.inf
+    lo_chips = {
+        n: math.ceil(sum(cm.min_fraction_units(pipelines[n].stages[m].cfg,
+                                               spec)
+                         for m in pipelines[n].stages)
+                     / spec.fractions_per_chip)
+        for n in names
+    }
+    G = spec.num_chips
+    best = None
+    for ca in range(lo_chips[a], G - lo_chips[b] + 1, split_step):
+        cb = G - ca
+        try:
+            ra = schedule(pipelines[a], _subcluster(spec, ca),
+                          lam_targets[a], config)
+            rb = schedule(pipelines[b], _subcluster(spec, cb),
+                          lam_targets[b], config)
+        except (ValueError, RuntimeError):
+            continue
+        utils = {}
+        for n, r in ((a, ra), (b, rb)):
+            if not r.feasible or not math.isfinite(r.prediction.latency):
+                utils[n] = 0.0
+            else:
+                utils[n] = (min(refs[n] / r.prediction.latency, 1.0)
+                            if refs[n] > 0 else 0.0)
+        welfare = min(utils.values())
+        if best is None or welfare > best[0]:
+            best = (welfare, {a: ca, b: cb})
+    assert best is not None
+    return best
+
+
+@pytest.mark.parametrize("split_step", (1, 2))
+def test_two_workflow_parity_with_enumerated_loop(fleet, split_step):
+    pipes = {n: fleet[n] for n in ("wf0", "wf1")}
+    cfg = SchedulerConfig(max_tp=2)
+    spec = hw.PAPER_CLUSTER_16
+    want_welfare, want_split = _seed_two_way_loop(pipes, spec, LAMS, cfg,
+                                                  split_step)
+    res = schedule_multi(pipes, spec, LAMS, cfg, split_step=split_step)
+    assert res.search_mode == "enumerate"
+    assert res.chip_split == want_split
+    assert res.welfare == pytest.approx(want_welfare)
+
+
+def test_three_workflow_split_partitions_cluster(fleet):
+    spec = hw.PAPER_CLUSTER_16
+    res = schedule_multi(fleet, spec, LAMS, SchedulerConfig(max_tp=2))
+    assert sum(res.chip_split.values()) == spec.num_chips
+    assert set(res.chip_split) == set(fleet)
+    assert 0.0 <= res.welfare <= 1.0
+    assert res.welfare == pytest.approx(min(res.utilities.values()))
+    for r in res.per_workflow.values():
+        assert r.feasible
+
+
+def test_greedy_search_close_to_enumeration(fleet):
+    spec = hw.PAPER_CLUSTER_16
+    cfg = SchedulerConfig(max_tp=2)
+    enum = schedule_multi(fleet, spec, LAMS, cfg, search="enumerate")
+    greedy = schedule_multi(fleet, spec, LAMS, cfg, search="greedy")
+    assert greedy.search_mode == "greedy"
+    assert greedy.welfare >= enum.welfare * 0.9
+    # greedy explores far fewer splits than full enumeration
+    assert greedy.schedule_calls <= enum.schedule_calls
+
+
+def test_min_chips_host_aligned():
+    spec = hw.PAPER_CLUSTER_16  # 4 chips/host, F=10
+    assert _min_chips_for_units(10, spec) == 1
+    assert _min_chips_for_units(40, spec) == 4
+    # 41-80 units need 5-8 chips, but _subcluster truncates partial
+    # hosts — the floor must jump to the next full-host multiple
+    assert _min_chips_for_units(41, spec) == 8
+    assert _min_chips_for_units(61, spec) == 8
+    assert _min_chips_for_units(81, spec) == 12
+
+
+def test_greedy_survives_host_misaligned_memory_floor():
+    """A workflow whose memory floor lands between host multiples (four
+    1.5-chip stages -> 6 chips on a 4-chip/host cluster) must not strand
+    the greedy search on slices _subcluster truncates into
+    infeasibility."""
+    spec = hw.PAPER_CLUSTER_16
+    mid_cfg = ArchConfig(name="mid", family="dense", num_layers=48,
+                         d_model=4096, num_heads=32, num_kv_heads=8,
+                         d_ff=14336, vocab_size=32_000)
+    units = cm.min_fraction_units(mid_cfg, spec)
+    F = spec.fractions_per_chip
+    assert units <= 2 * F  # each stage still fits one tp<=2 replica
+    total = 4 * units
+    assert spec.chips_per_host * F < total  # floor crosses a host and
+    assert total % (spec.chips_per_host * F)  # is not host-aligned
+    pipes = {
+        "big": AggregateLLMPipeline(
+            "big", [_synthetic_stage(f"big-m{i}", 4.0, n=1.0, cfg=mid_cfg)
+                    for i in range(4)]),
+        "small": _pipeline("small", (1.0,)),
+    }
+    lams = {"big": 0.2, "small": 0.3}
+    res = schedule_multi(pipes, spec, lams, SchedulerConfig(max_tp=2),
+                         search="greedy")
+    assert res.chip_split["big"] >= 8  # full-host-aligned floor
+    assert res.welfare > 0.0
+
+
+def test_welfare_monotone_in_cluster_size(fleet):
+    cfg = SchedulerConfig(max_tp=2)
+    small = schedule_multi(fleet, hw.PAPER_CLUSTER_8, LAMS, cfg)
+    large = schedule_multi(fleet, hw.PAPER_CLUSTER_16, LAMS, cfg)
+    assert large.welfare >= small.welfare - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# error paths
+# ---------------------------------------------------------------------------
+
+
+def test_single_workflow_rejected(fleet):
+    with pytest.raises(ValueError, match=">= 2 workflows"):
+        schedule_multi({"wf0": fleet["wf0"]}, hw.PAPER_CLUSTER_8,
+                       LAMS, SchedulerConfig(max_tp=2))
+
+
+def test_missing_rate_target_rejected(fleet):
+    pipes = {n: fleet[n] for n in ("wf0", "wf1")}
+    with pytest.raises(ValueError, match="arrival-rate target"):
+        schedule_multi(pipes, hw.PAPER_CLUSTER_8, {"wf0": 0.5},
+                       SchedulerConfig(max_tp=2))
+
+
+def test_unknown_search_mode_rejected(fleet):
+    pipes = {n: fleet[n] for n in ("wf0", "wf1")}
+    with pytest.raises(ValueError, match="search mode"):
+        schedule_multi(pipes, hw.PAPER_CLUSTER_8, LAMS,
+                       SchedulerConfig(max_tp=2), search="annealing")
+
+
+def test_cluster_too_small_for_fleet_raises(fleet):
+    tiny = hw.ClusterSpec(num_hosts=1, chips_per_host=1)
+    with pytest.raises(ValueError, match="too small"):
+        schedule_multi(fleet, tiny, LAMS, SchedulerConfig(max_tp=1))
+
+
+def test_enumeration_bound_enforced(fleet):
+    with pytest.raises(ValueError, match="enumeration bound"):
+        schedule_multi(fleet, hw.PAPER_CLUSTER_16, LAMS,
+                       SchedulerConfig(max_tp=2), search="enumerate",
+                       max_enumerated_splits=3)
