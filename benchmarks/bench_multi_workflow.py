@@ -1,17 +1,24 @@
 """Fleet scheduling — N agentic workflows share one cluster.
 
-Schedules a 3-workflow (quick) or 4-workflow fleet on 16 chips with the
-egalitarian N-way split search, then drives all workflows jointly on one
-event loop through their scheduled allocations.  Emits one JSON document
-per fleet with the chip split, welfare, per-workflow predicted + measured
-latency, and search-time/counter diagnostics.
+Two sections, one JSON document:
+
+  * ``fleet`` — the PR-1 egalitarian N-way *partitioned* split on 16
+    chips, driven jointly on one event loop (kept as the baseline);
+  * ``pooled_vs_partitioned`` — the 3-workflow registry fleet
+    (react_agent / map_reduce / debate, all serving the same 1B/8B
+    configs) scheduled per allocation mode over growing pod sizes:
+    partitioned split vs pooled multi-tenant allocation vs auto.  For
+    each size the welfare of every mode, the auto pick, and the jointly
+    *measured* per-workflow latencies (private replicas for the
+    partitioned split, shared tenant replicas + routing tables for the
+    pool) are reported.
 """
 from __future__ import annotations
 
 import json
 import time
 
-from benchmarks.common import joint_run
+from benchmarks.common import cluster_for, joint_run, joint_run_pooled
 from repro import hw
 from repro.core.scepsy import build_pipeline
 from repro.core.scheduler import SchedulerConfig, schedule_multi
@@ -22,13 +29,11 @@ QUICK_FLEET = (("beam_search", 0.15), ("rag_reranker", 2.0),
                ("react_agent", 0.5))
 FULL_FLEET = QUICK_FLEET + (("map_reduce", 0.4),)
 
+# the pooling showcase: every workflow serves the same 1B/8B configs
+REGISTRY_FLEET = (("react_agent", 0.5), ("map_reduce", 0.4), ("debate", 0.8))
 
-def run(quick: bool = False):
-    fleet = QUICK_FLEET if quick else FULL_FLEET
-    spec = hw.PAPER_CLUSTER_16
-    n_req = 20 if quick else 50
-    lams = dict(fleet)
 
+def _build(fleet, quick: bool):
     pipes, wfs = {}, {}
     for name, _ in fleet:
         wf = get_workflow(name)
@@ -36,6 +41,15 @@ def run(quick: bool = False):
         pipes[name], _, _ = build_pipeline(
             wf, n_trace_requests=12 if quick else 30, tp_degrees=(1, 2),
             max_profile_groups=10 if quick else 30)
+    return pipes, wfs
+
+
+def _fleet_section(quick: bool):
+    fleet = QUICK_FLEET if quick else FULL_FLEET
+    spec = hw.PAPER_CLUSTER_16
+    n_req = 20 if quick else 50
+    lams = dict(fleet)
+    pipes, wfs = _build(fleet, quick)
 
     t0 = time.perf_counter()
     res = schedule_multi(pipes, spec, lams, SchedulerConfig(max_tp=2),
@@ -44,7 +58,7 @@ def run(quick: bool = False):
 
     measured = joint_run([(wfs[n], res.per_workflow[n].allocations)
                           for n in pipes], lams, n_req)
-    doc = {
+    return {
         "benchmark": "multi_workflow_fleet",
         "cluster_chips": spec.num_chips,
         "num_workflows": len(fleet),
@@ -67,6 +81,72 @@ def run(quick: bool = False):
             for n in pipes
         ],
     }
+
+
+def _pooled_section(quick: bool):
+    lams = dict(REGISTRY_FLEET)
+    n_req = 20 if quick else 50
+    pipes, wfs = _build(REGISTRY_FLEET, quick)
+    cfg = SchedulerConfig(max_tp=2)
+    sizes = (16,) if quick else (16, 32, 64)
+    rows = []
+    for chips in sizes:
+        spec = cluster_for(chips)
+        per_mode = {}
+        for mode in ("partitioned", "pooled", "auto"):
+            t0 = time.perf_counter()
+            per_mode[mode] = (schedule_multi(pipes, spec, lams, cfg,
+                                             mode=mode),
+                              time.perf_counter() - t0)
+        part, part_t = per_mode["partitioned"]
+        pooled, pooled_t = per_mode["pooled"]
+        auto, auto_t = per_mode["auto"]
+        meas_part = joint_run([(wfs[n], part.per_workflow[n].allocations)
+                               for n in pipes], lams, n_req)
+        meas_pooled = (joint_run_pooled(wfs, pooled.pooled, lams, n_req)
+                       if pooled.alloc_mode == "pooled" else meas_part)
+        rows.append({
+            "cluster_chips": chips,
+            "welfare_partitioned": part.welfare,
+            "welfare_pooled": pooled.welfare,
+            "welfare_auto": auto.welfare,
+            "auto_picked": auto.alloc_mode,
+            "welfare_by_mode": auto.welfare_by_mode,
+            "pooled_gain": pooled.welfare - part.welfare,
+            "search_time_s": {"partitioned": part_t, "pooled": pooled_t,
+                              "auto": auto_t},
+            "tenants": ({cid: {"replicas": a.replicas, "tp": a.tp,
+                               "fraction": a.fraction}
+                         for cid, a in pooled.pooled.allocations.items()}
+                        if pooled.pooled else None),
+            "chip_share_pooled": (pooled.pooled.chip_share
+                                  if pooled.pooled else None),
+            "workflows": [
+                {
+                    "name": n,
+                    "lam_target": lams[n],
+                    "utility_partitioned": part.utilities.get(n),
+                    "utility_pooled": pooled.utilities.get(n),
+                    "predicted_latency_partitioned_s":
+                        part.per_workflow[n].prediction.latency,
+                    "predicted_latency_pooled_s":
+                        pooled.per_workflow[n].prediction.latency,
+                    "measured_partitioned_s":
+                        meas_part[n]["mean_latency_s"],
+                    "measured_pooled_s": meas_pooled[n]["mean_latency_s"],
+                    "completed_pooled": meas_pooled[n]["completed"],
+                }
+                for n in pipes
+            ],
+        })
+    return {"benchmark": "pooled_vs_partitioned",
+            "fleet": [n for n, _ in REGISTRY_FLEET],
+            "clusters": rows}
+
+
+def run(quick: bool = False):
+    doc = _fleet_section(quick)
+    doc["pooled_vs_partitioned"] = _pooled_section(quick)
     print(json.dumps(doc, indent=2))
     return doc
 

@@ -1,15 +1,21 @@
 """Fig. 11 — GPU-scheduler search time scaling: #LLMs, #GPUs, fractions
-per GPU.  Synthetic analytic profiles so only the search is measured."""
+per GPU.  Synthetic analytic profiles so only the search is measured.
+
+Also reports the fleet split search's warm-start delta: sharing each
+workflow's best_option_for table across the sub-cluster sizes the
+water-filling loop visits (the table depends only on (stage, units),
+never on the chip count)."""
 from __future__ import annotations
 
 import math
 import time
 
+from benchmarks.common import cluster_for
 from repro import hw
 from repro.configs.base import ArchConfig
 from repro.core.pipeline import AggregateLLMPipeline, PipelineStage
 from repro.core.profiler import LLMProfile, TPProfile
-from repro.core.scheduler import SchedulerConfig, schedule
+from repro.core.scheduler import SchedulerConfig, schedule, schedule_multi
 
 
 def _synthetic_stage(name: str, size_gb: float, n: float = 4.0,
@@ -61,8 +67,7 @@ def run(quick: bool = False):
         one("num_llms", n, _pipeline(n), hw.PAPER_CLUSTER_16)
     # 2) number of GPUs (3 LLMs, 10 fractions)
     for chips in (16, 32, 64) if quick else (16, 32, 64, 128):
-        spec = hw.ClusterSpec(num_hosts=chips // 4, chips_per_host=4)
-        one("num_gpus", chips, _pipeline(3), spec)
+        one("num_gpus", chips, _pipeline(3), cluster_for(chips))
     # 3) fractions per GPU (3 LLMs, 16 GPUs)
     for frac in (5, 10, 20):
         spec = hw.ClusterSpec(num_hosts=4, chips_per_host=4,
@@ -88,6 +93,34 @@ def run(quick: bool = False):
             results.append((f"memoize_{memo}", n_llms, dt, res.evaluated))
         assert evaluated[True] == evaluated[False], \
             "memoization must not change the searched assignment count"
+
+    # 5) fleet-search warm start: option tables shared across the split
+    # search's sub-cluster sizes (ROADMAP "warm-start each sub-schedule
+    # from the neighbouring chip count's result") — same splits, same
+    # welfare, lower search time
+    print("warm_start,num_workflows,chips,search,search_time_s,"
+          "schedule_calls,welfare")
+    fleets = [(4, 64, "greedy"), (3, 64, "enumerate")]
+    if not quick:
+        fleets.append((8, 128, "greedy"))
+    for n_wf, chips, search in fleets:
+        spec = cluster_for(chips)
+        pipes = {f"wf{i}": _pipeline(2 + i % 3) for i in range(n_wf)}
+        lams = {f"wf{i}": 2.0 + 0.3 * i for i in range(n_wf)}
+        welfare = {}
+        for warm in (False, True):
+            cfg = SchedulerConfig(max_tp=spec.hb_domain_size,
+                                  warm_start=warm)
+            t0 = time.perf_counter()
+            res = schedule_multi(pipes, spec, lams, cfg, search=search)
+            dt = time.perf_counter() - t0
+            welfare[warm] = res.welfare
+            print(f"{warm},{n_wf},{chips},{search},{dt:.4f},"
+                  f"{res.schedule_calls},{res.welfare:.6f}")
+            results.append((f"warm_start_{warm}", n_wf, dt,
+                            res.schedule_calls))
+        assert welfare[True] == welfare[False], \
+            "warm start must not change the chosen split's welfare"
     return results
 
 

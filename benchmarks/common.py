@@ -10,8 +10,10 @@ from typing import Callable, Dict, List, Optional
 from repro import hw
 from repro.core.pipeline import AggregateLLMPipeline
 from repro.core.scepsy import build_pipeline
-from repro.core.scheduler import SchedulerConfig, schedule
-from repro.serving.deploy import routers_from_allocations
+from repro.core.scheduler import (PooledScheduleResult, SchedulerConfig,
+                                  schedule)
+from repro.serving.deploy import (pooled_fleet_routers,
+                                  routers_from_allocations, tenant_routers)
 from repro.serving.simulator import EventLoop, Router
 from repro.workflows.baselines import AegaeonLike, AyoLike, KubernetesHPA
 from repro.workflows.runtime import ClusterDriver, Workflow
@@ -70,20 +72,27 @@ def joint_run(wf_allocs, rates: Dict[str, float], n_req: int, *,
     """Drive several workflows' ClusterDrivers on one shared EventLoop
     (interleaved Poisson arrivals); per-workflow completion + mean
     latency.  ``wf_allocs`` is a list of (Workflow, allocations)."""
-    import random
-
     loop = EventLoop()
     drivers: Dict[str, ClusterDriver] = {}
     for wf, allocs in wf_allocs:
         routers = routers_from_allocations(wf, allocs, loop)
         drivers[wf.name] = ClusterDriver(wf, routers, loop)
-    for k, (wf, _) in enumerate(wf_allocs):
-        drv = drivers[wf.name]
+    return _drive_fleet(drivers, rates, n_req, loop,
+                        seed=seed, horizon=horizon)
+
+
+def _drive_fleet(drivers: Dict[str, ClusterDriver],
+                 rates: Dict[str, float], n_req: int, loop: EventLoop, *,
+                 seed: int = 0, horizon: float = 1e5) -> Dict[str, dict]:
+    import random
+
+    for k, name in enumerate(sorted(drivers)):
+        drv = drivers[name]
         rng = random.Random(seed * 1000 + k)
         t = 0.0
         for rid in range(n_req):
             loop.schedule(t, lambda rid=rid, d=drv: d.start_request(rid, seed))
-            t += rng.expovariate(rates[wf.name])
+            t += rng.expovariate(rates[name])
     loop.run(horizon)
     out: Dict[str, dict] = {}
     for name, drv in drivers.items():
@@ -94,6 +103,21 @@ def joint_run(wf_allocs, rates: Dict[str, float], n_req: int, *,
                                if recs else math.inf),
         }
     return out
+
+
+def joint_run_pooled(wfs: Dict[str, Workflow], pooled: PooledScheduleResult,
+                     rates: Dict[str, float], n_req: int, *,
+                     seed: int = 0, horizon: float = 1e5) -> Dict[str, dict]:
+    """Drive a pooled fleet: ONE shared replica set per tenant, each
+    workflow routing into it via its weighted view.  Same output shape
+    as :func:`joint_run`."""
+    loop = EventLoop()
+    tenants = tenant_routers(pooled.allocations, pooled.cfgs, loop)
+    per_wf = pooled_fleet_routers(tenants, pooled.members, pooled.routing)
+    drivers = {name: ClusterDriver(wfs[name], per_wf[name], loop)
+               for name in wfs}
+    return _drive_fleet(drivers, rates, n_req, loop,
+                        seed=seed, horizon=horizon)
 
 
 def cluster_for(chips: int) -> hw.ClusterSpec:

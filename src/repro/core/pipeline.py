@@ -9,6 +9,15 @@ level latency and throughput for a candidate GPU allocation:
 
 Prediction is profile lookups + arithmetic — negligible cost, which is
 what lets the GPU scheduler explore large allocation spaces (§5).
+
+Aggregate pipelines also compose *across* workflows: rate-weighted
+aggregate shares over a shared LLM are still aggregate shares, so N
+workflows' pipelines fuse into one tenant-tagged pipeline
+(:func:`merge_pipelines`) whose stages are keyed by canonical model
+identity rather than workflow-local stage names.  The merged pipeline
+drives the pooled multi-tenant scheduling path, and per-workflow
+latency/throughput is attributed back out of the shared allocation
+(:meth:`MergedPipeline.attribute`).
 """
 from __future__ import annotations
 
@@ -19,6 +28,16 @@ from typing import Dict, List, Optional
 from repro.configs.base import ArchConfig
 from repro.core.aggregate import WorkflowStats
 from repro.core.profiler import LLMProfile
+
+
+def canonical_llm_id(cfg: ArchConfig) -> str:
+    """Pooling identity of an LLM: the architecture name.
+
+    Workflow-local stage names ("map", "debater") are routing labels;
+    two stages are servable by the same replicas iff they load the same
+    weights, which ``ArchConfig.name`` identifies.
+    """
+    return cfg.name
 
 
 @dataclass(frozen=True)
@@ -119,3 +138,252 @@ class AggregateLLMPipeline:
 
     def llms(self) -> List[str]:
         return list(self.stages)
+
+
+# ---------------------------------------------------------------------------
+# Cross-workflow pipeline merging (pooled multi-tenant allocation)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TenantMember:
+    """One workflow's view of a shared LLM tenant."""
+
+    workflow: str
+    llm: str  # workflow-local stage name
+    n: float
+    p: float
+    profile: LLMProfile
+    lam: float  # workflow arrival-rate target (requests/s)
+
+    @property
+    def call_rate(self) -> float:
+        """Offered call rate this member contributes to the tenant."""
+        return self.lam * self.n
+
+
+class MergedLLMProfile:
+    """Rate-weighted mixture of per-workflow profiles of one model.
+
+    Each member workflow profiled the same architecture on its own token
+    distribution, so the mixture's capacity is the weighted *harmonic*
+    mean of member capacities (a member call consumes 1/T_w replica-
+    seconds on average), and latency maps across members at equal
+    *utilization*: a replica at mixed load ρ serves member w's calls as
+    if that member alone ran it at rate ρ·T_w.  With a single member
+    both formulas reduce exactly to the member profile.
+    """
+
+    def __init__(self, llm: str, members: List[TenantMember]):
+        if not members:
+            raise ValueError("merged profile needs >= 1 member")
+        self.llm = llm
+        self.members = sorted(members, key=lambda m: (m.workflow, m.llm))
+        total = sum(m.call_rate for m in self.members)
+        if total <= 0:
+            # no offered load: weight members equally
+            self.phi = [1.0 / len(self.members)] * len(self.members)
+        else:
+            self.phi = [m.call_rate / total for m in self.members]
+        common = set(self.members[0].profile.by_tp)
+        for m in self.members[1:]:
+            common &= set(m.profile.by_tp)
+        if not common:
+            raise ValueError(
+                f"{llm}: member profiles share no TP degree")
+        self.by_tp = {tp: tp for tp in sorted(common)}
+
+    def tps(self) -> List[int]:
+        return sorted(self.by_tp)
+
+    def max_throughput(self, tp: int, *, fraction: float = 1.0) -> float:
+        inv = 0.0
+        for phi, m in zip(self.phi, self.members):
+            t = m.profile.max_throughput(tp)
+            if t <= 0:
+                return 0.0
+            inv += phi / t
+        return fraction / inv if inv > 0 else math.inf
+
+    def member_latency(self, idx: int, rate: float, tp: int, *,
+                       fraction: float = 1.0,
+                       percentile: str = "mean") -> float:
+        """Latency of member ``idx``'s calls on a shared replica serving
+        the whole mix at per-replica call rate ``rate``."""
+        if fraction <= 0:
+            return math.inf
+        t_mix = self.max_throughput(tp)
+        if not math.isfinite(t_mix) or t_mix <= 0:
+            return math.inf
+        rho = (rate / fraction) / t_mix
+        m = self.members[idx]
+        equiv = rho * m.profile.max_throughput(tp)
+        return m.profile.latency(equiv * fraction, tp, fraction=fraction,
+                                 percentile=percentile)
+
+    def latency(self, rate: float, tp: int, *, fraction: float = 1.0,
+                percentile: str = "mean") -> float:
+        return sum(phi * self.member_latency(i, rate, tp, fraction=fraction,
+                                             percentile=percentile)
+                   for i, phi in enumerate(self.phi))
+
+
+class MergedPipeline(AggregateLLMPipeline):
+    """N workflows' pipelines fused into one tenant-tagged pipeline.
+
+    Stages are keyed by canonical model identity; the stage-level
+    (n, p) are rate-weighted so that, driven at the fleet arrival rate
+    ``lam_total``, every stage sees exactly the sum of its members'
+    offered call rates.  ``attribute`` maps a shared allocation back to
+    per-workflow predictions.
+    """
+
+    def __init__(self, stages: List[PipelineStage],
+                 tenants: Dict[str, List[TenantMember]],
+                 lam_targets: Dict[str, float]):
+        super().__init__("pooled", stages)
+        self.tenants = tenants
+        self.lam_targets = dict(lam_targets)
+        self.lam_total = sum(lam_targets.values())
+
+    def workflows(self) -> List[str]:
+        return sorted(self.lam_targets)
+
+    def shared_llms(self) -> Dict[str, List[TenantMember]]:
+        """Tenants referenced by more than one workflow."""
+        return {m: mem for m, mem in self.tenants.items()
+                if len({t.workflow for t in mem}) > 1}
+
+    def members_of(self, workflow: str) -> Dict[str, List[TenantMember]]:
+        """Canonical id -> this workflow's member entries (a workflow may
+        point several of its stages at the same model)."""
+        out: Dict[str, List[TenantMember]] = {}
+        for cid, mem in self.tenants.items():
+            for t in mem:
+                if t.workflow == workflow:
+                    out.setdefault(cid, []).append(t)
+        return out
+
+    # -- per-workflow attribution ------------------------------------
+
+    def attribute(self, alloc: Dict[str, Allocation],
+                  percentile: str = "mean") -> Dict[str, Prediction]:
+        """Per-workflow predicted latency/throughput under a shared
+        allocation.
+
+        Latency: each member's calls run on replicas loaded by the whole
+        mix (utilization-mapped member latency), summed over the
+        workflow's stages per eq. (1).  Throughput: the largest factor κ
+        by which this workflow alone could scale before some tenant it
+        uses saturates — spare tenant capacity is attributed to whoever
+        asks for it, not split a priori.
+        """
+        out: Dict[str, Prediction] = {}
+        # per-tenant utilization under the current mix
+        rho: Dict[str, float] = {}
+        rate: Dict[str, float] = {}
+        for cid, mem in self.tenants.items():
+            a = alloc[cid]
+            prof: MergedLLMProfile = self.stages[cid].profile
+            r = sum(t.call_rate for t in mem) / max(a.replicas, 1)
+            rate[cid] = r
+            cap = prof.max_throughput(a.tp, fraction=a.fraction)
+            rho[cid] = math.inf if cap <= 0 else r / cap
+        for w in self.workflows():
+            lam_w = self.lam_targets[w]
+            members = self.members_of(w)
+            total_lat, per_llm = 0.0, {}
+            dominant, dom_lat = "", -1.0
+            t_w, bottleneck = math.inf, ""
+            for cid, ts in members.items():
+                a = alloc[cid]
+                prof = self.stages[cid].profile
+                for t in ts:
+                    idx = prof.members.index(t)
+                    lm = prof.member_latency(idx, rate[cid], a.tp,
+                                             fraction=a.fraction,
+                                             percentile=percentile)
+                    contrib = lm * t.n / max(t.p, 1.0)
+                    per_llm[t.llm] = contrib
+                    total_lat += contrib
+                    if contrib > dom_lat:
+                        dom_lat, dominant = contrib, t.llm
+                    # scaling headroom: κ = 1 + spare / own share of load
+                    own = t.call_rate / max(a.replicas, 1)
+                    cap = prof.max_throughput(a.tp, fraction=a.fraction)
+                    spare = cap - rate[cid]
+                    if own <= 0:
+                        cap_w = math.inf
+                    else:
+                        cap_w = lam_w * (1.0 + spare / own)
+                    if cap_w < t_w:
+                        t_w, bottleneck = cap_w, t.llm
+            feasible = (t_w >= lam_w and math.isfinite(total_lat)
+                        and all(rho[cid] <= 1.0 + 1e-9 for cid in members))
+            out[w] = Prediction(latency=total_lat, max_throughput=t_w,
+                                feasible=feasible, bottleneck_llm=bottleneck,
+                                latency_dominant_llm=dominant,
+                                per_llm_latency=per_llm)
+        return out
+
+    def routing_weights(self, alloc: Dict[str, Allocation]
+                        ) -> Dict[str, Dict[str, Dict[int, float]]]:
+        """workflow -> local llm name -> replica index -> weight.
+
+        Pooled replicas of a tenant are identical, so every workflow
+        spreads its calls uniformly; weights per (workflow, llm) sum
+        to 1.  This is the routing table deploy_multi hands each
+        workflow instead of a private chip offset.
+        """
+        out: Dict[str, Dict[str, Dict[int, float]]] = {}
+        for cid, mem in self.tenants.items():
+            d = max(alloc[cid].replicas, 1)
+            for t in mem:
+                out.setdefault(t.workflow, {})[t.llm] = {
+                    r: 1.0 / d for r in range(d)}
+        return out
+
+
+def merge_pipelines(pipelines: Dict[str, AggregateLLMPipeline],
+                    lam_targets: Dict[str, float]) -> MergedPipeline:
+    """Fuse N workflows' aggregate pipelines into one tenant-tagged
+    pipeline, rate-weighting the shares of LLMs that appear in several
+    workflows (keyed by canonical model identity).
+
+    The result is order-invariant in ``pipelines``: tenants are keyed by
+    canonical id and members sorted by (workflow, stage name).
+    """
+    missing = [w for w in pipelines if w not in lam_targets]
+    if missing:
+        raise ValueError(f"no arrival-rate target for workflows {missing}")
+    tenants: Dict[str, List[TenantMember]] = {}
+    cfgs: Dict[str, ArchConfig] = {}
+    shares: Dict[str, float] = {}
+    for w in sorted(pipelines):
+        pipe = pipelines[w]
+        for llm, st in pipe.stages.items():
+            cid = canonical_llm_id(st.cfg)
+            tenants.setdefault(cid, []).append(TenantMember(
+                workflow=w, llm=llm, n=st.n, p=st.p, profile=st.profile,
+                lam=lam_targets[w]))
+            cfgs[cid] = st.cfg
+            shares[cid] = shares.get(cid, 0.0) + st.mean_share * lam_targets[w]
+    lam_total = sum(lam_targets[w] for w in pipelines)
+    stages: List[PipelineStage] = []
+    for cid in sorted(tenants):
+        mem = sorted(tenants[cid], key=lambda t: (t.workflow, t.llm))
+        tenants[cid] = mem
+        prof = MergedLLMProfile(cid, mem)
+        total_rate = sum(t.call_rate for t in mem)
+        # n such that lam_total * n == the tenant's total offered call
+        # rate; p such that n/p matches the rate-weighted mean latency
+        # multiplier of the members (predict()'s contribution weight)
+        n_eff = total_rate / lam_total if lam_total > 0 else \
+            sum(t.n for t in mem)
+        np_eff = sum((t.lam / lam_total if lam_total > 0 else 1.0 / len(mem))
+                     * t.n / max(t.p, 1.0) for t in mem)
+        p_eff = n_eff / np_eff if np_eff > 0 else 1.0
+        stages.append(PipelineStage(
+            llm=cid, cfg=cfgs[cid], n=n_eff, p=p_eff, profile=prof,
+            mean_share=shares[cid] / (lam_total or 1.0)))
+    return MergedPipeline(stages, tenants, lam_targets)

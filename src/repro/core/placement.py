@@ -90,14 +90,19 @@ class Placement:
         total_free = sum(F - u for u in used.values())
         return stranded / total_free if total_free else 0.0
 
-    def to_deployment(self) -> dict:
-        """k8s-style deployment manifest (consumed by repro.launch.serve)."""
-        return {
+    def to_deployment(self, routing: Optional[dict] = None) -> dict:
+        """k8s-style deployment manifest (consumed by repro.launch.serve).
+
+        ``routing`` (from :func:`tenant_routing`) annotates a pooled
+        multi-tenant placement with each workflow's routing table.
+        """
+        doc = {
             "apiVersion": "repro/v1",
             "kind": "WorkflowServingDeployment",
             "cluster": {
                 "hosts": self.spec.num_hosts,
                 "chips_per_host": self.spec.chips_per_host,
+                "tail_chips": self.spec.tail_chips,
                 "hb_domain_size": self.spec.hb_domain_size,
                 "fractions_per_chip": self.spec.fractions_per_chip,
             },
@@ -115,6 +120,9 @@ class Placement:
                 for i in self.instances
             ],
         }
+        if routing is not None:
+            doc["routing"] = routing
+        return doc
 
 
 @dataclass
@@ -224,6 +232,38 @@ def _place_fraction(cluster: _Cluster, units: int) -> Optional[List[Chip]]:
     return [candidates[0][2]]
 
 
-def save_deployment(placement: Placement, path: str) -> None:
+def tenant_routing(placement: Placement,
+                   members: Dict[str, List[Tuple[str, str]]],
+                   weights: Dict[str, Dict[str, Dict[int, float]]]
+                   ) -> Dict[str, Dict[str, Dict[str, float]]]:
+    """Routing tables into a pooled placement, keyed by instance name.
+
+    A pooled fleet gets ONE physical placement (the tenants' shared
+    replica sets); instead of a private chip offset, every workflow
+    receives a table ``local llm name -> {placed instance -> weight}``.
+    ``members`` maps canonical model id -> [(workflow, local name)] and
+    ``weights`` is the scheduler's replica-indexed routing
+    (:meth:`MergedPipeline.routing_weights`); weights per (workflow,
+    llm) sum to 1.
+    """
+    by_tenant: Dict[str, List[PlacedInstance]] = {}
+    for inst in placement.instances:
+        by_tenant.setdefault(inst.llm, []).append(inst)
+    out: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for cid, mem in members.items():
+        insts = sorted(by_tenant.get(cid, []), key=lambda i: i.replica)
+        for workflow, llm in mem:
+            w = weights.get(workflow, {}).get(llm, {})
+            table = {f"{i.llm}-r{i.replica}": w.get(i.replica, 0.0)
+                     for i in insts}
+            total = sum(table.values())
+            if total > 0:
+                table = {k: v / total for k, v in table.items()}
+            out.setdefault(workflow, {})[llm] = table
+    return out
+
+
+def save_deployment(placement: Placement, path: str,
+                    routing: Optional[dict] = None) -> None:
     with open(path, "w") as f:
-        json.dump(placement.to_deployment(), f, indent=2)
+        json.dump(placement.to_deployment(routing), f, indent=2)

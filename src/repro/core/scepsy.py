@@ -72,12 +72,18 @@ def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
 
 @dataclass
 class ScepsyFleetDeployment:
-    """N workflows sharing one cluster via an egalitarian chip split.
+    """N workflows sharing one cluster.
 
-    Each per-workflow placement is *slice-local*: chip ids are numbered
-    from 0 within that workflow's sub-cluster.  ``chip_offsets`` maps a
-    workflow to the start of its (hb-domain-aligned, disjoint) slice of
-    the physical cluster; :meth:`global_instances` applies them.
+    Partitioned mode: each per-workflow placement is *slice-local* (chip
+    ids numbered from 0 within that workflow's sub-cluster) and
+    ``chip_offsets`` maps a workflow to the start of its
+    (hb-domain-aligned, disjoint) slice of the physical cluster;
+    :meth:`global_instances` applies them.
+
+    Pooled mode: LLMs are tenants — the shared replica set gets ONE
+    physical placement (``tenant_placement``, chip ids already global)
+    and every workflow receives a routing table (``routing``: local llm
+    name -> placed instance -> weight) instead of a private chip offset.
     """
 
     deployments: Dict[str, ScepsyDeployment]
@@ -86,12 +92,16 @@ class ScepsyFleetDeployment:
     schedule: MultiScheduleResult
     spec: Optional[hw.ClusterSpec] = None
     chip_offsets: Dict[str, int] = None
+    mode: str = "partitioned"
+    tenant_placement: Optional[Placement] = None
+    routing: Optional[Dict[str, Dict[str, Dict[str, float]]]] = None
 
     def global_instances(self):
-        """Every placed instance with slice-local chip/host/domain ids
-        translated to physical cluster coordinates."""
+        """Every placed instance in physical cluster coordinates."""
         import dataclasses as dc
 
+        if self.mode == "pooled":
+            return list(self.tenant_placement.instances)
         out = []
         for name, dep in self.deployments.items():
             off = self.chip_offsets[name]
@@ -103,26 +113,44 @@ class ScepsyFleetDeployment:
                     domain=chips[0] // self.spec.hb_domain_size))
         return out
 
+    def to_deployment(self) -> dict:
+        """One manifest for the whole fleet (pooled mode only)."""
+        if self.mode != "pooled":
+            raise ValueError("fleet manifest only exists in pooled mode; "
+                             "use per-workflow placements instead")
+        return self.tenant_placement.to_deployment(self.routing)
+
 
 def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
                  lam_targets: Dict[str, float], *,
                  n_trace_requests: int = 60, seed: int = 0,
                  scheduler_config: Optional[SchedulerConfig] = None,
                  pipelines: Optional[Dict[str, AggregateLLMPipeline]] = None,
-                 split_step: int = 1, search: str = "auto"
-                 ) -> ScepsyFleetDeployment:
-    """Fleet flow: trace/profile each workflow, split the cluster with
-    :func:`schedule_multi`, and place every workflow on its sub-cluster.
+                 split_step: int = 1, search: str = "auto",
+                 mode: str = "partitioned",
+                 welfare: Optional[str] = None) -> ScepsyFleetDeployment:
+    """Fleet flow: trace/profile each workflow, allocate the cluster with
+    :func:`schedule_multi` (``mode`` selects partitioned slices vs the
+    pooled multi-tenant allocation vs auto), and emit placements.
 
-    Placements are slice-local (see :class:`ScepsyFleetDeployment`);
-    the returned ``chip_offsets`` give each workflow a disjoint,
-    hb-domain-aligned range of physical chips so TP groups never span
-    a domain boundary after translation.
+    Partitioned placements are slice-local (see
+    :class:`ScepsyFleetDeployment`); the returned ``chip_offsets`` give
+    each workflow a disjoint, hb-domain-aligned range of physical chips
+    so TP groups never span a domain boundary after translation.  In
+    pooled mode the tenants' shared replica set is placed once over the
+    whole cluster and each workflow gets a routing table into it.
+
+    ``welfare`` overrides ``scheduler_config.welfare`` (egalitarian /
+    weighted / proportional).
     """
-    from repro.core.placement import PlacementError
+    import dataclasses as dc
+
+    from repro.core.placement import PlacementError, tenant_routing
     from repro.core.scheduler import _subcluster
 
     cfg = scheduler_config or SchedulerConfig(max_tp=spec.hb_domain_size)
+    if welfare is not None:
+        cfg = dc.replace(cfg, welfare=welfare)
     stats_by_name: Dict[str, Optional[WorkflowStats]] = {}
     if pipelines is None:
         pipelines = {}
@@ -135,28 +163,48 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
     else:
         stats_by_name = {n: None for n in pipelines}
     multi = schedule_multi(pipelines, spec, lam_targets, cfg,
-                           split_step=split_step, search=search)
-    deployments: Dict[str, ScepsyDeployment] = {}
+                           split_step=split_step, search=search, mode=mode)
+
+    if multi.alloc_mode == "pooled":
+        pooled = multi.pooled
+        placement = place(pooled.allocations, spec)
+        routing = tenant_routing(placement, pooled.members, pooled.routing)
+        deployments = {
+            name: ScepsyDeployment(
+                name, stats_by_name.get(name), pipelines[name], result,
+                placement)
+            for name, result in multi.per_workflow.items()
+        }
+        return ScepsyFleetDeployment(deployments, {}, multi.welfare, multi,
+                                     spec=spec, chip_offsets=None,
+                                     mode="pooled",
+                                     tenant_placement=placement,
+                                     routing=routing)
+
+    deployments = {}
     for name, result in multi.per_workflow.items():
         sub = _subcluster(spec, multi.chip_split[name])
         placement = place(result.allocations, sub)
         deployments[name] = ScepsyDeployment(
             name, stats_by_name.get(name), pipelines[name], result,
             placement)
-    # disjoint hb-domain-aligned slice starts (the split sums to the
-    # cluster, and _subcluster truncation leaves slack, so the aligned
-    # layout fits except in pathological many-tiny-workflow cases)
+    # disjoint slice starts; a slice start is hb-domain-aligned only
+    # when the slice actually contains TP groups (TP instances must not
+    # cross a domain boundary after translation — TP=1 slices can start
+    # anywhere, which matters now that odd-sized splits are schedulable)
     dom = spec.hb_domain_size
     offsets: Dict[str, int] = {}
     cursor = 0
     for name in multi.chip_split:
-        used = 1 + max((c for inst in deployments[name].placement.instances
-                        for c in inst.chips), default=0)
+        insts = deployments[name].placement.instances
+        used = 1 + max((c for inst in insts for c in inst.chips), default=0)
+        if any(inst.tp > 1 for inst in insts):
+            cursor = (cursor + dom - 1) // dom * dom
         offsets[name] = cursor
-        cursor += (used + dom - 1) // dom * dom
+        cursor += used
     if cursor > spec.num_chips:
         raise PlacementError(
-            f"fleet needs {cursor} chips for disjoint hb-aligned slices, "
+            f"fleet needs {cursor} chips for disjoint slices, "
             f"cluster has {spec.num_chips}")
     return ScepsyFleetDeployment(deployments, multi.chip_split,
                                  multi.welfare, multi, spec=spec,

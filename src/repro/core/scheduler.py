@@ -25,8 +25,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro import hw
 from repro.configs.base import ArchConfig
-from repro.core.pipeline import AggregateLLMPipeline, Allocation, Prediction
+from repro.core.pipeline import (AggregateLLMPipeline, Allocation,
+                                 MergedPipeline, Prediction, merge_pipelines)
 from repro.serving import costmodel as cm
+
+WELFARE_OBJECTIVES = ("egalitarian", "weighted", "proportional")
 
 
 @dataclass
@@ -38,6 +41,13 @@ class SchedulerConfig:
     allow_fractional: bool = True  # ablation: co-location via GPU fractions
     allow_parallelism: bool = True  # ablation: TP > 1
     memoize: bool = True  # cache best_option_for(m, units) across splits
+    # multi-workflow welfare: egalitarian (min utility), weighted
+    # (weight-normalized mean utility), proportional (Nash: Σ w·log u)
+    welfare: str = "egalitarian"
+    welfare_weights: Optional[Dict[str, float]] = None  # default: all 1.0
+    # share each workflow's best_option_for table across the split
+    # search's sub-schedules (neighbouring chip counts re-use it)
+    warm_start: bool = True
 
 
 @dataclass
@@ -106,7 +116,17 @@ def _candidate_units(lo: int, hi: int, grid: int, chip_units: int) -> List[int]:
 
 def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
              lam_target: float,
-             config: SchedulerConfig = SchedulerConfig()) -> ScheduleResult:
+             config: SchedulerConfig = SchedulerConfig(), *,
+             option_cache: Optional[Dict] = None,
+             warm_seed: Optional[Dict[str, int]] = None) -> ScheduleResult:
+    """Search the allocation space for one pipeline.
+
+    ``warm_seed`` (a unit assignment, e.g. the schedule chosen for a
+    neighbouring chip count in the fleet split search) is evaluated
+    first; together with the admissible unloaded-latency floor bound it
+    turns the enumeration into branch-and-bound with an immediate
+    incumbent, without changing the optimal latency found.
+    """
     t0 = time.perf_counter()
     max_tp = config.max_tp or spec.hb_domain_size
     if not config.allow_parallelism:
@@ -132,12 +152,15 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
                                     Dict[str, int]]] = None
 
     # best_option_for depends only on (m, units) — not on the rest of the
-    # assignment being scored — so its result is shared across every
-    # enumerated unit split (and the slack post-pass).  On large clusters
-    # this collapses the search's hot path from O(splits × options) to
-    # O(distinct (m, units) × options) option scans.
-    option_cache: Dict[Tuple[str, int],
-                       Optional[Tuple[Allocation, float, float]]] = {}
+    # assignment being scored, nor on the cluster's chip count — so its
+    # result is shared across every enumerated unit split (and the slack
+    # post-pass).  On large clusters this collapses the search's hot path
+    # from O(splits × options) to O(distinct (m, units) × options) option
+    # scans.  Callers scheduling the same pipeline on several sub-cluster
+    # sizes (the fleet split search) pass ``option_cache`` to warm-start
+    # each search from its neighbours' tables.
+    if option_cache is None:
+        option_cache = {}
 
     def best_option_for(m: str, units: int) -> Optional[Tuple[Allocation, float, float]]:
         """(alloc, latency_contrib, llm_tput) minimizing latency s.t. tput."""
@@ -204,8 +227,23 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
             if best_infeasible is None or score < best_infeasible[0]:
                 best_infeasible = (score, allocs, pred, key_units)
 
+    # admissible latency floor per stage (unloaded latency at the best
+    # profiled TP, whole chips): no allocation can serve below it, so
+    # partial-assignment sums bound every completion of a branch.  The
+    # 0.9 margin guards against mild non-monotonicity in simulated
+    # profiles; it only weakens (never invalidates) the bound.
+    floor = {}
+    for m in order:
+        st = pipeline.stages[m]
+        f = min(st.profile.latency(0.0, tp, percentile=config.percentile)
+                for tp in st.profile.tps())
+        floor[m] = 0.9 * f * st.n / max(st.p, 1.0)
+    tail_floor = {len(order): 0.0}
+    for i in range(len(order) - 1, -1, -1):
+        tail_floor[i] = tail_floor[i + 1] + floor[order[i]]
+
     def recurse(i: int, remaining: int, prev_units: int,
-                units: Dict[str, int]):
+                units: Dict[str, int], partial: float):
         if evaluated >= config.max_assignments:
             return
         if i == len(order):
@@ -221,11 +259,25 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
         if hi < lo[m]:
             return
         for u in _candidate_units(lo[m], hi, config.units_grid, F):
+            r = best_option_for(m, u)
+            if r is None:
+                continue  # no option fits this budget: branch is dead
+            new_partial = partial + r[1]
+            # branch-and-bound: prune completions that provably cannot
+            # beat the feasible incumbent (seeded by warm_seed)
+            if (best is not None
+                    and new_partial + tail_floor[i + 1] >= best[0]):
+                continue
             units[m] = u
-            recurse(i + 1, remaining - u, u, units)
-        del units[m]
+            recurse(i + 1, remaining - u, u, units, new_partial)
+        units.pop(m, None)
 
-    recurse(0, U, U, {})
+    if warm_seed is not None:
+        seed = {m: warm_seed.get(m, 0) for m in order}
+        if (all(seed[m] >= lo[m] for m in order)
+                and sum(seed.values()) <= U):
+            evaluate(seed)
+    recurse(0, U, U, {}, 0.0)
 
     def used_units(allocs: Dict[str, Allocation]) -> int:
         total = 0
@@ -279,20 +331,53 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
 
 
 # ---------------------------------------------------------------------------
-# Multi-workflow scheduling (egalitarian welfare, paper §5 end)
+# Multi-workflow scheduling (welfare objectives, paper §5 end)
 # ---------------------------------------------------------------------------
+
+
+@dataclass
+class PooledScheduleResult:
+    """Shared multi-tenant allocation: LLMs are tenants, workflows hold
+    routing weights into the pooled replica set."""
+
+    merged: ScheduleResult  # merged-pipeline schedule over the whole cluster
+    allocations: Dict[str, Allocation]  # canonical llm id -> shared alloc
+    cfgs: Dict[str, ArchConfig]  # canonical llm id -> architecture
+    members: Dict[str, List[Tuple[str, str]]]  # id -> [(workflow, local llm)]
+    routing: Dict[str, Dict[str, Dict[int, float]]]  # wf -> llm -> rep -> w
+    predictions: Dict[str, Prediction]  # per-workflow attribution
+    chip_share: Dict[str, float]  # traffic-weighted chip-equivalents
+    lam_total: float
 
 
 @dataclass
 class MultiScheduleResult:
     per_workflow: Dict[str, ScheduleResult]
-    chip_split: Dict[str, int]
+    chip_split: Dict[str, int]  # empty when alloc_mode == "pooled"
     welfare: float
     search_time_s: float
     utilities: Dict[str, float] = field(default_factory=dict)
     evaluated_splits: int = 0
     schedule_calls: int = 0
     search_mode: str = "enumerate"
+    alloc_mode: str = "partitioned"  # "partitioned" | "pooled"
+    pooled: Optional[PooledScheduleResult] = None
+    welfare_by_mode: Dict[str, float] = field(default_factory=dict)
+
+
+def _welfare_fn(config: SchedulerConfig, names: Sequence[str]):
+    """Welfare objective over per-workflow utilities in [0, 1]."""
+    if config.welfare not in WELFARE_OBJECTIVES:
+        raise ValueError(f"unknown welfare objective {config.welfare!r}; "
+                         f"known: {WELFARE_OBJECTIVES}")
+    wts = {n: (config.welfare_weights or {}).get(n, 1.0) for n in names}
+    total_w = sum(wts.values()) or 1.0
+    if config.welfare == "egalitarian":
+        return lambda utils: min(utils.values())
+    if config.welfare == "weighted":
+        return lambda utils: sum(wts[n] * u for n, u in utils.items()) / total_w
+    return lambda utils: sum(wts[n] * math.log(max(u, 1e-9))
+                             for n, u in utils.items())
 
 
 def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
@@ -300,19 +385,29 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
                    config: SchedulerConfig = SchedulerConfig(),
                    split_step: int = 1, *,
                    search: str = "auto",
-                   max_enumerated_splits: int = 4096) -> MultiScheduleResult:
-    """Split the cluster between N >= 2 workflows; egalitarian welfare.
+                   max_enumerated_splits: int = 4096,
+                   mode: str = "partitioned") -> MultiScheduleResult:
+    """Allocate the cluster between N >= 2 workflows.
 
     Utility of a workflow = L_ref / L (reference = its latency given the
     whole cluster), so utilities are comparable across workflows; welfare
-    is the minimum utility (max-min fairness).
+    combines them per ``config.welfare`` (egalitarian min by default).
 
-    Small composition spaces are enumerated exhaustively — for two
-    workflows this reproduces the paper's evaluated 2-way split exactly.
-    Larger fleets/clusters fall back to greedy water-filling on welfare
-    (seeded proportionally to per-workflow demand) with local-exchange
-    refinement.  Either way, per-(workflow, chips) schedules are computed
-    once and shared across every split candidate.
+    ``mode`` selects the allocation data model:
+      * ``"partitioned"`` — every workflow owns a disjoint chip slice
+        (the paper's evaluated split search): small composition spaces
+        are enumerated exhaustively, larger fleets fall back to greedy
+        water-filling with local-exchange refinement, and
+        per-(workflow, chips) schedules are cached across candidates
+        with option tables warm-started across neighbouring chip counts;
+      * ``"pooled"`` — LLMs are tenants: the workflows' pipelines are
+        merged (rate-weighted shares keyed by canonical model identity),
+        the merged pipeline is scheduled over the *whole* cluster, and
+        per-workflow latency/throughput is attributed back out of the
+        shared allocation.  Degrades to the exact partitioned result
+        when workflows share no LLM configs;
+      * ``"auto"`` — both, keeping whichever yields higher welfare
+        (ties prefer partitioned).
     """
     t0 = time.perf_counter()
     names = list(pipelines)
@@ -320,10 +415,13 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
         raise ValueError("schedule_multi needs >= 2 workflows")
     if search not in ("auto", "enumerate", "greedy"):
         raise ValueError(f"unknown search mode {search!r}")
+    if mode not in ("partitioned", "pooled", "auto"):
+        raise ValueError(f"unknown allocation mode {mode!r}")
     missing = [n for n in names if n not in lam_targets]
     if missing:
         raise ValueError(f"no arrival-rate target for workflows {missing}")
     G = spec.num_chips
+    welfare_of = _welfare_fn(config, names)
 
     lo_chips = {
         n: _min_chips_for_units(
@@ -339,20 +437,35 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
     # reference schedules (whole cluster each) double as cache seeds
     stats = {"schedule_calls": 0, "evaluated_splits": 0}
     sched_cache: Dict[Tuple[str, int], Optional[ScheduleResult]] = {}
+    # per-workflow best_option_for tables shared across every sub-cluster
+    # size the split search visits (ROADMAP "warm-start each sub-schedule
+    # from the neighbouring chip count's result"): the table depends only
+    # on (stage, units), never on the cluster's chip count
+    warm: Dict[str, Dict] = {n: {} for n in names}
 
     def sched(n: str, chips: int) -> Optional[ScheduleResult]:
         if chips < lo_chips[n]:
             return None
-        # key on the chip count _subcluster actually models: counts that
-        # truncate to the same sub-cluster (9, 10, 11 -> 8 on a
-        # 4-chip/host spec) share one search
-        key = (n, _effective_chips(spec, chips))
+        key = (n, chips)
         if key not in sched_cache:
             stats["schedule_calls"] += 1
+            cache = warm[n] if (config.warm_start and config.memoize) \
+                else None
+            seed = None
+            if config.warm_start:
+                # seed from the nearest chip count already scheduled:
+                # its unit split is an immediate feasible incumbent for
+                # the branch-and-bound at this size
+                near = [(abs(c - chips), c)
+                        for (nn, c), r in sched_cache.items()
+                        if nn == n and r is not None and r.feasible]
+                if near:
+                    seed = sched_cache[(n, min(near)[1])].units
             try:
                 sched_cache[key] = schedule(
                     pipelines[n], _subcluster(spec, chips),
-                    lam_targets[n], config)
+                    lam_targets[n], config, option_cache=cache,
+                    warm_seed=seed)
             except (ValueError, RuntimeError):
                 sched_cache[key] = None
         return sched_cache[key]
@@ -363,87 +476,148 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
         refs[n] = (r.prediction.latency
                    if r is not None and r.feasible else math.inf)
 
-    def utility(n: str, r: Optional[ScheduleResult]) -> float:
-        if (r is None or not r.feasible
-                or not math.isfinite(r.prediction.latency)
-                or r.prediction.latency <= 0):
+    def utility_of(n: str, pred: Optional[Prediction]) -> float:
+        if (pred is None or not pred.feasible
+                or not math.isfinite(pred.latency) or pred.latency <= 0):
             return 0.0
         if refs[n] <= 0:
             return 0.0
-        return min(refs[n] / r.prediction.latency, 1.0)
+        return min(refs[n] / pred.latency, 1.0)
 
-    def score(split: Dict[str, int]):
-        """(welfare, utils, per-workflow results) or None if any schedule
-        call failed outright for this split."""
-        stats["evaluated_splits"] += 1
-        per: Dict[str, ScheduleResult] = {}
+    def utility(n: str, r: Optional[ScheduleResult]) -> float:
+        return utility_of(n, r.prediction if r is not None else None)
+
+    def partitioned_search() -> MultiScheduleResult:
+        def score(split: Dict[str, int]):
+            """(welfare, utils, per-workflow results) or None if any
+            schedule call failed outright for this split."""
+            stats["evaluated_splits"] += 1
+            per: Dict[str, ScheduleResult] = {}
+            for n in names:
+                r = sched(n, split[n])
+                if r is None:
+                    return None
+                per[n] = r
+            utils = {n: utility(n, per[n]) for n in names}
+            return welfare_of(utils), utils, per
+
+        best: Optional[Tuple[float, Dict[str, float],
+                             Dict[str, ScheduleResult],
+                             Dict[str, int]]] = None
+
+        def consider(split: Dict[str, int]) -> None:
+            nonlocal best
+            s = score(split)
+            if s is None:
+                return
+            welfare, utils, per = s
+            if best is None or welfare > best[0]:
+                best = (welfare, utils, per, dict(split))
+
+        splits = (None if search == "greedy"
+                  else _enumerate_splits(names, lo_chips, G, split_step,
+                                         max_enumerated_splits))
+        if splits is None and search == "enumerate":
+            raise ValueError(
+                f"enumeration bound {max_enumerated_splits} exceeded; use "
+                "search='auto'/'greedy' or raise max_enumerated_splits")
+        smode = "enumerate" if splits is not None else "greedy"
+        if splits is not None:
+            for split in splits:
+                consider(split)
+        else:
+            for split in _greedy_splits(names, lo_chips, G, split_step,
+                                        lam_targets, refs, sched, utility,
+                                        welfare_of):
+                consider(split)
+        if best is None:
+            raise RuntimeError("no feasible multi-workflow split")
+        welfare, utils, per_wf, split = best
+        return MultiScheduleResult(per_wf, split, welfare,
+                                   time.perf_counter() - t0,
+                                   utilities=utils,
+                                   evaluated_splits=stats["evaluated_splits"],
+                                   schedule_calls=stats["schedule_calls"],
+                                   search_mode=smode,
+                                   alloc_mode="partitioned")
+
+    def pooled_search() -> Optional[MultiScheduleResult]:
+        merged = merge_pipelines(pipelines, lam_targets)
+        if not merged.shared_llms():
+            return None  # degenerate: pooling cannot differ from a split
+        try:
+            res = schedule(merged, spec, merged.lam_total, config)
+        except (ValueError, RuntimeError):
+            return None
+        stats["schedule_calls"] += 1
+        preds = merged.attribute(res.allocations, config.percentile)
+        utils = {n: utility_of(n, preds[n]) for n in names}
+        welfare = welfare_of(utils)
+        routing = merged.routing_weights(res.allocations)
+        # traffic-weighted chip attribution (diagnostic: the pool has no
+        # per-workflow chip ownership); Allocation.chip_units is already
+        # in chips (replicas x tp x fraction)
+        chip_share: Dict[str, float] = {n: 0.0 for n in names}
+        for cid, mem in merged.tenants.items():
+            total = sum(t.call_rate for t in mem) or 1.0
+            for t in mem:
+                chip_share[t.workflow] += (t.call_rate / total
+                                           * res.allocations[cid].chip_units)
+        per_wf: Dict[str, ScheduleResult] = {}
         for n in names:
-            r = sched(n, split[n])
-            if r is None:
-                return None
-            per[n] = r
-        utils = {n: utility(n, per[n]) for n in names}
-        return min(utils.values()), utils, per
+            members = merged.members_of(n)
+            per_wf[n] = ScheduleResult(
+                allocations={t.llm: res.allocations[cid]
+                             for cid, ts in members.items() for t in ts},
+                prediction=preds[n],
+                units={t.llm: res.units[cid]
+                       for cid, ts in members.items() for t in ts},
+                evaluated=res.evaluated,
+                search_time_s=res.search_time_s,
+                feasible=preds[n].feasible)
+        pooled = PooledScheduleResult(
+            merged=res,
+            allocations=dict(res.allocations),
+            cfgs={cid: merged.stages[cid].cfg for cid in merged.tenants},
+            members={cid: [(t.workflow, t.llm) for t in mem]
+                     for cid, mem in merged.tenants.items()},
+            routing=routing, predictions=preds, chip_share=chip_share,
+            lam_total=merged.lam_total)
+        return MultiScheduleResult(
+            per_wf, {}, welfare, time.perf_counter() - t0,
+            utilities=utils,
+            evaluated_splits=stats["evaluated_splits"],
+            schedule_calls=stats["schedule_calls"],
+            search_mode="pooled", alloc_mode="pooled", pooled=pooled)
 
-    best: Optional[Tuple[float, Dict[str, float], Dict[str, ScheduleResult],
-                         Dict[str, int]]] = None
-
-    def consider(split: Dict[str, int]) -> None:
-        nonlocal best
-        s = score(split)
-        if s is None:
-            return
-        welfare, utils, per = s
-        if best is None or welfare > best[0]:
-            best = (welfare, utils, per, dict(split))
-
-    splits = (None if search == "greedy"
-              else _enumerate_splits(names, lo_chips, G, split_step,
-                                     max_enumerated_splits))
-    if splits is None and search == "enumerate":
-        raise ValueError(
-            f"enumeration bound {max_enumerated_splits} exceeded; use "
-            "search='auto'/'greedy' or raise max_enumerated_splits")
-    mode = "enumerate" if splits is not None else "greedy"
-    if splits is not None:
-        for split in splits:
-            consider(split)
-    else:
-        for split in _greedy_splits(names, lo_chips, G, split_step,
-                                    lam_targets, refs, sched, utility):
-            consider(split)
-    if best is None:
-        raise RuntimeError("no feasible multi-workflow split")
-    welfare, utils, per_wf, split = best
-    return MultiScheduleResult(per_wf, split, welfare,
-                               time.perf_counter() - t0,
-                               utilities=utils,
-                               evaluated_splits=stats["evaluated_splits"],
-                               schedule_calls=stats["schedule_calls"],
-                               search_mode=mode)
-
-
-def _effective_chips(spec: hw.ClusterSpec, chips: int) -> int:
-    """Chip count :func:`_subcluster` actually provides (partial hosts
-    beyond the first are truncated)."""
-    cph = spec.chips_per_host
-    return chips if chips <= cph else (chips // cph) * cph
+    if mode == "partitioned":
+        return partitioned_search()
+    if mode == "pooled":
+        pooled = pooled_search()
+        if pooled is None:  # no shared LLMs: exact partitioned parity
+            return partitioned_search()
+        return pooled
+    # auto: evaluate both, keep the better welfare (ties -> partitioned)
+    part = partitioned_search()
+    pooled = pooled_search()
+    by_mode = {"partitioned": part.welfare}
+    if pooled is not None:
+        by_mode["pooled"] = pooled.welfare
+    winner = (pooled if pooled is not None and pooled.welfare > part.welfare
+              else part)
+    winner.welfare_by_mode = by_mode
+    winner.search_time_s = time.perf_counter() - t0
+    return winner
 
 
 def _min_chips_for_units(units_needed: int, spec: hw.ClusterSpec) -> int:
-    """Smallest chip count whose :func:`_subcluster` actually provides
-    ``units_needed`` fraction units.
+    """Smallest chip count providing ``units_needed`` fraction units.
 
-    ``_subcluster`` truncates partial hosts beyond the first, so chip
-    counts between host multiples provide no more units than the multiple
-    below them — a lower bound that ignores this can strand the greedy
-    split search on slices that can never become feasible.
+    :func:`_subcluster` models partial-host remainders explicitly (as
+    ``tail_chips``), so no rounding to host multiples is needed — every
+    chip a workflow is granted is usable.
     """
-    chips = max(math.ceil(units_needed / spec.fractions_per_chip), 1)
-    cph = spec.chips_per_host
-    if chips <= cph:
-        return chips
-    return math.ceil(chips / cph) * cph
+    return max(math.ceil(units_needed / spec.fractions_per_chip), 1)
 
 
 def _enumerate_splits(names: Sequence[str], lo: Dict[str, int], G: int,
@@ -476,15 +650,15 @@ def _enumerate_splits(names: Sequence[str], lo: Dict[str, int], G: int,
 
 def _greedy_splits(names: Sequence[str], lo: Dict[str, int], G: int,
                    step: int, lam_targets: Dict[str, float],
-                   refs: Dict[str, float], sched, utility):
+                   refs: Dict[str, float], sched, utility, welfare_fn):
     """Candidate splits from greedy water-filling + local exchange.
 
     Yields complete splits (the caller keeps the best-scoring one):
       1. a proportional seed — lower bounds plus the leftover split by
          demand weight lam_n * L_ref,n (offered work per workflow);
       2. water-filling — chips granted ``step`` at a time to whichever
-         workflow raises egalitarian welfare most (ties: largest own
-         utility gain, then heaviest demand);
+         workflow raises welfare most (ties: largest own utility gain,
+         then heaviest demand);
       3. local exchange — chip moves between workflow pairs kept while
          they strictly improve welfare.
     """
@@ -510,8 +684,7 @@ def _greedy_splits(names: Sequence[str], lo: Dict[str, int], G: int,
         best_n, best_key = None, None
         for n in names:
             new_u = utility(n, sched(n, split[n] + g))
-            new_welfare = min(new_u,
-                              min(cur_util[m] for m in names if m != n))
+            new_welfare = welfare_fn({**cur_util, n: new_u})
             key = (new_welfare, new_u - cur_util[n], weight[n])
             if best_key is None or key > best_key:
                 best_n, best_key = n, key
@@ -521,13 +694,13 @@ def _greedy_splits(names: Sequence[str], lo: Dict[str, int], G: int,
 
     # 3) local-exchange refinement
     def welfare_of(sp: Dict[str, int]) -> float:
-        us = []
+        us = {}
         for n in names:
             r = sched(n, sp[n])
             if r is None:
                 return -math.inf
-            us.append(utility(n, r))
-        return min(us)
+            us[n] = utility(n, r)
+        return welfare_fn(us)
 
     cur = welfare_of(split)
     max_rounds = 2 * len(names) * len(names)
@@ -550,12 +723,17 @@ def _greedy_splits(names: Sequence[str], lo: Dict[str, int], G: int,
 
 
 def _subcluster(spec: hw.ClusterSpec, chips: int) -> hw.ClusterSpec:
-    """A contiguous sub-cluster of ``chips`` chips (contiguity prune ii)."""
+    """A contiguous sub-cluster of ``chips`` chips (contiguity prune ii).
+
+    Partial-host remainders are modeled explicitly as ``tail_chips``
+    rather than truncated, so a 9-chip slice of a 4-chip/host cluster
+    really provides 9 chips — no chips are silently dropped from the
+    split search's pool.
+    """
     import dataclasses as dc
 
-    full_hosts = chips // spec.chips_per_host
-    if full_hosts >= 1 and chips % spec.chips_per_host == 0:
-        return dc.replace(spec, num_hosts=full_hosts)
-    # partial host: model as a single host with fewer chips
-    return dc.replace(spec, num_hosts=max(chips // spec.chips_per_host, 0) or 1,
-                      chips_per_host=min(chips, spec.chips_per_host))
+    full_hosts, tail = divmod(chips, spec.chips_per_host)
+    if full_hosts >= 1:
+        return dc.replace(spec, num_hosts=full_hosts, tail_chips=tail)
+    # fewer chips than one host: a single smaller host
+    return dc.replace(spec, num_hosts=1, chips_per_host=chips, tail_chips=0)

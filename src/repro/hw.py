@@ -31,16 +31,22 @@ class ClusterSpec:
     must stay inside one domain.  Each chip is divisible into
     ``fractions_per_chip`` units (enforced by the engine's slot scheduler +
     static HBM budgeting; the MPS analogue).
+
+    ``tail_chips`` models a partially-populated final host: a sub-cluster
+    of 9 chips on a 4-chip/host topology is 2 full hosts plus one tail
+    chip.  Tail chips hold TP=1 replicas only when they cannot complete an
+    hb domain, which placement enforces via the usual domain check.
     """
 
     num_hosts: int = 4
     chips_per_host: int = 4
     hb_domain_size: int = 2  # paper cluster: NVLink pairs
     fractions_per_chip: int = 10
+    tail_chips: int = 0  # chips on one extra, partially-filled host
 
     @property
     def num_chips(self) -> int:
-        return self.num_hosts * self.chips_per_host
+        return self.num_hosts * self.chips_per_host + self.tail_chips
 
     @property
     def total_units(self) -> int:

@@ -1,8 +1,15 @@
-"""Bridge: Scepsy scheduler output -> simulated serving deployment."""
+"""Bridge: Scepsy scheduler output -> simulated serving deployment.
+
+Two shapes: per-workflow private replicas (partitioned fleet, one Router
+per workflow-local LLM name), and pooled tenants (one shared replica set
+per canonical model, each workflow holding a weighted routing view into
+it).
+"""
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
+from repro.configs.base import ArchConfig
 from repro.core.pipeline import Allocation
 from repro.serving.simulator import EngineSim, EventLoop, Router
 from repro.workflows.runtime import Workflow
@@ -22,3 +29,43 @@ def routers_from_allocations(wf: Workflow, allocations: Dict[str, Allocation],
         ]
         routers[llm] = Router(engines)
     return routers
+
+
+def tenant_routers(allocations: Dict[str, Allocation],
+                   cfgs: Dict[str, ArchConfig], loop: EventLoop, *,
+                   prefix_caching: bool = True,
+                   avg_context: int = 1024) -> Dict[str, Router]:
+    """One shared Router per tenant (canonical model id)."""
+    routers: Dict[str, Router] = {}
+    for cid, alloc in allocations.items():
+        engines = [
+            EngineSim(cfgs[cid], loop, tp=alloc.tp, fraction=alloc.fraction,
+                      name=f"{cid}/{r}", prefix_caching=prefix_caching,
+                      avg_context=avg_context)
+            for r in range(alloc.replicas)
+        ]
+        routers[cid] = Router(engines)
+    return routers
+
+
+def pooled_fleet_routers(
+        tenants: Dict[str, Router],
+        members: Dict[str, List[Tuple[str, str]]],
+        routing: Dict[str, Dict[str, Dict[int, float]]],
+) -> Dict[str, Dict[str, Router]]:
+    """Per-workflow router dicts over *shared* tenant replicas.
+
+    ``members`` maps canonical id -> [(workflow, local llm name)];
+    ``routing`` is each workflow's routing table (local llm -> replica
+    index -> weight).  The returned dict is keyed workflow -> local llm
+    name -> weighted Router view, directly usable as a ClusterDriver's
+    ``routers``.
+    """
+    out: Dict[str, Dict[str, Router]] = {}
+    for cid, mem in members.items():
+        base = tenants[cid]
+        for workflow, llm in mem:
+            weights = routing.get(workflow, {}).get(llm)
+            view = base.view(weights) if weights is not None else base
+            out.setdefault(workflow, {})[llm] = view
+    return out

@@ -207,25 +207,45 @@ class EngineSim:
 
 
 class Router:
-    """KV-cache-aware + least-loaded routing across one LLM's replicas."""
+    """KV-cache-aware + least-loaded routing across one LLM's replicas.
 
-    def __init__(self, replicas: List[EngineSim], *, affinity: bool = True):
+    ``weights`` (replica index -> weight) biases the least-loaded choice
+    to the workflow's routing table in pooled multi-tenant deployments:
+    a replica's effective load is load/weight, and zero-weight replicas
+    are never chosen.  Several routers may *share* one replica list (one
+    per tenant workflow — see :meth:`view`); queue state then reflects
+    cross-workflow contention automatically.
+    """
+
+    def __init__(self, replicas: List[EngineSim], *, affinity: bool = True,
+                 weights: Optional[Dict[int, float]] = None):
         assert replicas
         self.replicas = replicas
         self.affinity = affinity
+        self.weights = weights
+
+    def view(self, weights: Dict[int, float]) -> "Router":
+        """A per-tenant view over the same physical replicas."""
+        return Router(self.replicas, affinity=self.affinity, weights=weights)
+
+    def _weight(self, idx: int) -> float:
+        if self.weights is None:
+            return 1.0
+        return self.weights.get(idx, 0.0)
 
     def submit(self, req: EngineRequest) -> None:
-        live = [r for r in self.replicas if not getattr(r, "failed", False)]
+        live = [(i, r) for i, r in enumerate(self.replicas)
+                if not getattr(r, "failed", False) and self._weight(i) > 0]
         if not live:
             raise RuntimeError("no live replicas")
         target = None
         if self.affinity and req.parent_id is not None:
-            for r in live:
+            for _, r in live:
                 if r.has_parent(req.parent_id):
                     target = r
                     break
         if target is None:
-            target = min(live, key=lambda r: r.load)
+            _, target = min(live, key=lambda ir: ir[1].load / self._weight(ir[0]))
         target.submit(req)
 
     def fail_replica(self, idx: int) -> None:

@@ -132,15 +132,28 @@ class RequestRecord:
 
 
 class ClusterDriver:
-    """Drives workflow requests through routed engine replicas."""
+    """Drives workflow requests through routed engine replicas.
+
+    ``routers`` is keyed by whatever serving tier the deployment exposes:
+    workflow-local stage names in a partitioned deployment, or shared
+    tenant ids in a pooled one — in the latter case ``route_map``
+    translates each call's workflow-local LLM name to its tenant, so the
+    same workflow program runs unchanged against pooled replicas.
+    """
 
     def __init__(self, wf: Workflow, routers: Dict[str, Router],
-                 loop: EventLoop):
+                 loop: EventLoop,
+                 route_map: Optional[Dict[str, str]] = None):
         self.wf = wf
         self.routers = routers
         self.loop = loop
+        self.route_map = route_map or {}
         self.records: List[RequestRecord] = []
         self._id_counter = [0]
+
+    def router_for(self, llm: str) -> Router:
+        """The router serving a workflow-local LLM name (tenancy-aware)."""
+        return self.routers[self.route_map.get(llm, llm)]
 
     def run_open_loop(self, arrival_rate: float, n_requests: int, *,
                       seed: int = 0, until: float = math.inf
@@ -194,4 +207,4 @@ class ClusterDriver:
                 output_tokens=max(c.output_tokens, 1), arrival=self.loop.now,
                 on_complete=on_done, parent_id=c.parent,
                 workflow_request=rec.request_id)
-            self.routers[c.llm].submit(req)
+            self.router_for(c.llm).submit(req)

@@ -1,0 +1,355 @@
+"""Pooled multi-tenant allocation: pipeline merging (rate-weighted share
+fusion keyed by canonical model identity), pooled scheduling vs the
+partitioned split, per-workflow attribution, routing weights, welfare
+objectives, and the warm-started split search.
+
+Synthetic analytic profiles cover the algebra; the 3-workflow registry
+fleet (react_agent / map_reduce / debate — all serving the same 1B/8B
+configs) covers the end-to-end pooled path.
+"""
+import math
+
+import pytest
+
+from repro import hw
+from repro.configs.base import ArchConfig
+from repro.core.pipeline import (AggregateLLMPipeline, MergedLLMProfile,
+                                 PipelineStage, canonical_llm_id,
+                                 merge_pipelines)
+from repro.core.profiler import LLMProfile, TPProfile
+from repro.core.scepsy import build_pipeline, deploy_multi
+from repro.core.scheduler import (SchedulerConfig, schedule_multi)
+from repro.workflows.registry import get_workflow
+
+
+def _cfg(name: str) -> ArchConfig:
+    return ArchConfig(name=name, family="dense", num_layers=16,
+                      d_model=2048, num_heads=16, num_kv_heads=8,
+                      d_ff=8192, vocab_size=32_000)
+
+
+def _stage(llm: str, cfg: ArchConfig, size_gb: float, n: float,
+           p: float = 2.0) -> PipelineStage:
+    base_lat = 0.05 * size_gb
+    t_max = 40.0 / size_gb
+    by_tp = {}
+    for tp in (1, 2):
+        tmax = t_max * (tp ** 0.85)
+        rates = [f * tmax for f in (0.1, 0.3, 0.5, 0.7, 0.9)]
+        lat = [base_lat / tp / max(1 - r / tmax, 0.05) for r in rates]
+        by_tp[tp] = TPProfile(tp=tp, rates=rates,
+                              latency={"mean": lat, "p50": lat,
+                                       "p90": [2 * x for x in lat],
+                                       "p99": [4 * x for x in lat]},
+                              max_throughput=tmax)
+    prof = LLMProfile(llm=llm, arch=cfg.name, calls_per_group=n, by_tp=by_tp)
+    return PipelineStage(llm=llm, cfg=cfg, n=n, p=p, profile=prof,
+                         mean_share=1.0)
+
+
+SHARED_SMALL = _cfg("shared-small")
+SHARED_BIG = _cfg("shared-big")
+
+
+@pytest.fixture()
+def sharing_fleet():
+    """Two workflows sharing both configs under different local names."""
+    wf_a = AggregateLLMPipeline("wf_a", [
+        _stage("gen", SHARED_SMALL, 1.0, n=4.0, p=2.0),
+        _stage("ver", SHARED_BIG, 4.0, n=2.0, p=1.0),
+    ])
+    wf_b = AggregateLLMPipeline("wf_b", [
+        _stage("draft", SHARED_SMALL, 1.0, n=1.5, p=1.0),
+        _stage("judge", SHARED_BIG, 4.0, n=1.0, p=1.0),
+    ])
+    return {"wf_a": wf_a, "wf_b": wf_b}
+
+
+@pytest.fixture()
+def disjoint_fleet():
+    return {
+        "wf_a": AggregateLLMPipeline("wf_a", [
+            _stage("gen", _cfg("only-a-small"), 1.0, n=3.0),
+            _stage("ver", _cfg("only-a-big"), 4.0, n=1.0),
+        ]),
+        "wf_b": AggregateLLMPipeline("wf_b", [
+            _stage("gen", _cfg("only-b-small"), 2.0, n=2.0),
+            _stage("ver", _cfg("only-b-big"), 3.0, n=1.0),
+        ]),
+    }
+
+
+LAMS = {"wf_a": 0.5, "wf_b": 0.3}
+
+
+# ---------------------------------------------------------------------------
+# pipeline merging
+# ---------------------------------------------------------------------------
+
+
+def test_merge_keys_by_canonical_identity(sharing_fleet):
+    merged = merge_pipelines(sharing_fleet, LAMS)
+    assert set(merged.stages) == {"shared-small", "shared-big"}
+    assert set(merged.shared_llms()) == {"shared-small", "shared-big"}
+    assert canonical_llm_id(SHARED_SMALL) == "shared-small"
+    # both members present, tagged with their workflow-local names
+    mem = merged.tenants["shared-small"]
+    assert [(t.workflow, t.llm) for t in mem] == [("wf_a", "gen"),
+                                                 ("wf_b", "draft")]
+
+
+def test_merge_rate_weights_shares(sharing_fleet):
+    merged = merge_pipelines(sharing_fleet, LAMS)
+    lam_total = sum(LAMS.values())
+    st = merged.stages["shared-small"]
+    # driven at the fleet rate, the stage sees the sum of member call
+    # rates: lam_total * n == 0.5*4.0 + 0.3*1.5
+    assert lam_total * st.n == pytest.approx(0.5 * 4.0 + 0.3 * 1.5)
+    prof: MergedLLMProfile = st.profile
+    total = 0.5 * 4.0 + 0.3 * 1.5
+    assert prof.phi == pytest.approx([0.5 * 4.0 / total, 0.3 * 1.5 / total])
+
+
+def test_merge_order_invariant(sharing_fleet):
+    fwd = merge_pipelines(sharing_fleet, LAMS)
+    rev = merge_pipelines(dict(reversed(list(sharing_fleet.items()))), LAMS)
+    assert list(fwd.stages) == list(rev.stages)
+    for cid in fwd.stages:
+        a, b = fwd.stages[cid], rev.stages[cid]
+        assert a.n == pytest.approx(b.n)
+        assert a.p == pytest.approx(b.p)
+        assert a.profile.phi == pytest.approx(b.profile.phi)
+        assert ([(t.workflow, t.llm) for t in fwd.tenants[cid]]
+                == [(t.workflow, t.llm) for t in rev.tenants[cid]])
+
+
+def test_merged_profile_single_member_is_exact(sharing_fleet):
+    """With one member the mixture reduces to the member profile."""
+    st = sharing_fleet["wf_a"].stages["gen"]
+    merged = merge_pipelines({"wf_a": AggregateLLMPipeline("wf_a", [st])},
+                             {"wf_a": 0.5})
+    prof: MergedLLMProfile = merged.stages["shared-small"].profile
+    for tp in (1, 2):
+        assert (prof.max_throughput(tp)
+                == pytest.approx(st.profile.max_throughput(tp)))
+        for rate in (0.5, 2.0, 8.0):
+            want = st.profile.latency(rate, tp)
+            assert prof.latency(rate, tp) == pytest.approx(want)
+        # fraction scaling maps through unchanged
+        assert (prof.latency(1.0, 1, fraction=0.5)
+                == pytest.approx(st.profile.latency(1.0, 1, fraction=0.5)))
+
+
+def test_same_workflow_duplicate_model_stages_all_attributed():
+    """Regression: a workflow pointing two of its own stages at the same
+    model must keep BOTH stages in per-workflow attribution (members_of
+    used to key by canonical id and silently drop one)."""
+    wf = AggregateLLMPipeline("wf_a", [
+        _stage("draft", SHARED_SMALL, 1.0, n=3.0, p=1.0),
+        _stage("refine", SHARED_SMALL, 1.0, n=1.0, p=1.0),
+    ])
+    merged = merge_pipelines({"wf_a": wf, "wf_b": AggregateLLMPipeline(
+        "wf_b", [_stage("gen", SHARED_SMALL, 1.0, n=2.0, p=1.0)])},
+        {"wf_a": 0.5, "wf_b": 0.3})
+    members = merged.members_of("wf_a")
+    assert [t.llm for t in members["shared-small"]] == ["draft", "refine"]
+    from repro.core.pipeline import Allocation
+    preds = merged.attribute({"shared-small": Allocation(replicas=2)})
+    assert set(preds["wf_a"].per_llm_latency) == {"draft", "refine"}
+    assert (preds["wf_a"].latency
+            == pytest.approx(sum(preds["wf_a"].per_llm_latency.values())))
+
+
+def test_merged_capacity_is_harmonic_mixture(sharing_fleet):
+    merged = merge_pipelines(sharing_fleet, LAMS)
+    prof: MergedLLMProfile = merged.stages["shared-small"].profile
+    t = [m.profile.max_throughput(1) for m in prof.members]
+    want = 1.0 / sum(phi / ti for phi, ti in zip(prof.phi, t))
+    assert prof.max_throughput(1) == pytest.approx(want)
+    # identical member profiles -> mixture capacity equals theirs
+    assert prof.max_throughput(1) == pytest.approx(t[0])
+
+
+# ---------------------------------------------------------------------------
+# pooled scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_pooled_equals_partitioned_when_disjoint(disjoint_fleet):
+    """No shared configs: pooling cannot differ from a split, and the
+    pooled mode must return the byte-identical partitioned schedule."""
+    cfg = SchedulerConfig(max_tp=2)
+    spec = hw.PAPER_CLUSTER_16
+    part = schedule_multi(disjoint_fleet, spec, LAMS, cfg,
+                          mode="partitioned")
+    pooled = schedule_multi(disjoint_fleet, spec, LAMS, cfg, mode="pooled")
+    assert pooled.alloc_mode == "partitioned"
+    assert pooled.pooled is None
+    assert pooled.chip_split == part.chip_split
+    assert pooled.welfare == part.welfare
+    for n in disjoint_fleet:
+        assert (pooled.per_workflow[n].allocations
+                == part.per_workflow[n].allocations)
+        assert (pooled.per_workflow[n].units == part.per_workflow[n].units)
+
+
+def test_pooled_shares_tenants(sharing_fleet):
+    cfg = SchedulerConfig(max_tp=2)
+    res = schedule_multi(sharing_fleet, hw.PAPER_CLUSTER_16, LAMS, cfg,
+                         mode="pooled")
+    assert res.alloc_mode == "pooled"
+    assert res.chip_split == {}
+    assert set(res.pooled.allocations) == {"shared-small", "shared-big"}
+    # the shared allocation stays within the cluster
+    chips = sum(a.chip_units for a in res.pooled.allocations.values())
+    assert chips <= hw.PAPER_CLUSTER_16.num_chips + 1e-9
+    # both workflows see the SAME shared allocation object per tenant
+    assert (res.per_workflow["wf_a"].allocations["gen"]
+            == res.per_workflow["wf_b"].allocations["draft"])
+    for n, pred in res.pooled.predictions.items():
+        assert pred.feasible and math.isfinite(pred.latency)
+    assert 0.0 <= res.welfare <= 1.0
+
+
+def test_pooled_routing_weights_sum_to_one(sharing_fleet):
+    res = schedule_multi(sharing_fleet, hw.PAPER_CLUSTER_16, LAMS,
+                         SchedulerConfig(max_tp=2), mode="pooled")
+    routing = res.pooled.routing
+    assert set(routing) == set(sharing_fleet)
+    for wf, tables in routing.items():
+        for llm, table in tables.items():
+            assert sum(table.values()) == pytest.approx(1.0)
+            assert all(w >= 0 for w in table.values())
+
+
+def test_auto_picks_better_welfare(sharing_fleet):
+    cfg = SchedulerConfig(max_tp=2)
+    spec = hw.PAPER_CLUSTER_16
+    part = schedule_multi(sharing_fleet, spec, LAMS, cfg, mode="partitioned")
+    pooled = schedule_multi(sharing_fleet, spec, LAMS, cfg, mode="pooled")
+    auto = schedule_multi(sharing_fleet, spec, LAMS, cfg, mode="auto")
+    best = max(part.welfare, pooled.welfare)
+    assert auto.welfare == pytest.approx(best)
+    assert auto.welfare >= part.welfare - 1e-12  # never worse than PR 1
+    assert set(auto.welfare_by_mode) == {"partitioned", "pooled"}
+    assert auto.welfare_by_mode["partitioned"] == pytest.approx(part.welfare)
+    assert auto.welfare_by_mode["pooled"] == pytest.approx(pooled.welfare)
+
+
+# ---------------------------------------------------------------------------
+# registry fleet (react_agent / map_reduce / debate share 1B + 8B)
+# ---------------------------------------------------------------------------
+
+REGISTRY_FLEET = ("react_agent", "map_reduce", "debate")
+REGISTRY_LAMS = {"react_agent": 0.5, "map_reduce": 0.4, "debate": 0.8}
+
+
+@pytest.fixture(scope="module")
+def registry_pipes():
+    out = {}
+    for name in REGISTRY_FLEET:
+        pipe, _, _ = build_pipeline(get_workflow(name), n_trace_requests=10,
+                                    tp_degrees=(1, 2), max_profile_groups=8)
+        out[name] = pipe
+    return out
+
+
+@pytest.mark.parametrize("spec", (hw.PAPER_CLUSTER_8, hw.PAPER_CLUSTER_16),
+                         ids=("8chips", "16chips"))
+def test_pooled_welfare_ge_partitioned_on_registry_fleet(registry_pipes,
+                                                         spec):
+    cfg = SchedulerConfig(max_tp=2)
+    part = schedule_multi(registry_pipes, spec, REGISTRY_LAMS, cfg,
+                          mode="partitioned")
+    pooled = schedule_multi(registry_pipes, spec, REGISTRY_LAMS, cfg,
+                            mode="pooled")
+    assert pooled.alloc_mode == "pooled"
+    assert pooled.welfare >= part.welfare - 1e-9
+
+
+def test_pooled_deploy_places_once_and_routes(registry_pipes):
+    from benchmarks.common import joint_run_pooled
+
+    spec = hw.PAPER_CLUSTER_16
+    wfs = {n: get_workflow(n) for n in REGISTRY_FLEET}
+    fleet = deploy_multi(list(wfs.values()), spec, REGISTRY_LAMS,
+                         scheduler_config=SchedulerConfig(max_tp=2),
+                         pipelines=registry_pipes, mode="pooled")
+    assert fleet.mode == "pooled"
+    fleet.tenant_placement.validate()
+    # ONE physical placement: tenant instances, global chip ids, no
+    # per-workflow offsets
+    assert fleet.chip_offsets is None
+    names = {i.llm for i in fleet.tenant_placement.instances}
+    assert names == set(fleet.schedule.pooled.allocations)
+    for inst in fleet.global_instances():
+        assert all(0 <= c < spec.num_chips for c in inst.chips)
+    # every workflow got a routing table over placed instances, each
+    # summing to 1
+    inst_names = {f"{i.llm}-r{i.replica}"
+                  for i in fleet.tenant_placement.instances}
+    for n in REGISTRY_FLEET:
+        for llm, table in fleet.routing[n].items():
+            assert set(table) <= inst_names
+            assert sum(table.values()) == pytest.approx(1.0)
+    manifest = fleet.to_deployment()
+    assert set(manifest["routing"]) == set(REGISTRY_FLEET)
+    # the pooled fleet actually serves traffic end-to-end
+    meas = joint_run_pooled(wfs, fleet.schedule.pooled, REGISTRY_LAMS, 10)
+    for n in REGISTRY_FLEET:
+        assert meas[n]["completed"] == 10
+        assert math.isfinite(meas[n]["mean_latency_s"])
+
+
+# ---------------------------------------------------------------------------
+# welfare objectives
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_welfare_is_weight_normalized_mean(disjoint_fleet):
+    cfg = SchedulerConfig(max_tp=2, welfare="weighted",
+                          welfare_weights={"wf_a": 3.0, "wf_b": 1.0})
+    res = schedule_multi(disjoint_fleet, hw.PAPER_CLUSTER_16, LAMS, cfg)
+    u = res.utilities
+    want = (3.0 * u["wf_a"] + 1.0 * u["wf_b"]) / 4.0
+    assert res.welfare == pytest.approx(want)
+
+
+def test_proportional_welfare_is_log_sum(disjoint_fleet):
+    cfg = SchedulerConfig(max_tp=2, welfare="proportional")
+    res = schedule_multi(disjoint_fleet, hw.PAPER_CLUSTER_16, LAMS, cfg)
+    u = res.utilities
+    want = sum(math.log(max(x, 1e-9)) for x in u.values())
+    assert res.welfare == pytest.approx(want)
+    assert res.welfare <= 0.0  # utilities are capped at 1
+
+
+def test_unknown_welfare_rejected(disjoint_fleet):
+    with pytest.raises(ValueError, match="welfare objective"):
+        schedule_multi(disjoint_fleet, hw.PAPER_CLUSTER_16, LAMS,
+                       SchedulerConfig(max_tp=2, welfare="utilitarian"))
+
+
+# ---------------------------------------------------------------------------
+# warm-started split search
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("search", ("enumerate", "greedy"))
+def test_warm_start_parity(disjoint_fleet, search):
+    """Warm-starting each sub-schedule (shared option tables + seeded
+    branch-and-bound incumbents) must not change the chosen split, the
+    welfare, or any per-workflow predicted latency — the seed and the
+    floor bound only prune provably-worse branches."""
+    spec = hw.PAPER_CLUSTER_16
+    results = {}
+    for warm in (False, True):
+        cfg = SchedulerConfig(max_tp=2, warm_start=warm)
+        results[warm] = schedule_multi(disjoint_fleet, spec, LAMS, cfg,
+                                       search=search)
+    a, b = results[False], results[True]
+    assert a.chip_split == b.chip_split
+    assert a.welfare == pytest.approx(b.welfare)
+    for n in disjoint_fleet:
+        assert (a.per_workflow[n].prediction.latency
+                == pytest.approx(b.per_workflow[n].prediction.latency))

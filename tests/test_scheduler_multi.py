@@ -161,22 +161,55 @@ def test_greedy_search_close_to_enumeration(fleet):
     assert greedy.schedule_calls <= enum.schedule_calls
 
 
-def test_min_chips_host_aligned():
+def test_min_chips_exact_no_host_rounding():
     spec = hw.PAPER_CLUSTER_16  # 4 chips/host, F=10
     assert _min_chips_for_units(10, spec) == 1
     assert _min_chips_for_units(40, spec) == 4
-    # 41-80 units need 5-8 chips, but _subcluster truncates partial
-    # hosts — the floor must jump to the next full-host multiple
-    assert _min_chips_for_units(41, spec) == 8
-    assert _min_chips_for_units(61, spec) == 8
-    assert _min_chips_for_units(81, spec) == 12
+    # partial hosts are modeled as tail_chips now, so the floor is the
+    # exact unit quotient — no jump to the next full-host multiple
+    assert _min_chips_for_units(41, spec) == 5
+    assert _min_chips_for_units(61, spec) == 7
+    assert _min_chips_for_units(81, spec) == 9
+
+
+def test_subcluster_keeps_partial_host_remainder():
+    """Regression: _subcluster used to truncate partial hosts beyond the
+    first (9, 10, 11 chips all modeled as 8 on a 4-chip/host spec),
+    silently stranding the remainder chips of any misaligned split."""
+    spec = hw.PAPER_CLUSTER_16
+    for chips in (5, 9, 10, 11, 15):
+        sub = _subcluster(spec, chips)
+        assert sub.num_chips == chips, f"{chips} chips truncated"
+        assert sub.total_units == chips * spec.fractions_per_chip
+    # tail chips land on one extra partially-filled host
+    sub = _subcluster(spec, 9)
+    assert (sub.num_hosts, sub.chips_per_host, sub.tail_chips) == (2, 4, 1)
+
+
+def test_misaligned_split_remainder_not_stranded(fleet):
+    """A 2-workflow split on a cluster whose optimum lands between host
+    multiples: the winning split's slices must schedule with their full
+    chip count (previously chips past the last full host were dropped,
+    so a 9-chip slice scheduled as 8)."""
+    spec = hw.PAPER_CLUSTER_16
+    pipes = {n: fleet[n] for n in ("wf0", "wf1")}
+    res = schedule_multi(pipes, spec, LAMS, SchedulerConfig(max_tp=2))
+    assert sum(res.chip_split.values()) == spec.num_chips
+    F = spec.fractions_per_chip
+    for n, r in res.per_workflow.items():
+        used = sum(a.chip_units for a in r.allocations.values())
+        assert used <= res.chip_split[n] * F + 1e-9
+    # a misaligned slice really provides its full capacity to schedule()
+    r9 = schedule(pipes["wf0"], _subcluster(spec, 9), LAMS["wf0"],
+                  SchedulerConfig(max_tp=2))
+    assert sum(r9.units.values()) <= 9 * F
+    assert max(r9.units.values()) > 0
 
 
 def test_greedy_survives_host_misaligned_memory_floor():
     """A workflow whose memory floor lands between host multiples (four
-    1.5-chip stages -> 6 chips on a 4-chip/host cluster) must not strand
-    the greedy search on slices _subcluster truncates into
-    infeasibility."""
+    1.5-chip stages -> 6 chips on a 4-chip/host cluster) schedules on
+    exactly its floor now that _subcluster models the remainder."""
     spec = hw.PAPER_CLUSTER_16
     mid_cfg = ArchConfig(name="mid", family="dense", num_layers=48,
                          d_model=4096, num_heads=32, num_kv_heads=8,
@@ -196,7 +229,7 @@ def test_greedy_survives_host_misaligned_memory_floor():
     lams = {"big": 0.2, "small": 0.3}
     res = schedule_multi(pipes, spec, lams, SchedulerConfig(max_tp=2),
                          search="greedy")
-    assert res.chip_split["big"] >= 8  # full-host-aligned floor
+    assert res.chip_split["big"] >= _min_chips_for_units(total, spec)
     assert res.welfare > 0.0
 
 
