@@ -1,0 +1,335 @@
+"""Drift benchmark: welfare under ramps, static vs the escalation ladder.
+
+A pooled fleet is deployed with ``deploy_multi(..., online=True)`` and
+driven through two reproducible drift injections:
+
+* an **arrival-rate ramp** — one workflow's Poisson rate doubles at a
+  known simulation time (``ClusterDriver.schedule_arrivals`` segments);
+* a **share shift** — :func:`drift_workflow` scales one LLM's output
+  lengths, moving its aggregate execution-time share.
+
+The ``detection`` section reports what the :class:`DriftMonitor` saw:
+stable-phase false positives (should be none), the typed events, the
+detection delay and the rung the ladder recommends.  The ``scenarios``
+section measures welfare in the post-ramp regime under five policies —
+the pre-drift baseline, a static allocation that never reacts, and each
+escalation rung's reaction — and ``reactions`` reports the wall-clock
+cost of computing each rung (rung 3 re-runs trace -> profile ->
+schedule -> place from scratch, which is what makes the cheaper rungs
+worth having).
+
+JSON schema is documented in benchmarks/README.md; ``--smoke`` is the
+tiny-config mode CI runs (schema-identical, small fleet/horizons).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import cluster_for, drive_fleet, joint_run
+from repro.core.drift import DriftConfig, DriftMonitor, RateDrift, expectation_from
+from repro.core.replan import recommend_rung
+from repro.core.scepsy import build_pipeline, deploy_multi
+from repro.core.scheduler import SchedulerConfig
+from repro.serving.deploy import pooled_fleet_routers, tenant_routers
+from repro.serving.simulator import EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver, drift_workflow
+
+
+def _settings(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return {
+            "mode": "smoke",
+            "lam_targets": {"react_agent": 1.0, "map_reduce": 0.8, "debate": 2.0},
+            "chips": 16,
+            "n_trace": 8,
+            "profile_groups": 6,
+            "n_req": 10,
+            "t_warm": 60.0,
+            "t_obs": 30.0,
+            "t_post": 60.0,
+        }
+    base = {
+        "mode": "quick" if quick else "full",
+        "lam_targets": {
+            "react_agent": 1.5,
+            "map_reduce": 1.2,
+            "debate": 2.4,
+            "beam_search": 0.45,
+            "rag_reranker": 6.0,
+        },
+        "chips": 32,
+        "n_trace": 12 if quick else 30,
+        "profile_groups": 10 if quick else 30,
+        "n_req": 40 if quick else 60,
+        "t_warm": 60.0,
+        "t_obs": 40.0,
+        "t_post": 120.0,
+    }
+    return base
+
+
+RAMP_WORKFLOW = "debate"
+RAMP_FACTOR = 2.0
+SHIFT_LLM = "debater"
+SHIFT_SCALE = 1.8
+
+
+def _event_row(ev) -> dict:
+    return {
+        "type": type(ev).__name__,
+        "workflow": ev.workflow,
+        "llm": getattr(ev, "llm", None),
+        "magnitude": ev.magnitude,
+        "at": ev.at,
+    }
+
+
+def _detection_run(wfs, pooled, monitor, lams, s, *, shift=None, seed=0):
+    """Drive the pooled deployment through one drift injection and
+    report the monitor's events."""
+    loop = EventLoop()
+    tenants = tenant_routers(pooled.allocations, pooled.cfgs, loop)
+    per_wf = pooled_fleet_routers(tenants, pooled.members, pooled.routing)
+    t_ramp = s["t_warm"] + s["t_obs"]
+    for k, name in enumerate(sorted(wfs)):
+        drv = ClusterDriver(wfs[name], per_wf[name], loop, telemetry=monitor)
+        dseed = seed * 1000 + k
+        if shift is None and name == RAMP_WORKFLOW:
+            drv.schedule_arrivals(
+                [(lams[name], t_ramp), (lams[name] * RAMP_FACTOR, s["t_post"])],
+                seed=dseed,
+            )
+        elif shift is not None and name == RAMP_WORKFLOW:
+            drv.schedule_arrivals([(lams[name], t_ramp)], seed=dseed)
+            shifted = ClusterDriver(shift, per_wf[name], loop, telemetry=monitor)
+            shifted.schedule_arrivals(
+                [(0.0, t_ramp), (lams[name], s["t_post"])],
+                seed=dseed,
+                rid_start=1_000_000,
+            )
+        else:
+            drv.schedule_arrivals(
+                [(lams[name], t_ramp + s["t_post"])], seed=dseed
+            )
+    loop.schedule(s["t_warm"], monitor.calibrate)
+    loop.run(t_ramp)
+    stable_events = monitor.poll()
+    loop.run(t_ramp + s["t_post"] + 10_000.0)
+    post_events = monitor.poll()
+    hits = [
+        e
+        for e in post_events
+        if e.workflow == RAMP_WORKFLOW
+        and (isinstance(e, RateDrift) if shift is None else True)
+    ]
+    return {
+        "stable_phase_events": [_event_row(e) for e in stable_events],
+        "events": [_event_row(e) for e in post_events],
+        "detected": bool(hits),
+        "detection_delay_s": (hits[0].at - t_ramp) if hits else None,
+        "recommended_rung": recommend_rung(post_events),
+    }
+
+
+def _measure(wfs, result_or_pooled, routing, rates, n_req, seed):
+    """Simulated per-workflow latency for one scenario."""
+    if hasattr(result_or_pooled, "alloc_mode"):  # a MultiScheduleResult
+        res = result_or_pooled
+        if res.alloc_mode != "pooled":
+            return joint_run(
+                [(wfs[n], res.per_workflow[n].allocations) for n in wfs],
+                rates,
+                n_req,
+                seed=seed,
+            )
+        result_or_pooled = res.pooled
+        routing = routing or result_or_pooled.routing
+    pooled = result_or_pooled
+    loop = EventLoop()
+    tenants = tenant_routers(pooled.allocations, pooled.cfgs, loop)
+    per_wf = pooled_fleet_routers(
+        tenants, pooled.members, routing or pooled.routing
+    )
+    drivers = {n: ClusterDriver(wfs[n], per_wf[n], loop) for n in wfs}
+    return drive_fleet(drivers, rates, n_req, loop, seed=seed)
+
+
+def _scenario_row(measured, ref) -> dict:
+    utils = {
+        n: min(ref[n] / max(m["mean_latency_s"], 1e-9), 1.0)
+        for n, m in measured.items()
+    }
+    return {
+        "welfare_measured": min(utils.values()),
+        "per_workflow": {
+            n: {
+                "mean_latency_s": m["mean_latency_s"],
+                "completed": m["completed"],
+                "utility": utils[n],
+            }
+            for n, m in measured.items()
+        },
+    }
+
+
+def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    s = _settings(quick, smoke)
+    lams = s["lam_targets"]
+    pipes, wfs = {}, {}
+    for name in lams:
+        wf = get_workflow(name)
+        wfs[name] = wf
+        pipes[name], _, _ = build_pipeline(
+            wf,
+            n_trace_requests=s["n_trace"],
+            tp_degrees=(1, 2),
+            max_profile_groups=s["profile_groups"],
+            seed=seed,
+        )
+    spec = cluster_for(s["chips"])
+    cfg = SchedulerConfig(max_tp=2, routing_policy="partition")
+
+    t0 = time.perf_counter()
+    dep = deploy_multi(
+        list(wfs.values()),
+        spec,
+        lams,
+        pipelines=pipes,
+        scheduler_config=cfg,
+        mode="pooled",
+        online=True,
+        n_trace_requests=s["n_trace"],
+        max_profile_groups=s["profile_groups"],
+        seed=seed,
+    )
+    plan_time = time.perf_counter() - t0
+    pooled0 = dep.schedule.pooled
+    ctrl = dep.controller
+
+    # -- detection: rate ramp + share shift (fresh monitors) -------------
+    def fresh_monitor():
+        return DriftMonitor(
+            {n: expectation_from(pipes[n], lams[n]) for n in pipes},
+            DriftConfig(),
+        )
+
+    shifted = drift_workflow(
+        wfs[RAMP_WORKFLOW], output_scale={SHIFT_LLM: SHIFT_SCALE}
+    )
+    detection = {
+        "rate_ramp": _detection_run(
+            wfs, pooled0, fresh_monitor(), lams, s, seed=seed
+        ),
+        "share_shift": _detection_run(
+            wfs, pooled0, fresh_monitor(), lams, s, shift=shifted, seed=seed
+        ),
+    }
+
+    # -- reactions: the three rungs against the ramped targets -----------
+    new_lams = dict(lams)
+    new_lams[RAMP_WORKFLOW] = lams[RAMP_WORKFLOW] * RAMP_FACTOR
+    act1 = ctrl.rebalance(new_lams)
+    act2 = ctrl.replan(new_lams, cold=False)
+    act3 = ctrl.replan(new_lams, cold=True)
+    speedup1 = act3.latency_s / max(act1.latency_s, 1e-9)
+    speedup2 = act3.latency_s / max(act2.latency_s, 1e-9)
+    reactions = {
+        "rung1": {"latency_s": act1.latency_s, "feasible": act1.feasible},
+        "rung2": {
+            "latency_s": act2.latency_s,
+            "feasible": act2.feasible,
+            "welfare_predicted": act2.welfare,
+            "alloc_mode": act2.result.alloc_mode if act2.result else None,
+            "schedule_calls": act2.result.schedule_calls if act2.result else None,
+        },
+        "rung3": {
+            "latency_s": act3.latency_s,
+            "feasible": act3.feasible,
+            "welfare_predicted": act3.welfare,
+            "alloc_mode": act3.result.alloc_mode if act3.result else None,
+            "migration": act3.migration.summary() if act3.migration else None,
+        },
+        "speedup_rung1_vs_cold": speedup1,
+        "speedup_rung2_vs_cold": speedup2,
+    }
+
+    # -- scenarios: measured welfare in the post-ramp regime -------------
+    n_req = s["n_req"]
+    meas = {
+        "pre": _measure(wfs, pooled0, pooled0.routing, lams, n_req, seed + 1),
+        "static": _measure(wfs, pooled0, pooled0.routing, new_lams, n_req, seed + 1),
+        "rung1": _measure(wfs, pooled0, act1.routing, new_lams, n_req, seed + 1),
+        "rung2": _measure(wfs, act2.result, act2.routing, new_lams, n_req, seed + 1),
+        "rung3": _measure(wfs, act3.result, act3.routing, new_lams, n_req, seed + 1),
+    }
+    ref = {n: meas["pre"][n]["mean_latency_s"] for n in wfs}
+    scenarios = {name: _scenario_row(m, ref) for name, m in meas.items()}
+
+    static_w = scenarios["static"]["welfare_measured"]
+    doc = {
+        "benchmark": "drift_rescheduling",
+        "mode": s["mode"],
+        "seed": seed,
+        "config": {
+            "fleet": sorted(wfs),
+            "cluster_chips": spec.num_chips,
+            "lam_targets": lams,
+            "ramp": {"workflow": RAMP_WORKFLOW, "factor": RAMP_FACTOR},
+            "share_shift": {
+                "workflow": RAMP_WORKFLOW,
+                "llm": SHIFT_LLM,
+                "output_scale": SHIFT_SCALE,
+            },
+            "phases_s": {
+                "warmup": s["t_warm"],
+                "stable": s["t_obs"],
+                "post": s["t_post"],
+            },
+            "n_req": n_req,
+        },
+        "plan": {
+            "alloc_mode": dep.mode,
+            "welfare": dep.welfare,
+            "plan_time_s": plan_time,
+            "tenants": {
+                cid: {"replicas": a.replicas, "tp": a.tp, "fraction": a.fraction}
+                for cid, a in pooled0.allocations.items()
+            },
+        },
+        "detection": detection,
+        "reactions": reactions,
+        "scenarios": scenarios,
+        "acceptance": {
+            "rung1_recovers": scenarios["rung1"]["welfare_measured"] > static_w,
+            "rung2_recovers": scenarios["rung2"]["welfare_measured"] > static_w,
+            "rung3_recovers": scenarios["rung3"]["welfare_measured"] > static_w,
+            "rung1_speedup_ge_5x": speedup1 >= 5.0,
+            "rung2_speedup_ge_5x": speedup2 >= 5.0,
+        },
+    }
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true", help="full-size sweeps")
+    ap.add_argument(
+        "--smoke", action="store_true", help="tiny CI config (schema-identical)"
+    )
+    ap.add_argument("--seed", type=int, default=0, help="RNG seed for all phases")
+    ap.add_argument("--out", default=None, help="also write the JSON report here")
+    args = ap.parse_args()
+    run(quick=not args.full, smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

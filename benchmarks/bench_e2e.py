@@ -2,7 +2,6 @@
 (RAG+reranker and beam search; 4/8/16 chips)."""
 from __future__ import annotations
 
-from repro import hw
 from repro.core.scepsy import build_pipeline
 from benchmarks.common import HEADER, cluster_for, run_k8s, run_scepsy
 from repro.workflows.beam_search import BEAM_SEARCH

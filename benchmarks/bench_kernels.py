@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import hw
 from repro.kernels.decode_attention import decode_attention_op, decode_attention_ref

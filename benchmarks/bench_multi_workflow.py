@@ -15,6 +15,7 @@ Two sections, one JSON document:
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -33,23 +34,31 @@ FULL_FLEET = QUICK_FLEET + (("map_reduce", 0.4),)
 REGISTRY_FLEET = (("react_agent", 0.5), ("map_reduce", 0.4), ("debate", 0.8))
 
 
-def _build(fleet, quick: bool):
+def _sizes(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return {"n_trace": 8, "groups": 6, "n_req": 8}
+    return {"n_trace": 12 if quick else 30, "groups": 10 if quick else 30,
+            "n_req": 20 if quick else 50}
+
+
+def _build(fleet, sizes: dict, seed: int):
     pipes, wfs = {}, {}
     for name, _ in fleet:
         wf = get_workflow(name)
         wfs[name] = wf
         pipes[name], _, _ = build_pipeline(
-            wf, n_trace_requests=12 if quick else 30, tp_degrees=(1, 2),
-            max_profile_groups=10 if quick else 30)
+            wf, n_trace_requests=sizes["n_trace"], tp_degrees=(1, 2),
+            max_profile_groups=sizes["groups"], seed=seed)
     return pipes, wfs
 
 
-def _fleet_section(quick: bool):
-    fleet = QUICK_FLEET if quick else FULL_FLEET
+def _fleet_section(quick: bool, smoke: bool, seed: int):
+    fleet = QUICK_FLEET if (quick or smoke) else FULL_FLEET
     spec = hw.PAPER_CLUSTER_16
-    n_req = 20 if quick else 50
+    sizes = _sizes(quick, smoke)
+    n_req = sizes["n_req"]
     lams = dict(fleet)
-    pipes, wfs = _build(fleet, quick)
+    pipes, wfs = _build(fleet, sizes, seed)
 
     t0 = time.perf_counter()
     res = schedule_multi(pipes, spec, lams, SchedulerConfig(max_tp=2),
@@ -57,7 +66,7 @@ def _fleet_section(quick: bool):
     sched_time = time.perf_counter() - t0
 
     measured = joint_run([(wfs[n], res.per_workflow[n].allocations)
-                          for n in pipes], lams, n_req)
+                          for n in pipes], lams, n_req, seed=seed)
     return {
         "benchmark": "multi_workflow_fleet",
         "cluster_chips": spec.num_chips,
@@ -83,12 +92,13 @@ def _fleet_section(quick: bool):
     }
 
 
-def _pooled_section(quick: bool):
+def _pooled_section(quick: bool, smoke: bool, seed: int):
     lams = dict(REGISTRY_FLEET)
-    n_req = 20 if quick else 50
-    pipes, wfs = _build(REGISTRY_FLEET, quick)
+    sz = _sizes(quick, smoke)
+    n_req = sz["n_req"]
+    pipes, wfs = _build(REGISTRY_FLEET, sz, seed)
     cfg = SchedulerConfig(max_tp=2)
-    sizes = (16,) if quick else (16, 32, 64)
+    sizes = (16,) if (quick or smoke) else (16, 32, 64)
     rows = []
     for chips in sizes:
         spec = cluster_for(chips)
@@ -102,8 +112,9 @@ def _pooled_section(quick: bool):
         pooled, pooled_t = per_mode["pooled"]
         auto, auto_t = per_mode["auto"]
         meas_part = joint_run([(wfs[n], part.per_workflow[n].allocations)
-                               for n in pipes], lams, n_req)
-        meas_pooled = (joint_run_pooled(wfs, pooled.pooled, lams, n_req)
+                               for n in pipes], lams, n_req, seed=seed)
+        meas_pooled = (joint_run_pooled(wfs, pooled.pooled, lams, n_req,
+                                        seed=seed)
                        if pooled.alloc_mode == "pooled" else meas_part)
         rows.append({
             "cluster_chips": chips,
@@ -144,12 +155,32 @@ def _pooled_section(quick: bool):
             "clusters": rows}
 
 
-def run(quick: bool = False):
-    doc = _fleet_section(quick)
-    doc["pooled_vs_partitioned"] = _pooled_section(quick)
-    print(json.dumps(doc, indent=2))
+def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    doc = _fleet_section(quick, smoke, seed)
+    doc["seed"] = seed
+    doc["pooled_vs_partitioned"] = _pooled_section(quick, smoke, seed)
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
     return doc
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="multi-workflow fleet benchmark (pooled vs partitioned)")
+    ap.add_argument("--full", action="store_true", help="full-size sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (schema-identical)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for tracing, profiling and joint runs "
+                         "(makes pooled-vs-partitioned sections reproducible)")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report here")
+    args = ap.parse_args()
+    run(quick=not args.full, smoke=args.smoke, seed=args.seed, out=args.out)
+
+
 if __name__ == "__main__":
-    run(quick=True)
+    main()

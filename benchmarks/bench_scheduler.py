@@ -7,7 +7,6 @@ water-filling loop visits (the table depends only on (stage, units),
 never on the chip count)."""
 from __future__ import annotations
 
-import math
 import time
 
 from benchmarks.common import cluster_for

@@ -5,11 +5,10 @@ from __future__ import annotations
 import math
 import statistics
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Dict, Optional
 
 from repro import hw
 from repro.core.pipeline import AggregateLLMPipeline
-from repro.core.scepsy import build_pipeline
 from repro.core.scheduler import (PooledScheduleResult, SchedulerConfig,
                                   schedule)
 from repro.serving.deploy import (pooled_fleet_routers,
@@ -77,13 +76,13 @@ def joint_run(wf_allocs, rates: Dict[str, float], n_req: int, *,
     for wf, allocs in wf_allocs:
         routers = routers_from_allocations(wf, allocs, loop)
         drivers[wf.name] = ClusterDriver(wf, routers, loop)
-    return _drive_fleet(drivers, rates, n_req, loop,
-                        seed=seed, horizon=horizon)
+    return drive_fleet(drivers, rates, n_req, loop,
+                       seed=seed, horizon=horizon)
 
 
-def _drive_fleet(drivers: Dict[str, ClusterDriver],
-                 rates: Dict[str, float], n_req: int, loop: EventLoop, *,
-                 seed: int = 0, horizon: float = 1e5) -> Dict[str, dict]:
+def drive_fleet(drivers: Dict[str, ClusterDriver],
+                rates: Dict[str, float], n_req: int, loop: EventLoop, *,
+                seed: int = 0, horizon: float = 1e5) -> Dict[str, dict]:
     import random
 
     for k, name in enumerate(sorted(drivers)):
@@ -116,8 +115,8 @@ def joint_run_pooled(wfs: Dict[str, Workflow], pooled: PooledScheduleResult,
     per_wf = pooled_fleet_routers(tenants, pooled.members, pooled.routing)
     drivers = {name: ClusterDriver(wfs[name], per_wf[name], loop)
                for name in wfs}
-    return _drive_fleet(drivers, rates, n_req, loop,
-                        seed=seed, horizon=horizon)
+    return drive_fleet(drivers, rates, n_req, loop,
+                       seed=seed, horizon=horizon)
 
 
 def cluster_for(chips: int) -> hw.ClusterSpec:

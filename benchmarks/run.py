@@ -15,8 +15,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_ablation, bench_combined, bench_e2e,
-                            bench_kernels, bench_multi_workflow,
+    from benchmarks import (bench_ablation, bench_combined, bench_drift,
+                            bench_e2e, bench_kernels, bench_multi_workflow,
                             bench_multiplexing, bench_pipeline_accuracy,
                             bench_roofline, bench_scheduler,
                             bench_stability, bench_workflow_aware)
@@ -30,6 +30,7 @@ def main() -> None:
         ("fig10_ablation", bench_ablation),
         ("fig11_scheduler_search", bench_scheduler),
         ("multi_workflow_fleet", bench_multi_workflow),
+        ("drift_rescheduling", bench_drift),
         ("pipeline_accuracy", bench_pipeline_accuracy),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),

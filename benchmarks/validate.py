@@ -1,0 +1,94 @@
+"""Benchmark-report validator: schema presence + finite metrics.
+
+CI's bench-smoke job runs the benchmarks in ``--smoke`` mode and then
+this validator over the emitted JSON reports; a missing section or any
+non-finite number (NaN/Infinity) fails the job.
+
+    PYTHONPATH=src python -m benchmarks.validate report_drift.json ...
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import List
+
+# required top-level keys per report type (the "benchmark" field)
+REQUIRED = {
+    "drift_rescheduling": (
+        "config",
+        "plan",
+        "detection",
+        "reactions",
+        "scenarios",
+        "acceptance",
+    ),
+    "multi_workflow_fleet": (
+        "welfare",
+        "workflows",
+        "pooled_vs_partitioned",
+    ),
+}
+
+
+def _walk_finite(node, path: str, errors: List[str]) -> None:
+    if isinstance(node, bool) or node is None or isinstance(node, str):
+        return
+    if isinstance(node, (int, float)):
+        if not math.isfinite(node):
+            errors.append(f"non-finite metric at {path}: {node!r}")
+        return
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _walk_finite(v, f"{path}.{k}", errors)
+        return
+    if isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk_finite(v, f"{path}[{i}]", errors)
+        return
+    errors.append(f"unexpected node type at {path}: {type(node).__name__}")
+
+
+def validate_report(doc: dict, name: str = "report") -> List[str]:
+    """Return a list of problems (empty = valid)."""
+    errors: List[str] = []
+    kind = doc.get("benchmark")
+    if kind not in REQUIRED:
+        errors.append(
+            f"{name}: unknown or missing 'benchmark' field: {kind!r} "
+            f"(known: {sorted(REQUIRED)})"
+        )
+        return errors
+    for key in REQUIRED[kind]:
+        if key not in doc:
+            errors.append(f"{name}: missing required section {key!r}")
+    _walk_finite(doc, name, errors)
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.validate report.json ...")
+        return 2
+    failures = 0
+    for path in argv:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"FAIL {path}: unreadable or invalid JSON ({e})")
+            failures += 1
+            continue
+        errors = validate_report(doc, path)
+        if errors:
+            failures += 1
+            for err in errors:
+                print(f"FAIL {err}")
+        else:
+            print(f"OK   {path} ({doc['benchmark']})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

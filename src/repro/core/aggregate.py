@@ -10,10 +10,10 @@ For every LLM *m* in a trace set, extract:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
-from repro.core.trace import LLMCall, TraceStore, WorkflowTrace
+from repro.core.trace import LLMCall, TraceStore
 
 
 def merged_busy_time(intervals: Sequence[Tuple[float, float]]) -> float:

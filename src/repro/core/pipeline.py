@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs.base import ArchConfig
 from repro.core.aggregate import WorkflowStats
@@ -326,21 +326,52 @@ class MergedPipeline(AggregateLLMPipeline):
                                 per_llm_latency=per_llm)
         return out
 
-    def routing_weights(self, alloc: Dict[str, Allocation]
+    def routing_weights(self, alloc: Dict[str, Allocation], *,
+                        policy: str = "uniform"
                         ) -> Dict[str, Dict[str, Dict[int, float]]]:
         """workflow -> local llm name -> replica index -> weight.
 
-        Pooled replicas of a tenant are identical, so every workflow
-        spreads its calls uniformly; weights per (workflow, llm) sum
-        to 1.  This is the routing table deploy_multi hands each
-        workflow instead of a private chip offset.
+        Weights per (workflow, llm) sum to 1.  This is the routing table
+        deploy_multi hands each workflow instead of a private chip
+        offset.
+
+        ``policy="uniform"``: pooled replicas of a tenant are identical,
+        so every workflow spreads its calls evenly over all of them.
+
+        ``policy="partition"``: each member owns a contiguous,
+        load-proportional *block* of the replica set (member i with
+        call-rate share φ_i covers the interval [Σ_{j<i} φ_j·d,
+        Σ_{j<=i} φ_j·d) of the d replicas; a replica straddling a block
+        boundary is shared pro rata).  Concentrating a workflow on few
+        replicas improves KV/prefix affinity and isolates tenants — and
+        because the blocks are a pure function of the current rate mix,
+        re-deriving them IS the rung-1 drift reaction: re-balance with
+        no re-placement.
         """
+        if policy not in ("uniform", "partition"):
+            raise ValueError(f"unknown routing policy {policy!r}")
         out: Dict[str, Dict[str, Dict[int, float]]] = {}
         for cid, mem in self.tenants.items():
             d = max(alloc[cid].replicas, 1)
-            for t in mem:
-                out.setdefault(t.workflow, {})[t.llm] = {
-                    r: 1.0 / d for r in range(d)}
+            if policy == "uniform":
+                for t in mem:
+                    out.setdefault(t.workflow, {})[t.llm] = {
+                        r: 1.0 / d for r in range(d)}
+                continue
+            prof: MergedLLMProfile = self.stages[cid].profile
+            cursor = 0.0
+            for phi, t in zip(prof.phi, prof.members):
+                span = phi * d
+                lo, hi = cursor, cursor + span
+                cursor = hi
+                w: Dict[int, float] = {}
+                for r in range(d):
+                    overlap = min(hi, r + 1) - max(lo, r)
+                    if overlap > 1e-12:
+                        w[r] = overlap / max(span, 1e-12)
+                if not w:  # zero-rate member: park it on its block start
+                    w = {min(int(lo), d - 1): 1.0}
+                out.setdefault(t.workflow, {})[t.llm] = w
         return out
 
 

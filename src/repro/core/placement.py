@@ -17,7 +17,6 @@ most-constrained-first heuristic:
 from __future__ import annotations
 
 import json
-import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -261,6 +260,64 @@ def tenant_routing(placement: Placement,
                 table = {k: v / total for k, v in table.items()}
             out.setdefault(workflow, {})[llm] = table
     return out
+
+
+@dataclass
+class MigrationDiff:
+    """What a re-placement actually changes, instance by instance.
+
+    A full re-plan hands the operator this diff — chips to move, replicas
+    to add or drop — rather than a from-scratch manifest, so a rung-3
+    drift reaction is an *edit* to the running deployment.  An instance
+    is keyed ``llm-r<replica>``; ``chip_loads`` counts the (instance,
+    chip) assignments present in the new placement but not the old one —
+    i.e. weight-loading events the migration must pay for.
+    """
+
+    added: List[str] = field(default_factory=list)
+    dropped: List[str] = field(default_factory=list)
+    moved: List[str] = field(default_factory=list)
+    unchanged: List[str] = field(default_factory=list)
+    chip_loads: int = 0
+
+    @property
+    def chips_moved(self) -> int:
+        return self.chip_loads
+
+    def summary(self) -> dict:
+        return {
+            "replicas_added": len(self.added),
+            "replicas_dropped": len(self.dropped),
+            "replicas_moved": len(self.moved),
+            "replicas_unchanged": len(self.unchanged),
+            "chips_moved": self.chip_loads,
+        }
+
+
+def migration_diff(old: Placement, new: Placement) -> MigrationDiff:
+    """Instance-level diff between two placements of the same cluster."""
+    def keyed(p: Placement) -> Dict[str, PlacedInstance]:
+        return {f"{i.llm}-r{i.replica}": i for i in p.instances}
+
+    a, b = keyed(old), keyed(new)
+    diff = MigrationDiff()
+    for name in sorted(set(a) | set(b)):
+        if name not in a:
+            diff.added.append(name)
+            diff.chip_loads += len(b[name].chips)
+        elif name not in b:
+            diff.dropped.append(name)
+        else:
+            oi, ni = a[name], b[name]
+            fresh = set(ni.chips) - set(oi.chips)
+            if fresh or oi.units_per_chip != ni.units_per_chip \
+                    or oi.tp != ni.tp:
+                diff.moved.append(name)
+                diff.chip_loads += len(fresh) if oi.tp == ni.tp else \
+                    len(ni.chips)
+            else:
+                diff.unchanged.append(name)
+    return diff
 
 
 def save_deployment(placement: Placement, path: str,

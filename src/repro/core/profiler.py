@@ -16,11 +16,11 @@ from __future__ import annotations
 import math
 import random
 from bisect import bisect_left
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ArchConfig
-from repro.core.trace import LLMCall, TraceStore
+from repro.core.trace import TraceStore
 from repro.serving.simulator import EngineRequest, EngineSim, EventLoop
 
 DEP_EPS = 1e-9

@@ -2,7 +2,6 @@
 place (paper Fig. 2 end-to-end flow)."""
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -95,6 +94,9 @@ class ScepsyFleetDeployment:
     mode: str = "partitioned"
     tenant_placement: Optional[Placement] = None
     routing: Optional[Dict[str, Dict[str, Dict[str, float]]]] = None
+    # online drift handling (deploy_multi(..., online=True)): a
+    # ReplanController wired to a DriftMonitor over this deployment
+    controller: Optional[object] = None
 
     def global_instances(self):
         """Every placed instance in physical cluster coordinates."""
@@ -128,7 +130,10 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
                  pipelines: Optional[Dict[str, AggregateLLMPipeline]] = None,
                  split_step: int = 1, search: str = "auto",
                  mode: str = "partitioned",
-                 welfare: Optional[str] = None) -> ScepsyFleetDeployment:
+                 welfare: Optional[str] = None,
+                 online: bool = False,
+                 drift_config=None,
+                 max_profile_groups: int = 60) -> ScepsyFleetDeployment:
     """Fleet flow: trace/profile each workflow, allocate the cluster with
     :func:`schedule_multi` (``mode`` selects partitioned slices vs the
     pooled multi-tenant allocation vs auto), and emit placements.
@@ -142,6 +147,14 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
 
     ``welfare`` overrides ``scheduler_config.welfare`` (egalitarian /
     weighted / proportional).
+
+    ``online=True`` attaches an online re-scheduling controller
+    (``.controller``): a :class:`repro.core.drift.DriftMonitor` primed
+    with this deployment's profiled expectations (feed it to the cluster
+    executor as ``telemetry=``) plus a
+    :class:`repro.core.replan.ReplanController` whose escalation ladder
+    re-plans incrementally against this deployment's warm state.
+    ``drift_config`` is an optional :class:`repro.core.drift.DriftConfig`.
     """
     import dataclasses as dc
 
@@ -157,13 +170,42 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
         for wf in wfs:
             pipeline, stats, _ = build_pipeline(
                 wf, n_trace_requests=n_trace_requests,
-                tp_degrees=_default_tp_degrees(spec), seed=seed)
+                tp_degrees=_default_tp_degrees(spec), seed=seed,
+                max_profile_groups=max_profile_groups)
             pipelines[wf.name] = pipeline
             stats_by_name[wf.name] = stats
     else:
         stats_by_name = {n: None for n in pipelines}
     multi = schedule_multi(pipelines, spec, lam_targets, cfg,
                            split_step=split_step, search=search, mode=mode)
+
+    def _controller(placement=None):
+        if not online:
+            return None
+        from repro.core.drift import DriftConfig, DriftMonitor, \
+            expectation_from
+        from repro.core.replan import ReplanController
+
+        monitor = DriftMonitor(
+            {n: expectation_from(pipelines[n], lam_targets[n],
+                                 stats_by_name.get(n))
+             for n in pipelines},
+            drift_config or DriftConfig())
+        wf_by_name = {wf.name: wf for wf in wfs}
+
+        def refresh(name: str) -> AggregateLLMPipeline:
+            # a cold (rung-3) re-plan re-runs trace -> profile ->
+            # synthesize at the same fidelity the deployment was built at;
+            # warm rungs reuse the deployed pipelines
+            pipe, _, _ = build_pipeline(
+                wf_by_name[name], n_trace_requests=n_trace_requests,
+                tp_degrees=_default_tp_degrees(spec), seed=seed,
+                max_profile_groups=max_profile_groups)
+            return pipe
+
+        return ReplanController(pipelines, spec, lam_targets, cfg,
+                                result=multi, placement=placement,
+                                monitor=monitor, pipeline_refresh=refresh)
 
     if multi.alloc_mode == "pooled":
         pooled = multi.pooled
@@ -179,7 +221,8 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
                                      spec=spec, chip_offsets=None,
                                      mode="pooled",
                                      tenant_placement=placement,
-                                     routing=routing)
+                                     routing=routing,
+                                     controller=_controller(placement))
 
     deployments = {}
     for name, result in multi.per_workflow.items():
@@ -208,4 +251,5 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
             f"cluster has {spec.num_chips}")
     return ScepsyFleetDeployment(deployments, multi.chip_split,
                                  multi.welfare, multi, spec=spec,
-                                 chip_offsets=offsets)
+                                 chip_offsets=offsets,
+                                 controller=_controller())

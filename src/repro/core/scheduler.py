@@ -17,7 +17,6 @@ Pruning (paper's three strategies + one exploited symmetry):
 """
 from __future__ import annotations
 
-import itertools
 import math
 import time
 from dataclasses import dataclass, field
@@ -25,8 +24,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro import hw
 from repro.configs.base import ArchConfig
-from repro.core.pipeline import (AggregateLLMPipeline, Allocation,
-                                 MergedPipeline, Prediction, merge_pipelines)
+from repro.core.pipeline import (AggregateLLMPipeline,
+                                 Allocation,
+                                 Prediction,
+                                 merge_pipelines)
 from repro.serving import costmodel as cm
 
 WELFARE_OBJECTIVES = ("egalitarian", "weighted", "proportional")
@@ -45,6 +46,11 @@ class SchedulerConfig:
     # (weight-normalized mean utility), proportional (Nash: Σ w·log u)
     welfare: str = "egalitarian"
     welfare_weights: Optional[Dict[str, float]] = None  # default: all 1.0
+    # pooled routing-table shape: "uniform" spreads every workflow over
+    # all tenant replicas; "partition" hands each workflow a load-
+    # proportional block (better KV-affinity, and re-balanceable on
+    # drift without re-placement)
+    routing_policy: str = "uniform"
     # share each workflow's best_option_for table across the split
     # search's sub-schedules (neighbouring chip counts re-use it)
     warm_start: bool = True
@@ -351,6 +357,69 @@ class PooledScheduleResult:
 
 
 @dataclass
+class FleetWarmState:
+    """Carry-over state for incremental fleet re-planning.
+
+    Everything the split search builds — the (workflow, chips) schedule
+    cache, per-workflow ``best_option_for`` tables, the winning split and
+    unit assignments — survives across :func:`schedule_multi` calls when
+    threaded through ``warm_state``.  :meth:`sync` keeps it sound: a
+    workflow whose pipeline object or arrival-rate target changed has its
+    cached schedules and option tables dropped (both bake in the lam),
+    while its last unit split is kept purely as a branch-and-bound
+    incumbent seed, which can never change the optimum found.  A changed
+    cluster spec drops everything.
+    """
+
+    sched_cache: Dict[Tuple[str, int], Optional[ScheduleResult]] = \
+        field(default_factory=dict)
+    option_tables: Dict[str, Dict] = field(default_factory=dict)
+    lams: Dict[str, float] = field(default_factory=dict)
+    pipelines: Dict[str, AggregateLLMPipeline] = field(default_factory=dict)
+    last_split: Dict[str, int] = field(default_factory=dict)
+    last_units: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    merged_units: Optional[Dict[str, int]] = None
+    spec: Optional[hw.ClusterSpec] = None
+
+    def invalidate(self, workflow: str) -> None:
+        for key in [k for k in self.sched_cache if k[0] == workflow]:
+            del self.sched_cache[key]
+        self.option_tables.pop(workflow, None)
+
+    def clear(self) -> None:
+        self.sched_cache.clear()
+        self.option_tables.clear()
+        self.last_split = {}
+        self.last_units = {}
+        self.merged_units = None
+
+    def sync(self, pipelines: Dict[str, AggregateLLMPipeline],
+             lam_targets: Dict[str, float],
+             spec: hw.ClusterSpec) -> List[str]:
+        """Invalidate state made stale by drift; returns the changed
+        workflow names."""
+        if self.spec is not None and self.spec != spec:
+            self.clear()
+            self.pipelines.clear()
+            self.lams.clear()
+        self.spec = spec
+        changed = []
+        for n, pipe in pipelines.items():
+            if n in self.pipelines and (self.pipelines[n] is not pipe
+                                        or self.lams.get(n)
+                                        != lam_targets[n]):
+                self.invalidate(n)
+                changed.append(n)
+            self.pipelines[n] = pipe
+            self.lams[n] = lam_targets[n]
+        for n in [x for x in self.pipelines if x not in pipelines]:
+            self.invalidate(n)
+            del self.pipelines[n]
+            self.lams.pop(n, None)
+        return changed
+
+
+@dataclass
 class MultiScheduleResult:
     per_workflow: Dict[str, ScheduleResult]
     chip_split: Dict[str, int]  # empty when alloc_mode == "pooled"
@@ -363,6 +432,7 @@ class MultiScheduleResult:
     alloc_mode: str = "partitioned"  # "partitioned" | "pooled"
     pooled: Optional[PooledScheduleResult] = None
     welfare_by_mode: Dict[str, float] = field(default_factory=dict)
+    warm_state: Optional[FleetWarmState] = None
 
 
 def _welfare_fn(config: SchedulerConfig, names: Sequence[str]):
@@ -386,7 +456,9 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
                    split_step: int = 1, *,
                    search: str = "auto",
                    max_enumerated_splits: int = 4096,
-                   mode: str = "partitioned") -> MultiScheduleResult:
+                   mode: str = "partitioned",
+                   warm_state: Optional[FleetWarmState] = None
+                   ) -> MultiScheduleResult:
     """Allocate the cluster between N >= 2 workflows.
 
     Utility of a workflow = L_ref / L (reference = its latency given the
@@ -408,6 +480,16 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
         when workflows share no LLM configs;
       * ``"auto"`` — both, keeping whichever yields higher welfare
         (ties prefer partitioned).
+
+    ``warm_state`` (a :class:`FleetWarmState`, e.g. the one returned on a
+    previous result's ``warm_state`` field) makes the call an
+    *incremental re-plan*: schedules and option tables of workflows whose
+    pipeline and target are unchanged are reused verbatim, drifted
+    workflows are re-searched from their previous unit split as a
+    branch-and-bound incumbent, and the pooled merged search is seeded
+    from the previous merged units.  The state is invalidated
+    conservatively (see :meth:`FleetWarmState.sync`), so warm results are
+    identical to a cold search over the same inputs.
     """
     t0 = time.perf_counter()
     names = list(pipelines)
@@ -436,12 +518,18 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
 
     # reference schedules (whole cluster each) double as cache seeds
     stats = {"schedule_calls": 0, "evaluated_splits": 0}
-    sched_cache: Dict[Tuple[str, int], Optional[ScheduleResult]] = {}
+    # incremental re-plan: the schedule cache and per-workflow option
+    # tables live in the (possibly caller-provided) FleetWarmState, so
+    # they carry across re-plans; sync() drops whatever drift made stale
+    ws = warm_state if warm_state is not None else FleetWarmState()
+    ws.sync(pipelines, lam_targets, spec)
+    sched_cache = ws.sched_cache
     # per-workflow best_option_for tables shared across every sub-cluster
     # size the split search visits (ROADMAP "warm-start each sub-schedule
     # from the neighbouring chip count's result"): the table depends only
     # on (stage, units), never on the cluster's chip count
-    warm: Dict[str, Dict] = {n: {} for n in names}
+    warm: Dict[str, Dict] = {n: ws.option_tables.setdefault(n, {})
+                             for n in names}
 
     def sched(n: str, chips: int) -> Optional[ScheduleResult]:
         if chips < lo_chips[n]:
@@ -461,6 +549,11 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
                         if nn == n and r is not None and r.feasible]
                 if near:
                     seed = sched_cache[(n, min(near)[1])].units
+                elif n in ws.last_units:
+                    # drifted workflow on a warm re-plan: its cached
+                    # schedules were invalidated, but the previous
+                    # plan's unit split is still a valid incumbent
+                    seed = ws.last_units[n]
             try:
                 sched_cache[key] = schedule(
                     pipelines[n], _subcluster(spec, chips),
@@ -514,6 +607,12 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
             if best is None or welfare > best[0]:
                 best = (welfare, utils, per, dict(split))
 
+        # the previous plan's split is the incumbent: evaluated first so
+        # greedy refinement and cache-driven re-plans start from it
+        prev = ws.last_split
+        if (prev and set(prev) == set(names) and sum(prev.values()) <= G
+                and all(prev[n] >= lo_chips[n] for n in names)):
+            consider(dict(prev))
         splits = (None if search == "greedy"
                   else _enumerate_splits(names, lo_chips, G, split_step,
                                          max_enumerated_splits))
@@ -533,27 +632,35 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
         if best is None:
             raise RuntimeError("no feasible multi-workflow split")
         welfare, utils, per_wf, split = best
+        ws.last_split = dict(split)
+        ws.last_units = {n: dict(per_wf[n].units) for n in names}
         return MultiScheduleResult(per_wf, split, welfare,
                                    time.perf_counter() - t0,
                                    utilities=utils,
                                    evaluated_splits=stats["evaluated_splits"],
                                    schedule_calls=stats["schedule_calls"],
                                    search_mode=smode,
-                                   alloc_mode="partitioned")
+                                   alloc_mode="partitioned",
+                                   warm_state=ws)
 
     def pooled_search() -> Optional[MultiScheduleResult]:
         merged = merge_pipelines(pipelines, lam_targets)
         if not merged.shared_llms():
             return None  # degenerate: pooling cannot differ from a split
         try:
-            res = schedule(merged, spec, merged.lam_total, config)
+            # the previous merged unit split seeds branch-and-bound: a
+            # pooled re-plan is ONE warm-started schedule() call
+            res = schedule(merged, spec, merged.lam_total, config,
+                           warm_seed=ws.merged_units)
         except (ValueError, RuntimeError):
             return None
         stats["schedule_calls"] += 1
+        ws.merged_units = dict(res.units)
         preds = merged.attribute(res.allocations, config.percentile)
         utils = {n: utility_of(n, preds[n]) for n in names}
         welfare = welfare_of(utils)
-        routing = merged.routing_weights(res.allocations)
+        routing = merged.routing_weights(res.allocations,
+                                         policy=config.routing_policy)
         # traffic-weighted chip attribution (diagnostic: the pool has no
         # per-workflow chip ownership); Allocation.chip_units is already
         # in chips (replicas x tp x fraction)
@@ -588,7 +695,8 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
             utilities=utils,
             evaluated_splits=stats["evaluated_splits"],
             schedule_calls=stats["schedule_calls"],
-            search_mode="pooled", alloc_mode="pooled", pooled=pooled)
+            search_mode="pooled", alloc_mode="pooled", pooled=pooled,
+            warm_state=ws)
 
     if mode == "partitioned":
         return partitioned_search()

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.common import use_interpret
 from repro.kernels.rwkv6_scan.kernel import wkv6_scan

@@ -32,11 +32,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, InputShape, SHAPES_BY_NAME, shapes_for
-from repro.distributed.sharding import adapt_spec, fit_spec, tree_shardings
+from repro.distributed.sharding import fit_spec, tree_shardings
 from repro.configs.registry import ASSIGNED, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
-from repro.models.transformer import TOK_SPEC
 from repro.training.optimizer import init_state, state_specs
 from repro.training.train_loop import make_train_step
 
@@ -319,7 +318,6 @@ def main():
 
     for arch, shape in cells:
         for mp in meshes:
-            t0 = time.time()
             r = run_cell(arch, shape, mp, force=args.force)
             status = r.get("status")
             extra = ""

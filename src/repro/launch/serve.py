@@ -12,10 +12,9 @@ simulated cluster and reports the achieved throughput-latency point.
 from __future__ import annotations
 
 import argparse
-import json
 
 from repro import hw
-from repro.core.scepsy import build_pipeline, deploy
+from repro.core.scepsy import deploy
 from repro.core.placement import save_deployment
 from repro.serving.deploy import routers_from_allocations
 from repro.serving.simulator import EventLoop

@@ -9,7 +9,6 @@ computed once at prefill and cached.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig

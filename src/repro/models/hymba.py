@@ -15,8 +15,7 @@ chunks of 128, log-depth within).
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

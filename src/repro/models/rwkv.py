@@ -16,9 +16,7 @@ Decode is the O(1) recurrence; long_500k is native for this arch.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,11 +24,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
-from repro.models.layers import (
-    ACC_DTYPE, AXIS_MODEL, BATCH_AXES, ParamDef, activate,
-    cross_entropy_from_logits, embed_lookup, init_params, lm_head_logits,
-    matmul, rms_norm, stacked,
-)
+from repro.models.layers import (ACC_DTYPE,
+                                 AXIS_MODEL,
+                                 BATCH_AXES,
+                                 ParamDef,
+                                 activate,
+                                 cross_entropy_from_logits,
+                                 embed_lookup,
+                                 lm_head_logits,
+                                 matmul,
+                                 rms_norm,
+                                 stacked)
 
 CHUNK = 64
 LORA_R = 64  # decay lora rank

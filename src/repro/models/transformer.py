@@ -13,7 +13,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,13 +21,24 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
-from repro.models.layers import (
-    AXIS_MODEL, BATCH_AXES, ParamDef, attention_block_decode,
-    attention_block_prefill, attention_defs, causal_flash_attention,
-    bidirectional_attention, cross_entropy_from_logits, embed_lookup,
-    init_params, lm_head_logits, matmul, mlp_block, mlp_defs, param_shapes,
-    param_specs, rms_norm, stacked,
-)
+from repro.models.layers import (AXIS_MODEL,
+                                 BATCH_AXES,
+                                 ParamDef,
+                                 attention_block_decode,
+                                 attention_block_prefill,
+                                 attention_defs,
+                                 bidirectional_attention,
+                                 cross_entropy_from_logits,
+                                 embed_lookup,
+                                 init_params,
+                                 lm_head_logits,
+                                 matmul,
+                                 mlp_block,
+                                 mlp_defs,
+                                 param_shapes,
+                                 param_specs,
+                                 rms_norm,
+                                 stacked)
 from repro.models.moe import moe_block, moe_defs
 
 # Cache partition: (B, KV, S, D) -> batch over (pod,data), seq over model

@@ -9,8 +9,6 @@ cross-attention layer; the whole model is a nested scan
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -18,7 +16,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models.layers import (
-    ACC_DTYPE, AXIS_MODEL, BATCH_AXES, ParamDef, bidirectional_attention,
+    AXIS_MODEL, BATCH_AXES, ParamDef, bidirectional_attention,
     cross_entropy_from_logits, embed_lookup, lm_head_logits, matmul,
     mlp_block, mlp_defs, rms_norm, stacked,
 )

@@ -7,7 +7,7 @@ it).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.pipeline import Allocation
@@ -69,3 +69,20 @@ def pooled_fleet_routers(
             view = base.view(weights) if weights is not None else base
             out.setdefault(workflow, {})[llm] = view
     return out
+
+
+def rebalance_pooled_drivers(drivers, tenants: Dict[str, Router],
+                             members: Dict[str, List[Tuple[str, str]]],
+                             routing: Dict[str, Dict[str, Dict[int, float]]]
+                             ) -> None:
+    """Apply a rung-1 routing rebalance to *live* drivers.
+
+    Swaps each driver's router dict for fresh weighted views over the
+    SAME engine replicas — queues, KV caches and in-flight requests are
+    untouched, which is exactly what "no re-placement" means.  Safe to
+    call from a scheduled event mid-simulation.
+    """
+    per_wf = pooled_fleet_routers(tenants, members, routing)
+    for name, drv in drivers.items():
+        if name in per_wf:
+            drv.routers = per_wf[name]

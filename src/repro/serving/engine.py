@@ -18,7 +18,7 @@ real models.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp

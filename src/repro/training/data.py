@@ -8,7 +8,7 @@ the step counter, so restoring a checkpoint restores the data stream).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -8,7 +8,6 @@ sharding of optimizer state over the data axis is a perf iteration
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, NamedTuple, Tuple
 
 import jax

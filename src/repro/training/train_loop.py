@@ -6,11 +6,9 @@ lowered with ShapeDtypeStructs and never executed).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.transformer import ModelBundle
 from repro.training.optimizer import AdamWConfig, AdamWState, apply_updates

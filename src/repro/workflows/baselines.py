@@ -18,7 +18,6 @@ discrete-event simulator so comparisons are apples-to-apples.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro import hw

@@ -10,9 +10,7 @@ the Aegaeon baseline lacks.
 from __future__ import annotations
 
 import random
-from typing import Dict
 
-from repro.configs.base import ArchConfig
 from repro.configs.paper_workloads import LLAMA_3_1_8B_PRM, LLAMA_3_2_1B
 from repro.workflows.runtime import Call, Tool, Workflow
 

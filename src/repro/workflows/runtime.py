@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, Generator, List, Optional, Sequence
 
 from repro.configs.base import ArchConfig
@@ -139,15 +139,22 @@ class ClusterDriver:
     tenant ids in a pooled one — in the latter case ``route_map``
     translates each call's workflow-local LLM name to its tenant, so the
     same workflow program runs unchanged against pooled replicas.
+
+    ``telemetry`` (optional, duck-typed — e.g. a
+    :class:`repro.core.drift.DriftMonitor`) receives ``record_arrival``,
+    ``record_call`` and ``record_request_done`` callbacks, the live
+    signal the online drift detector runs on.
     """
 
     def __init__(self, wf: Workflow, routers: Dict[str, Router],
                  loop: EventLoop,
-                 route_map: Optional[Dict[str, str]] = None):
+                 route_map: Optional[Dict[str, str]] = None,
+                 telemetry=None):
         self.wf = wf
         self.routers = routers
         self.loop = loop
         self.route_map = route_map or {}
+        self.telemetry = telemetry
         self.records: List[RequestRecord] = []
         self._id_counter = [0]
 
@@ -166,6 +173,39 @@ class ClusterDriver:
         self.loop.run(until)
         return [r for r in self.records if r.done >= 0]
 
+    def schedule_arrivals(self, segments: Sequence[tuple], *,
+                          seed: int = 0, start: float = 0.0,
+                          rid_start: int = 0) -> int:
+        """Schedule piecewise-constant Poisson arrivals.
+
+        ``segments`` is a sequence of ``(rate, duration_s)`` pairs — the
+        arrival-rate *ramp* used to reproduce rate drift without
+        hardware.  Returns the number of requests scheduled; request ids
+        continue from ``rid_start``.
+        """
+        rng = random.Random(seed)
+        rid = rid_start
+        t_seg = start
+        for rate, duration in segments:
+            t_end = t_seg + duration
+            t = t_seg
+            while rate > 0:
+                t += rng.expovariate(rate)
+                if t >= t_end:
+                    break
+                self.loop.schedule(t, lambda rid=rid: self._start(rid, seed))
+                rid += 1
+            t_seg = t_end
+        return rid - rid_start
+
+    def run_ramped(self, segments: Sequence[tuple], *, seed: int = 0,
+                   until: float = math.inf) -> List[RequestRecord]:
+        """Open-loop run under an arrival-rate ramp (see
+        :meth:`schedule_arrivals`)."""
+        self.schedule_arrivals(segments, seed=seed)
+        self.loop.run(until)
+        return [r for r in self.records if r.done >= 0]
+
     def start_request(self, rid: int, seed: int = 0) -> None:
         """Begin one workflow-level request now (external arrival
         control — e.g. several drivers interleaved on one loop)."""
@@ -174,6 +214,8 @@ class ClusterDriver:
     def _start(self, rid: int, seed: int) -> None:
         rec = RequestRecord(rid, self.loop.now)
         self.records.append(rec)
+        if self.telemetry is not None:
+            self.telemetry.record_arrival(self.wf.name, self.loop.now)
         rng = random.Random((seed << 20) + rid)
         gen = self.wf.program(rng)
         self._advance(gen, rec, None)
@@ -183,6 +225,8 @@ class ClusterDriver:
             group = next(gen) if send_val is None else gen.send(send_val)
         except StopIteration:
             rec.done = self.loop.now
+            if self.telemetry is not None:
+                self.telemetry.record_request_done(self.wf.name, rec)
             return
         if isinstance(group, Tool):
             self.loop.schedule(self.loop.now + group.seconds,
@@ -196,8 +240,10 @@ class ClusterDriver:
             self._id_counter[0] += 1
             h = self._id_counter[0]
 
-            def on_done(req: EngineRequest, i=i, h=h):
+            def on_done(req: EngineRequest, i=i, h=h, c=c):
                 results[i] = CallResult(h, req.t_start_service, req.t_done)
+                if self.telemetry is not None:
+                    self.telemetry.record_call(self.wf.name, c.llm, req)
                 pending[0] -= 1
                 if pending[0] == 0:
                     self._advance(gen, rec, results)
@@ -208,3 +254,55 @@ class ClusterDriver:
                 on_complete=on_done, parent_id=c.parent,
                 workflow_request=rec.request_id)
             self.router_for(c.llm).submit(req)
+
+
+# ---------------------------------------------------------------------------
+# Drift injection (reproducible share-shifting request mixes)
+# ---------------------------------------------------------------------------
+
+
+def drift_workflow(wf: Workflow, *,
+                   output_scale: Optional[Dict[str, float]] = None,
+                   call_repeat: Optional[Dict[str, int]] = None,
+                   name: Optional[str] = None) -> Workflow:
+    """A share-shifted variant of ``wf`` for drift experiments.
+
+    ``output_scale`` multiplies the output length of calls to the named
+    LLMs (shifting that LLM's aggregate execution-time share and token
+    distribution); ``call_repeat`` issues each call to the named LLMs
+    ``k`` times in parallel (shifting n_m).  Extra repeated calls are
+    invisible to the wrapped program — it receives exactly the results
+    it asked for — so any workflow program can be drifted unmodified.
+    """
+    scales = dict(output_scale or {})
+    repeats = dict(call_repeat or {})
+
+    def program(rng: random.Random) -> Generator:
+        gen = wf.program(rng)
+        try:
+            group = next(gen)
+        except StopIteration:
+            return
+        while True:
+            if isinstance(group, Tool):
+                sent = yield group
+            else:
+                out_calls: List[Call] = []
+                keep: List[int] = []
+                for c in group:
+                    out = max(int(round(
+                        c.output_tokens * scales.get(c.llm, 1.0))), 1)
+                    keep.append(len(out_calls))
+                    out_calls.append(Call(c.llm, c.prompt_tokens, out,
+                                          parent=c.parent))
+                    for _ in range(max(repeats.get(c.llm, 1), 1) - 1):
+                        out_calls.append(Call(c.llm, c.prompt_tokens, out))
+                results = yield out_calls
+                sent = ([results[i] for i in keep]
+                        if results else results)
+            try:
+                group = gen.send(sent)
+            except StopIteration:
+                return
+
+    return Workflow(name or f"{wf.name}", program, dict(wf.llms))

@@ -1,14 +1,13 @@
 """Unit tests for the Scepsy core (trace → aggregate → pipeline →
 scheduler → placement)."""
-import math
 
 import pytest
 
 from repro import hw
 from repro.core.aggregate import aggregate, merged_busy_time, request_parallelism
-from repro.core.pipeline import AggregateLLMPipeline, Allocation
+from repro.core.pipeline import Allocation
 from repro.core.placement import PlacementError, place
-from repro.core.profiler import extract_groups, profile_llm
+from repro.core.profiler import extract_groups
 from repro.core.scheduler import SchedulerConfig, schedule
 from repro.core.trace import LLMCall, TraceStore, WorkflowTrace
 from repro.workflows.beam_search import BEAM_SEARCH

@@ -1,0 +1,489 @@
+"""Online drift detection + incremental re-scheduling.
+
+Property tests (hypothesis, skipped when unavailable): the share detector
+never fires on share-stable traffic and always fires on a sustained step
+change past the threshold; warm-started fleet re-plans are exactly equal
+to cold searches over the same inputs.  Deterministic versions of both
+properties run everywhere, plus unit coverage of the escalation ladder,
+partition routing, migration diffs and the telemetry plumbing.
+"""
+import math
+import random
+from types import SimpleNamespace
+
+import pytest
+
+from repro import hw
+from repro.configs.base import ArchConfig
+from repro.core.drift import (DriftConfig, DriftMonitor, Expectation,
+                              RateDrift, ShareDrift, TokenDrift,
+                              expectation_from)
+from repro.core.pipeline import (AggregateLLMPipeline, Allocation,
+                                 PipelineStage, merge_pipelines)
+from repro.core.placement import migration_diff, place
+from repro.core.profiler import LLMProfile, TPProfile
+from repro.core.replan import (RUNG_FULL_REPLAN, RUNG_REBALANCE,
+                               RUNG_WARM_REPLAN, ReplanController,
+                               recommend_rung)
+from repro.core.scheduler import SchedulerConfig, schedule_multi
+from repro.serving.simulator import EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import (ClusterDriver, Workflow,
+                                     drift_workflow, trace_workflow)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# synthetic telemetry helpers
+# ---------------------------------------------------------------------------
+
+
+def _share_monitor(expected_share: float, config: DriftConfig) -> DriftMonitor:
+    exp = Expectation(lam=1.0, shares={"a": expected_share,
+                                       "b": 1.0 - expected_share})
+    return DriftMonitor({"wf": exp}, config)
+
+
+def _feed_share(monitor: DriftMonitor, values, t0: float = 0.0) -> None:
+    """One workflow request per value: llm 'a' busy for `v`, 'b' for 1-v,
+    so the observed share of 'a' is exactly `v`."""
+    for i, v in enumerate(values):
+        t = t0 + float(i)
+        # feed both calls of the request, then close it
+        for llm, busy in (("a", v), ("b", 1.0 - v)):
+            req = SimpleNamespace(workflow_request=i, t_start_service=t,
+                                  t_done=t + max(busy, 1e-9),
+                                  output_tokens=100)
+            monitor.record_call("wf", llm, req)
+        monitor.record_request_done(
+            "wf", SimpleNamespace(request_id=i, done=t + 1.0))
+
+
+def _share_events(monitor: DriftMonitor):
+    return [e for e in monitor.poll() if isinstance(e, ShareDrift)]
+
+
+CFG = DriftConfig(min_samples=10, share_threshold=0.4)
+
+
+def test_share_detector_stable_no_false_trigger_deterministic():
+    rng = random.Random(0)
+    expected = 0.5
+    band = CFG.share_threshold * max(expected, CFG.share_floor)
+    values = [expected + rng.uniform(-0.9, 0.9) * band for _ in range(400)]
+    mon = _share_monitor(expected, CFG)
+    _feed_share(mon, values)
+    assert _share_events(mon) == []
+
+
+def test_share_detector_step_change_guaranteed_trigger_deterministic():
+    expected = 0.4
+    step = expected * (1.0 + 2.0 * CFG.share_threshold)  # far past threshold
+    mon = _share_monitor(expected, CFG)
+    _feed_share(mon, [expected] * 50)
+    assert _share_events(mon) == []
+    _feed_share(mon, [step] * 300, t0=50.0)
+    events = _share_events(mon)
+    assert events and events[0].workflow == "wf" and events[0].llm == "a"
+    assert events[0].magnitude > CFG.share_threshold
+
+
+def test_rate_detector_step_and_stability():
+    exp = Expectation(lam=2.0, shares={})
+    mon = DriftMonitor({"wf": exp}, DriftConfig())
+    t = 0.0
+    for _ in range(150):  # exactly the planned rate: silent
+        mon.record_arrival("wf", t)
+        t += 0.5
+    assert [e for e in mon.poll() if isinstance(e, RateDrift)] == []
+    for _ in range(400):  # rate doubles
+        mon.record_arrival("wf", t)
+        t += 0.25
+    events = [e for e in mon.poll() if isinstance(e, RateDrift)]
+    assert events and events[0].observed > exp.lam
+
+
+def test_token_detector_after_calibration():
+    exp = Expectation(lam=1.0, shares={"a": 1.0})
+    mon = DriftMonitor({"wf": exp}, DriftConfig())
+    rng = random.Random(1)
+
+    def call(i, toks, t):
+        req = SimpleNamespace(workflow_request=i, t_start_service=t,
+                              t_done=t + 1.0, output_tokens=toks)
+        mon.record_call("wf", "a", req)
+        mon.record_request_done("wf", SimpleNamespace(request_id=i, done=t))
+
+    for i in range(150):
+        call(i, rng.randint(90, 110), float(i))
+    mon.calibrate()  # learn the ~100-token baseline
+    for i in range(150, 500):
+        call(i, rng.randint(190, 210), float(i))
+    events = [e for e in mon.poll() if isinstance(e, TokenDrift)]
+    assert events and events[0].llm == "a"
+    assert events[0].observed > events[0].expected
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=30)
+    @given(expected=st.floats(0.1, 0.9), seed=st.integers(0, 10_000),
+           amp=st.floats(0.0, 0.9))
+    def test_share_detector_no_false_trigger_property(expected, seed, amp):
+        """Traffic whose per-request shares stay inside the threshold
+        band never fires: the EWMA of in-band samples stays in-band."""
+        rng = random.Random(seed)
+        band = CFG.share_threshold * max(expected, CFG.share_floor)
+        values = [min(max(expected + rng.uniform(-amp, amp) * band, 0.0), 1.0)
+                  for _ in range(200)]
+        mon = _share_monitor(expected, CFG)
+        _feed_share(mon, values)
+        assert _share_events(mon) == []
+
+    @settings(deadline=None, max_examples=30)
+    @given(expected=st.floats(0.1, 0.6), factor=st.floats(1.8, 3.0))
+    def test_share_detector_step_triggers_property(expected, factor):
+        """A sustained step to a share past the threshold always fires."""
+        step = min(expected * (1.0 + factor * CFG.share_threshold), 0.99)
+        mon = _share_monitor(expected, CFG)
+        _feed_share(mon, [expected] * 40)
+        _feed_share(mon, [step] * 400, t0=40.0)
+        events = _share_events(mon)
+        assert events and events[0].llm == "a"
+
+
+# ---------------------------------------------------------------------------
+# synthetic two-workflow fleet (analytic profiles, shared config)
+# ---------------------------------------------------------------------------
+
+
+def _cfg(name: str) -> ArchConfig:
+    return ArchConfig(name=name, family="dense", num_layers=16,
+                      d_model=2048, num_heads=16, num_kv_heads=8,
+                      d_ff=8192, vocab_size=32_000)
+
+
+def _stage(llm: str, cfg: ArchConfig, size_gb: float, n: float,
+           p: float = 2.0) -> PipelineStage:
+    base_lat = 0.05 * size_gb
+    t_max = 40.0 / size_gb
+    by_tp = {}
+    for tp in (1, 2):
+        tmax = t_max * (tp ** 0.85)
+        rates = [f * tmax for f in (0.1, 0.3, 0.5, 0.7, 0.9)]
+        lat = [base_lat / tp / max(1 - r / tmax, 0.05) for r in rates]
+        by_tp[tp] = TPProfile(tp=tp, rates=rates,
+                              latency={"mean": lat, "p50": lat,
+                                       "p90": [2 * x for x in lat],
+                                       "p99": [4 * x for x in lat]},
+                              max_throughput=tmax)
+    prof = LLMProfile(llm=llm, arch=cfg.name, calls_per_group=n, by_tp=by_tp)
+    return PipelineStage(llm=llm, cfg=cfg, n=n, p=p, profile=prof,
+                         mean_share=1.0)
+
+
+SHARED = _cfg("shared-small")
+
+
+@pytest.fixture
+def sharing_fleet():
+    return {
+        "wf_a": AggregateLLMPipeline("wf_a", [_stage("gen", SHARED, 2.0, 2.0)]),
+        "wf_b": AggregateLLMPipeline("wf_b", [_stage("draft", SHARED, 2.0, 1.0)]),
+    }
+
+
+LAMS = {"wf_a": 0.4, "wf_b": 0.6}
+SPEC = hw.PAPER_CLUSTER_16
+SCFG = SchedulerConfig(max_tp=2)
+
+
+# ---------------------------------------------------------------------------
+# warm-started re-plan parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["pooled", "partitioned"])
+def test_warm_replan_parity_with_cold(sharing_fleet, mode):
+    first = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode=mode)
+    assert first.warm_state is not None
+    drifted = {"wf_a": 0.9, "wf_b": 0.6}
+    warm = schedule_multi(sharing_fleet, SPEC, drifted, SCFG, mode=mode,
+                          warm_state=first.warm_state)
+    cold = schedule_multi(sharing_fleet, SPEC, drifted, SCFG, mode=mode)
+    assert warm.welfare == pytest.approx(cold.welfare, rel=1e-9)
+    assert warm.alloc_mode == cold.alloc_mode
+    for n in sharing_fleet:
+        assert (warm.per_workflow[n].allocations
+                == cold.per_workflow[n].allocations)
+    # the warm re-plan reuses the unchanged workflow's cached schedules
+    assert warm.schedule_calls < cold.schedule_calls
+
+
+def test_warm_state_invalidates_on_lam_change(sharing_fleet):
+    first = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="partitioned")
+    ws = first.warm_state
+    cached_a = [k for k in ws.sched_cache if k[0] == "wf_a"]
+    assert cached_a
+    changed = ws.sync(sharing_fleet, {"wf_a": 0.8, "wf_b": 0.6}, SPEC)
+    assert changed == ["wf_a"]
+    assert not [k for k in ws.sched_cache if k[0] == "wf_a"]
+    assert [k for k in ws.sched_cache if k[0] == "wf_b"]
+
+
+# ---------------------------------------------------------------------------
+# escalation ladder
+# ---------------------------------------------------------------------------
+
+
+def _rate_event(wf, magnitude, observed, expected):
+    return RateDrift(workflow=wf, at=1.0, magnitude=magnitude,
+                     observed=observed, expected=expected)
+
+
+def test_recommend_rung_mapping():
+    assert recommend_rung([]) == 0
+    small = _rate_event("wf_a", 0.3, 0.52, 0.4)
+    big = _rate_event("wf_a", 1.0, 0.8, 0.4)
+    share = ShareDrift(workflow="wf_a", at=1.0, magnitude=0.6, llm="gen",
+                       observed=0.9, expected=0.5)
+    assert recommend_rung([small]) == RUNG_REBALANCE
+    assert recommend_rung([big]) == RUNG_WARM_REPLAN
+    assert recommend_rung([share]) == RUNG_WARM_REPLAN
+    assert recommend_rung([small, share]) == RUNG_WARM_REPLAN
+
+
+def test_rung1_rebalance_on_pooled_incumbent(sharing_fleet):
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    assert res.alloc_mode == "pooled"
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res)
+    act = ctrl.react([_rate_event("wf_a", 0.3, 0.52, 0.4)])
+    assert act is not None and act.rung == RUNG_REBALANCE
+    assert act.feasible and act.routing is not None
+    for tables in act.routing.values():
+        for table in tables.values():
+            assert sum(table.values()) == pytest.approx(1.0)
+    assert ctrl.lam_targets["wf_a"] == pytest.approx(0.52)
+    assert ctrl.history[-1] is act
+
+
+def test_large_drift_escalates_to_warm_replan(sharing_fleet):
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res)
+    act = ctrl.react([_rate_event("wf_a", 1.5, 1.0, 0.4)])
+    assert act is not None and act.rung == RUNG_WARM_REPLAN
+    assert act.result is not None and act.feasible
+    assert ctrl.lam_targets["wf_a"] == pytest.approx(1.0)
+
+
+def test_rebalance_without_pooled_incumbent_escalates(sharing_fleet):
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG)
+    act = ctrl.react([_rate_event("wf_a", 0.3, 0.52, 0.4)])
+    # rung 1 is unavailable (nothing pooled deployed) -> warm re-plan
+    assert act is not None and act.rung == RUNG_WARM_REPLAN
+
+
+def test_cold_replan_emits_migration_diff(sharing_fleet):
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    placement = place(res.pooled.allocations, SPEC)
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res,
+                            placement=placement)
+    act = ctrl.replan({"wf_a": 0.4, "wf_b": 0.6}, cold=True)
+    assert act.rung == RUNG_FULL_REPLAN
+    if act.result.alloc_mode == "pooled":
+        assert act.migration is not None
+        s = act.migration.summary()
+        total = (s["replicas_added"] + s["replicas_moved"]
+                 + s["replicas_unchanged"])
+        assert total == len(act.placement.instances)
+
+
+# ---------------------------------------------------------------------------
+# routing policies + migration diff
+# ---------------------------------------------------------------------------
+
+
+def test_partition_routing_blocks_are_load_proportional(sharing_fleet):
+    merged = merge_pipelines(sharing_fleet, LAMS)
+    cid = merged.llms()[0]
+    alloc = {cid: Allocation(replicas=4, tp=1, fraction=1.0)}
+    uniform = merged.routing_weights(alloc, policy="uniform")
+    part = merged.routing_weights(alloc, policy="partition")
+    for routing in (uniform, part):
+        for wf, tables in routing.items():
+            for table in tables.values():
+                assert sum(table.values()) == pytest.approx(1.0)
+    assert uniform["wf_a"]["gen"] == {r: 0.25 for r in range(4)}
+    # wf_a offers 0.4*2.0=0.8 calls/s, wf_b 0.6: blocks [0, 2.29) / [2.29, 4)
+    a, b = part["wf_a"]["gen"], part["wf_b"]["draft"]
+    assert 0 in a and 3 not in a
+    assert 3 in b and 0 not in b
+    assert len(set(a) & set(b)) <= 1  # at most the boundary replica shared
+    with pytest.raises(ValueError):
+        merged.routing_weights(alloc, policy="nope")
+
+
+def test_migration_diff_identity_and_growth():
+    spec = hw.PAPER_CLUSTER_8
+    p1 = place({"m": Allocation(replicas=2, tp=1, fraction=1.0)}, spec)
+    same = migration_diff(p1, p1)
+    assert same.summary() == {"replicas_added": 0, "replicas_dropped": 0,
+                              "replicas_moved": 0, "replicas_unchanged": 2,
+                              "chips_moved": 0}
+    p2 = place({"m": Allocation(replicas=3, tp=1, fraction=1.0)}, spec)
+    grow = migration_diff(p1, p2)
+    assert grow.added == ["m-r2"]
+    assert not grow.dropped
+    assert grow.chip_loads >= 1
+    shrink = migration_diff(p2, p1)
+    assert shrink.dropped == ["m-r2"]
+
+
+# ---------------------------------------------------------------------------
+# drift injection + telemetry plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_drift_workflow_scales_tokens_and_repeats_calls():
+    wf = get_workflow("map_reduce")
+    base = trace_workflow(wf, 6, seed=3)
+    from repro.core.aggregate import aggregate
+
+    base_stats = aggregate(base)
+    target = next(iter(base_stats.per_llm))
+    scaled = drift_workflow(wf, output_scale={target: 2.0})
+    assert scaled.name == wf.name  # routing/telemetry stay keyed correctly
+    shifted_stats = aggregate(trace_workflow(scaled, 6, seed=3))
+    assert shifted_stats.per_llm[target].mean_output_tokens == pytest.approx(
+        2.0 * base_stats.per_llm[target].mean_output_tokens, rel=0.05)
+    repeated = drift_workflow(wf, call_repeat={target: 2})
+    rep_stats = aggregate(trace_workflow(repeated, 6, seed=3))
+    assert rep_stats.per_llm[target].n == pytest.approx(
+        2.0 * base_stats.per_llm[target].n, rel=1e-6)
+    # untouched LLMs keep their statistics
+    for m in base_stats.per_llm:
+        if m != target:
+            assert shifted_stats.per_llm[m].n == pytest.approx(
+                base_stats.per_llm[m].n)
+
+
+def test_schedule_arrivals_segments_and_ramp():
+    def prog(rng):
+        return
+        yield  # a workflow with no LLM calls
+
+    wf = Workflow("noop", prog, {})
+    loop = EventLoop()
+    drv = ClusterDriver(wf, {}, loop)
+    n = drv.schedule_arrivals([(5.0, 10.0), (10.0, 10.0)], seed=1)
+    loop.run(math.inf)
+    assert n == len(drv.records) and n > 0
+    arrivals = sorted(r.arrival for r in drv.records)
+    assert arrivals[-1] < 20.0
+    seg1 = sum(1 for a in arrivals if a < 10.0)
+    seg2 = n - seg1
+    assert 20 <= seg1 <= 90
+    assert seg2 > seg1  # the ramped segment is denser
+
+
+def test_cluster_driver_feeds_telemetry():
+    wf = get_workflow("map_reduce")
+    pipe, stats, _ = build_pipeline_small(wf)
+    monitor = DriftMonitor(
+        {wf.name: expectation_from(pipe, 2.0, stats)}, DriftConfig())
+    from repro.serving.deploy import routers_from_allocations
+
+    loop = EventLoop()
+    allocs = {m: Allocation(replicas=1, tp=1, fraction=1.0)
+              for m in wf.llms}
+    routers = routers_from_allocations(wf, allocs, loop)
+    drv = ClusterDriver(wf, routers, loop, telemetry=monitor)
+    drv.run_ramped([(2.0, 15.0)], seed=2)
+    assert monitor.observed_lams()[wf.name] > 0
+    shares = monitor.observed_shares(wf.name)
+    assert shares and sum(shares.values()) == pytest.approx(1.0, abs=0.05)
+
+
+def build_pipeline_small(wf):
+    from repro.core.scepsy import build_pipeline
+
+    return build_pipeline(wf, n_trace_requests=6, tp_degrees=(1,),
+                          max_profile_groups=4)
+
+
+def test_rebalance_pooled_drivers_swaps_live_views(sharing_fleet):
+    from repro.serving.deploy import (pooled_fleet_routers,
+                                      rebalance_pooled_drivers,
+                                      tenant_routers)
+
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    pooled = res.pooled
+    loop = EventLoop()
+    tenants = tenant_routers(pooled.allocations, pooled.cfgs, loop)
+    per_wf = pooled_fleet_routers(tenants, pooled.members, pooled.routing)
+    wfa = Workflow("wf_a", lambda rng: iter(()), {"gen": SHARED})
+    wfb = Workflow("wf_b", lambda rng: iter(()), {"draft": SHARED})
+    drivers = {"wf_a": ClusterDriver(wfa, per_wf["wf_a"], loop),
+               "wf_b": ClusterDriver(wfb, per_wf["wf_b"], loop)}
+    old_engines = {n: drv.routers[llm].replicas
+                   for n, drv in drivers.items()
+                   for llm in drv.routers}
+    merged = merge_pipelines(sharing_fleet, {"wf_a": 0.9, "wf_b": 0.6})
+    new_routing = merged.routing_weights(pooled.allocations,
+                                         policy="partition")
+    rebalance_pooled_drivers(drivers, tenants, pooled.members, new_routing)
+    for n, drv in drivers.items():
+        for llm, router in drv.routers.items():
+            # same physical replicas (queues/KV preserved), new weights
+            assert router.replicas is old_engines[n]
+            assert router.weights == new_routing[n][llm]
+
+
+def test_online_controller_share_drift_refreshes_and_adopts():
+    """End-to-end rung-2 path on a real deployment: a ShareDrift event
+    must re-trace the drifted workflow, warm re-plan, and re-base the
+    monitor onto the refreshed pipeline (not the stale shares)."""
+    from repro.core.scepsy import deploy_multi
+
+    wfs = [get_workflow("map_reduce"), get_workflow("react_agent")]
+    lams = {"map_reduce": 0.3, "react_agent": 0.3}
+    dep = deploy_multi(wfs, hw.PAPER_CLUSTER_16, lams, mode="pooled",
+                       online=True, n_trace_requests=6,
+                       max_profile_groups=4)
+    ctrl = dep.controller
+    assert ctrl.pipeline_refresh is not None
+    wf, llm = "map_reduce", next(iter(ctrl.pipelines["map_reduce"].stages))
+    ev = ShareDrift(workflow=wf, at=1.0, magnitude=0.8, llm=llm,
+                    observed=0.9, expected=0.5)
+    act = ctrl.react([ev])
+    assert act is not None and act.rung == RUNG_WARM_REPLAN and act.feasible
+    exp = ctrl.monitor.expectations[wf]
+    refreshed = ctrl.pipelines[wf]
+    assert exp.shares == {m: s.mean_share
+                          for m, s in refreshed.stages.items()}
+    # the other workflow keeps its expectations untouched
+    other = ctrl.monitor.expectations["react_agent"]
+    assert set(other.shares) == set(ctrl.pipelines["react_agent"].stages)
+
+
+def test_deploy_multi_online_attaches_controller(sharing_fleet):
+    wfa = Workflow("wf_a", lambda rng: iter(()), {"gen": SHARED})
+    wfb = Workflow("wf_b", lambda rng: iter(()), {"draft": SHARED})
+    from repro.core.scepsy import deploy_multi
+
+    dep = deploy_multi([wfa, wfb], SPEC, LAMS, pipelines=sharing_fleet,
+                       scheduler_config=SCFG, mode="pooled", online=True)
+    ctrl = dep.controller
+    assert ctrl is not None and ctrl.monitor is not None
+    assert set(ctrl.monitor.expectations) == {"wf_a", "wf_b"}
+    assert ctrl.result is dep.schedule
+    assert ctrl.step() is None  # no telemetry yet -> no reaction
+    offline = deploy_multi([wfa, wfb], SPEC, LAMS, pipelines=sharing_fleet,
+                           scheduler_config=SCFG, mode="pooled")
+    assert offline.controller is None

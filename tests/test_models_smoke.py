@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import shapes_for
-from repro.configs.registry import ASSIGNED, REGISTRY, get_config, reduced_config
+from repro.configs.registry import ASSIGNED, get_config, reduced_config
 from repro.models import build_model
 
 SEQ = 16

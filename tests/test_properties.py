@@ -1,5 +1,4 @@
 """Hypothesis property tests on the system's invariants."""
-import math
 
 import pytest
 

@@ -1,7 +1,6 @@
 """Tests for the training/serving substrates: checkpointing, data
 pipeline, fault tolerance, gradient compression, KV caches, prefix cache,
 and the real serving engine."""
-import math
 import tempfile
 
 import jax
@@ -15,7 +14,7 @@ from repro.distributed.compression import (compress_tree, dequantize_int8,
 from repro.distributed.fault_tolerance import FaultToleranceController
 from repro.models import build_model
 from repro.serving.engine import ServeRequest, ServingEngine
-from repro.serving.kv_cache import PagedKVCache, SlotKVCache
+from repro.serving.kv_cache import PagedKVCache
 from repro.serving.prefix_cache import PrefixCache
 from repro.training import checkpoint as ckpt
 from repro.training.data import DataConfig, SyntheticCorpus

@@ -1,7 +1,6 @@
 """Training-loop integration: loss decreases, compression path works,
 ZeRO specs are valid."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -34,7 +33,5 @@ def test_zero_opt_specs_structure():
     shapes = param_shapes(bundle.defs)
     z = zero_opt_specs(specs, shapes, data_ways=4)
     # same tree structure, and at least one moment leaf gained 'data'
-    m_leaves = jax.tree.leaves(z.m, is_leaf=lambda x: hasattr(x, "__iter__"))
-    flat_m = jax.tree.flatten(z.m, is_leaf=lambda x: x is None or hasattr(x, "index"))[0]
     assert any("data" in tuple(s) for s in jax.tree.leaves(
         z.m, is_leaf=lambda x: hasattr(x, "index")) if s is not None)
