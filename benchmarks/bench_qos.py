@@ -1,0 +1,396 @@
+"""QoS benchmark: SLO-aware scheduling under an overload burst.
+
+The pooled registry fleet (react_agent = gold, map_reduce = silver,
+debate = bronze) is deployed once, then driven through the same
+reproducible overload burst — the batch-style workloads' Poisson rates
+multiply for a window while the interactive gold class stays at its
+planned rate — under each queue discipline:
+
+* ``fifo`` — the seed engines' arrival-order queues (the baseline);
+* ``priority`` — workflow-aware urgency (deadline slack minus the
+  aggregate pipeline's remaining-work estimate), so nearly-finished
+  gold requests jump the burst;
+* ``wfq`` — deficit round robin over tenants with routing-weight
+  shares, isolating pooled tenants from each other's bursts;
+* ``priority+admission`` — priority queues plus the cluster-front
+  admission controller (sheddable classes are rejected/degraded when
+  the predicted delay blows their SLO).
+
+The ``disciplines`` section reports per-class p50/p99 latency, SLO
+violations and goodput (SLO-met completions per second); the
+``fairness`` section checks wfq's served-token shares on every *shared*
+tenant against the demand-aware routing-weight entitlement (weighted
+max-min water-filling over the burst window); ``admission`` reports the
+shed accounting.  ``acceptance`` asserts the ISSUE criteria: priority
+and wfq beat fifo on gold-class p99 at equal-or-better total goodput,
+and wfq keeps every backlogged pooled tenant within 10% of its
+entitled share.
+
+JSON schema is documented in benchmarks/README.md; ``--smoke`` is the
+tiny-config mode CI runs (schema-identical, small fleet/horizons).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from typing import Dict, List
+
+from benchmarks.common import cluster_for
+from repro.core.scepsy import deploy_multi
+from repro.core.scheduler import SchedulerConfig
+from repro.qos.admission import fleet_admission
+from repro.qos.policy import request_cost
+from repro.qos.slo import WorkflowQoS
+from repro.serving.deploy import pooled_fleet_routers, tenant_routers
+from repro.serving.simulator import EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver
+
+DISCIPLINES = ("fifo", "priority", "wfq")
+
+
+def _settings(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return {
+            "mode": "smoke",
+            "lam_targets": {"react_agent": 1.0, "map_reduce": 0.8,
+                            "debate": 1.6},
+            "burst": {"map_reduce": 10.0, "debate": 12.0},
+            "chips": 8,
+            "n_trace": 8,
+            "profile_groups": 6,
+            "t_warm": 30.0,
+            "t_burst": 90.0,
+            "t_tail": 30.0,
+            "drain": 600.0,
+        }
+    return {
+        "mode": "quick" if quick else "full",
+        "lam_targets": {"react_agent": 1.5, "map_reduce": 1.2,
+                        "debate": 2.4},
+        "burst": {"map_reduce": 10.0, "debate": 12.0},
+        "chips": 16,
+        "n_trace": 12 if quick else 30,
+        "profile_groups": 10 if quick else 30,
+        "t_warm": 40.0,
+        "t_burst": 150.0 if quick else 300.0,
+        "t_tail": 40.0,
+        "drain": 1200.0,
+    }
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# one measured run
+# ---------------------------------------------------------------------------
+
+
+def _drive(disc: str, wfs, qos_by, pooled, s, seed: int, *,
+           admission: bool = False) -> dict:
+    """Deploy the shared tenant replicas under one queue discipline and
+    drive the whole fleet through the burst."""
+    loop = EventLoop()
+    tenants = tenant_routers(pooled.allocations, pooled.cfgs, loop,
+                             discipline=disc, members=pooled.members,
+                             routing=pooled.routing)
+    per_wf = pooled_fleet_routers(tenants, pooled.members, pooled.routing)
+    ctrl = None
+    run_qos = {
+        name: WorkflowQoS(slo=q.slo, work=q.work)
+        for name, q in qos_by.items()
+    }
+    if admission:
+        ctrl = fleet_admission(run_qos, per_wf)
+    drivers: Dict[str, ClusterDriver] = {}
+    for k, name in enumerate(sorted(wfs)):
+        drv = ClusterDriver(wfs[name], per_wf[name], loop,
+                            qos=run_qos.get(name))
+        lam = s["lam_targets"][name]
+        factor = s["burst"].get(name, 1.0)
+        drv.schedule_arrivals(
+            [(lam, s["t_warm"]), (lam * factor, s["t_burst"]),
+             (lam, s["t_tail"])],
+            seed=seed * 1000 + k)
+        drivers[name] = drv
+    horizon = s["t_warm"] + s["t_burst"] + s["t_tail"]
+    loop.run(horizon + s["drain"])
+    return {
+        "drivers": drivers,
+        "tenants": tenants,
+        "horizon": horizon,
+        "admission": ctrl,
+    }
+
+
+def _workflow_metrics(drv: ClusterDriver, slo, horizon: float) -> dict:
+    recs = drv.records
+    done = [r for r in recs if r.done >= 0]
+    lats = [r.latency for r in done]
+    met = sum(1 for r in done if r.slo_met)
+    return {
+        "slo_class": slo.name if slo else "",
+        "slo_target_s": slo.latency_target_s if slo else None,
+        "arrived": len(recs),
+        "completed": len(done),
+        "rejected": sum(1 for r in recs if r.rejected),
+        "degraded": sum(1 for r in recs if r.degraded),
+        "slo_met": met,
+        "violations": len(done) - met,
+        "goodput_rps": met / horizon,
+        "mean_latency_s": statistics.mean(lats) if lats else 0.0,
+        "p50_latency_s": _percentile(lats, 0.50),
+        "p99_latency_s": _percentile(lats, 0.99),
+    }
+
+
+def _by_class(per_wf: Dict[str, dict]) -> Dict[str, dict]:
+    out: Dict[str, dict] = {}
+    for m in per_wf.values():
+        cls = m["slo_class"] or "unclassified"
+        row = out.setdefault(cls, {"completed": 0, "slo_met": 0,
+                                   "violations": 0, "goodput_rps": 0.0})
+        row["completed"] += m["completed"]
+        row["slo_met"] += m["slo_met"]
+        row["violations"] += m["violations"]
+        row["goodput_rps"] += m["goodput_rps"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# wfq fairness: served-token shares vs demand-aware entitlement
+# ---------------------------------------------------------------------------
+
+
+def _waterfill(demands: Dict[str, float], weights: Dict[str, float],
+               capacity: float) -> Dict[str, float]:
+    """Weighted max-min entitlement: demand-limited tenants get their
+    demand, the surplus recycles to the still-backlogged ones."""
+    entitled = {w: 0.0 for w in demands}
+    remaining = dict(demands)
+    cap = min(capacity, sum(demands.values()))
+    active = set(demands)
+    while active and cap > 1e-9:
+        total_w = sum(weights[w] for w in active)
+        share = {w: cap * weights[w] / total_w for w in active}
+        limited = {w for w in active if remaining[w] <= share[w] + 1e-9}
+        if not limited:
+            for w in active:
+                entitled[w] += share[w]
+            cap = 0.0
+            break
+        for w in limited:
+            entitled[w] += remaining[w]
+            cap -= remaining[w]
+            remaining[w] = 0.0
+            active.discard(w)
+    return entitled
+
+
+def _fairness(run: dict, pooled, s) -> Dict[str, dict]:
+    """Per shared tenant: measured served-token share per member
+    workflow over the burst window vs its water-filled entitlement."""
+    t0 = s["t_warm"]
+    t1 = s["t_warm"] + s["t_burst"]
+    out: Dict[str, dict] = {}
+    for cid, mem in pooled.members.items():
+        members = sorted({w for w, _ in mem})
+        if len(members) < 2:
+            continue  # private tenant: fairness is trivial
+        engines = run["tenants"][cid].replicas
+        served = {w: 0.0 for w in members}
+        demand = {w: 0.0 for w in members}
+        for eng in engines:
+            live = list(eng.done) + list(eng.waiting) + list(eng.running)
+            for r in live:
+                w = r.qos.tenant if r.qos is not None else ""
+                if w not in served:
+                    continue
+                cost = request_cost(r)
+                if r.t_done >= 0 and t0 <= r.t_done <= t1:
+                    served[w] += cost
+                # offered into the window: arrived before it closed and
+                # not finished before it opened
+                if r.arrival <= t1 and not (0 <= r.t_done < t0):
+                    demand[w] += cost
+        capacity = sum(served.values())
+        # routing-weight shares: each member's summed weight over the
+        # tenant's replicas, normalized
+        wsum = {w: 0.0 for w in members}
+        for workflow, llm in mem:
+            for _, wt in pooled.routing.get(workflow, {}).get(llm, {}).items():
+                wsum[workflow] += wt
+        total = sum(wsum.values()) or 1.0
+        weights = {w: wsum[w] / total for w in members}
+        entitled = _waterfill(demand, weights, capacity)
+        rows = {}
+        for w in members:
+            share = served[w] / capacity if capacity > 0 else 0.0
+            ent_share = entitled[w] / capacity if capacity > 0 else 0.0
+            dev = (abs(share - ent_share) / ent_share
+                   if ent_share > 0 else 0.0)
+            rows[w] = {
+                "routing_weight_share": weights[w],
+                "demand_tokens": demand[w],
+                "served_tokens": served[w],
+                "served_share": share,
+                "entitled_share": ent_share,
+                "relative_deviation": dev,
+            }
+        out[cid] = {
+            "members": rows,
+            "capacity_tokens": capacity,
+            "max_relative_deviation": max(
+                r["relative_deviation"] for r in rows.values()),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    s = _settings(quick, smoke)
+    lams = s["lam_targets"]
+    wfs = {name: get_workflow(name) for name in lams}
+    spec = cluster_for(s["chips"])
+    cfg = SchedulerConfig(max_tp=2)
+
+    t0 = time.perf_counter()
+    dep = deploy_multi(
+        list(wfs.values()), spec, lams,
+        scheduler_config=cfg, mode="pooled",
+        n_trace_requests=s["n_trace"],
+        max_profile_groups=s["profile_groups"], seed=seed)
+    plan_time = time.perf_counter() - t0
+    pooled = dep.schedule.pooled
+    qos_by = dep.qos
+
+    disciplines = {}
+    fairness = {}
+    for disc in DISCIPLINES:
+        r = _drive(disc, wfs, qos_by, pooled, s, seed)
+        per_wf = {
+            name: _workflow_metrics(
+                drv, qos_by[name].slo if name in qos_by else None,
+                r["horizon"])
+            for name, drv in r["drivers"].items()
+        }
+        disciplines[disc] = {
+            "per_workflow": per_wf,
+            "per_class": _by_class(per_wf),
+            "total_goodput_rps": sum(
+                m["goodput_rps"] for m in per_wf.values()),
+        }
+        if disc == "wfq":
+            fairness = _fairness(r, pooled, s)
+
+    # priority + cluster-front admission control
+    adm_run = _drive("priority", wfs, qos_by, pooled, s, seed,
+                     admission=True)
+    adm_per_wf = {
+        name: _workflow_metrics(
+            drv, qos_by[name].slo if name in qos_by else None,
+            adm_run["horizon"])
+        for name, drv in adm_run["drivers"].items()
+    }
+    admission = {
+        "per_workflow": adm_per_wf,
+        "per_class": _by_class(adm_per_wf),
+        "total_goodput_rps": sum(
+            m["goodput_rps"] for m in adm_per_wf.values()),
+        "controller": adm_run["admission"].stats(),
+    }
+
+    gold = [n for n in wfs
+            if n in qos_by and qos_by[n].slo.name == "gold"]
+
+    def gold_p99(section):
+        vals = [section["per_workflow"][n]["p99_latency_s"] for n in gold]
+        return max(vals) if vals else 0.0
+
+    p99 = {d: gold_p99(disciplines[d]) for d in DISCIPLINES}
+    goodput = {d: disciplines[d]["total_goodput_rps"] for d in DISCIPLINES}
+    max_dev = max(
+        (t["max_relative_deviation"] for t in fairness.values()),
+        default=0.0)
+    acceptance = {
+        "priority_beats_fifo_gold_p99": p99["priority"] < p99["fifo"],
+        "wfq_beats_fifo_gold_p99": p99["wfq"] < p99["fifo"],
+        "priority_goodput_not_worse": (
+            goodput["priority"] >= 0.99 * goodput["fifo"]),
+        "wfq_goodput_not_worse": goodput["wfq"] >= 0.99 * goodput["fifo"],
+        "wfq_tenant_shares_within_10pct": max_dev <= 0.10,
+        "admission_sheds_only_sheddable": all(
+            m["rejected"] == 0 and m["degraded"] == 0
+            for n, m in adm_per_wf.items()
+            if n in qos_by and qos_by[n].slo.shed_policy == "never"),
+    }
+
+    doc = {
+        "benchmark": "qos_scheduling",
+        "mode": s["mode"],
+        "seed": seed,
+        "config": {
+            "fleet": {
+                name: {
+                    "slo_class": qos_by[name].slo.name,
+                    "latency_target_s": qos_by[name].slo.latency_target_s,
+                    "weight": qos_by[name].slo.weight,
+                    "shed_policy": qos_by[name].slo.shed_policy,
+                } for name in sorted(wfs) if name in qos_by
+            },
+            "cluster_chips": spec.num_chips,
+            "lam_targets": lams,
+            "burst": s["burst"],
+            "phases_s": {"warm": s["t_warm"], "burst": s["t_burst"],
+                         "tail": s["t_tail"]},
+        },
+        "plan": {
+            "alloc_mode": dep.mode,
+            "welfare": dep.welfare,
+            "plan_time_s": plan_time,
+            "tenants": {
+                cid: {"replicas": a.replicas, "tp": a.tp,
+                      "fraction": a.fraction}
+                for cid, a in pooled.allocations.items()
+            },
+        },
+        "disciplines": disciplines,
+        "fairness": fairness,
+        "admission": admission,
+        "acceptance": acceptance,
+    }
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true", help="full-size sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (schema-identical)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for all phases")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report here")
+    args = ap.parse_args()
+    run(quick=not args.full, smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

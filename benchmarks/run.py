@@ -18,7 +18,7 @@ def main() -> None:
     from benchmarks import (bench_ablation, bench_combined, bench_drift,
                             bench_e2e, bench_kernels, bench_multi_workflow,
                             bench_multiplexing, bench_pipeline_accuracy,
-                            bench_roofline, bench_scheduler,
+                            bench_qos, bench_roofline, bench_scheduler,
                             bench_stability, bench_workflow_aware)
 
     sections = [
@@ -31,6 +31,7 @@ def main() -> None:
         ("fig11_scheduler_search", bench_scheduler),
         ("multi_workflow_fleet", bench_multi_workflow),
         ("drift_rescheduling", bench_drift),
+        ("qos_scheduling", bench_qos),
         ("pipeline_accuracy", bench_pipeline_accuracy),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),

@@ -29,6 +29,14 @@ REQUIRED = {
         "workflows",
         "pooled_vs_partitioned",
     ),
+    "qos_scheduling": (
+        "config",
+        "plan",
+        "disciplines",
+        "fairness",
+        "admission",
+        "acceptance",
+    ),
 }
 
 

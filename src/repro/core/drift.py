@@ -56,6 +56,11 @@ class DriftConfig:
     # threshold alone misfires on high-variance streams (token lengths
     # with CV ≈ 1), while z alone misfires on near-constant ones
     zscore_gate: float = 4.0
+    # SLO-violation detector: EWMA of the per-request violation
+    # indicator (completed past target, or shed at the front door);
+    # fires once the smoothed violation rate crosses the threshold
+    slo_violation_threshold: float = 0.2
+    slo_alpha: float = 0.05
 
 
 @dataclass(frozen=True)
@@ -65,14 +70,18 @@ class Expectation:
     lam: float  # planned arrival rate (requests/s)
     shares: Dict[str, float]  # llm -> profiled mean execution-time share
     out_tokens: Dict[str, float] = field(default_factory=dict)
+    # request-level SLO the plan promised (0 = detector disarmed)
+    slo_target: float = 0.0
+    slo_class: str = ""
 
 
-def expectation_from(pipeline, lam: float, stats=None) -> Expectation:
+def expectation_from(pipeline, lam: float, stats=None, slo=None) -> Expectation:
     """Build an :class:`Expectation` from a profiled pipeline.
 
     ``stats`` (a :class:`repro.core.aggregate.WorkflowStats`) adds the
     token-length expectations when available; without it the token
-    detector stays disarmed for this workflow.
+    detector stays disarmed for this workflow.  ``slo`` (a *resolved*
+    :class:`repro.qos.slo.SLOClass`) arms the SLO-violation detector.
     """
     shares = {m: st.mean_share for m, st in pipeline.stages.items()}
     toks: Dict[str, float] = {}
@@ -82,7 +91,11 @@ def expectation_from(pipeline, lam: float, stats=None) -> Expectation:
             for m, st in stats.per_llm.items()
             if st.mean_output_tokens > 0
         }
-    return Expectation(lam=lam, shares=shares, out_tokens=toks)
+    target, cls = 0.0, ""
+    if slo is not None and slo.latency_target_s is not None:
+        target, cls = slo.latency_target_s, slo.name
+    return Expectation(lam=lam, shares=shares, out_tokens=toks,
+                       slo_target=target, slo_class=cls)
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +134,18 @@ class TokenDrift(DriftEvent):
     llm: str = ""
     observed: float = 0.0
     expected: float = 0.0
+
+
+@dataclass(frozen=True)
+class SLOViolation(DriftEvent):
+    """A workflow's smoothed SLO-violation rate (requests finishing past
+    their latency target, plus front-door sheds) crossed the threshold —
+    the re-plan controller's fourth trigger: the allocation no longer
+    covers the promised service tier."""
+
+    slo_class: str = ""
+    violation_rate: float = 0.0
+    target_s: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +244,14 @@ class DriftMonitor:
             w: {m: _Ewma(config.slow_alpha) for m in e.out_tokens}
             for w, e in expectations.items()
         }
+        self._viol: Dict[str, _Ewma] = {
+            w: _Ewma(config.slo_alpha) for w in expectations
+        }
+        # cumulative per-workflow SLO accounting (class from expectation)
+        self.slo_counters: Dict[str, Dict[str, int]] = {
+            w: {"completed": 0, "violations": 0, "rejected": 0, "degraded": 0}
+            for w in expectations
+        }
         self._open: Dict[tuple, Dict[str, float]] = {}  # (wf, rid) -> llm busy
         self._pending: List[DriftEvent] = []
         self._active: set = set()
@@ -300,10 +333,49 @@ class DriftMonitor:
                     ),
                 )
 
+    def record_shed(self, workflow: str, slo_class: str, kind: str,
+                    t: float) -> None:
+        """Front-door shed (reject/degrade) — counts as an SLO loss."""
+        if workflow not in self.expectations:
+            return
+        self.now = max(self.now, t)
+        key = "rejected" if kind == "reject" else "degraded"
+        self.slo_counters[workflow][key] += 1
+        self._update_violation(workflow, 1.0)
+
+    def _update_violation(self, workflow: str, violated: float) -> None:
+        exp = self.expectations[workflow]
+        if exp.slo_target <= 0:
+            return
+        ew = self._viol[workflow]
+        rate = ew.update(violated)
+        if ew.count < self.config.min_samples:
+            return
+        self._edge(
+            ("slo", workflow),
+            rate,
+            self.config.slo_violation_threshold,
+            lambda rate=rate: SLOViolation(
+                workflow=workflow,
+                at=self.now,
+                magnitude=rate,
+                slo_class=exp.slo_class,
+                violation_rate=rate,
+                target_s=exp.slo_target,
+            ),
+        )
+
     def record_request_done(self, workflow: str, rec) -> None:
         if workflow not in self.expectations:
             return
         self.now = max(self.now, rec.done)
+        exp = self.expectations[workflow]
+        if exp.slo_target > 0 and not getattr(rec, "degraded", False):
+            violated = rec.latency > exp.slo_target
+            self.slo_counters[workflow]["completed"] += 1
+            if violated:
+                self.slo_counters[workflow]["violations"] += 1
+            self._update_violation(workflow, 1.0 if violated else 0.0)
         busy = self._open.pop((workflow, rec.request_id), None)
         if not busy:
             return
@@ -375,6 +447,11 @@ class DriftMonitor:
             for m, ew in self._share[workflow].items()
         }
 
+    def observed_violation_rate(self, workflow: str) -> float:
+        """Smoothed SLO-violation rate (0.0 until a sample arrives)."""
+        ew = self._viol.get(workflow)
+        return ew.value if ew is not None and ew.value is not None else 0.0
+
     def observed_tokens(self, workflow: str) -> Dict[str, float]:
         """Live mean-output-token estimates (only LLMs with samples)."""
         return {
@@ -407,9 +484,11 @@ class DriftMonitor:
                 for m, ew in self._tokens[w].items()
             }
             self.expectations[w] = Expectation(
-                lam=exp.lam, shares=shares, out_tokens=toks
+                lam=exp.lam, shares=shares, out_tokens=toks,
+                slo_target=exp.slo_target, slo_class=exp.slo_class
             )
             self._rate_cusum[w].reset()
+            self._viol[w] = _Ewma(self.config.slo_alpha)
         self._active.clear()
         self._pending.clear()
 
@@ -421,4 +500,6 @@ class DriftMonitor:
             self.expectations[w] = exp
             if w in self._rate_cusum:
                 self._rate_cusum[w].reset()
+            if w in self._viol:
+                self._viol[w] = _Ewma(self.config.slo_alpha)
         self._active = {k for k in self._active if k[1] not in expectations}

@@ -231,6 +231,55 @@ def _place_fraction(cluster: _Cluster, units: int) -> Optional[List[Chip]]:
     return [candidates[0][2]]
 
 
+def fleet_offsets(placements: Dict[str, Placement], order,
+                  spec: hw.ClusterSpec) -> Dict[str, int]:
+    """Disjoint physical slice starts for per-workflow slice-local
+    placements (partitioned fleets).
+
+    A slice start is hb-domain-aligned only when the slice contains TP
+    groups (a TP instance must not cross a domain boundary after
+    translation); TP=1 slices can start anywhere.  Raises
+    :class:`PlacementError` when the slices do not fit the cluster.
+    """
+    dom = spec.hb_domain_size
+    offsets: Dict[str, int] = {}
+    cursor = 0
+    for name in order:
+        insts = placements[name].instances
+        used = 1 + max((c for inst in insts for c in inst.chips), default=0)
+        if any(inst.tp > 1 for inst in insts):
+            cursor = (cursor + dom - 1) // dom * dom
+        offsets[name] = cursor
+        cursor += used
+    if cursor > spec.num_chips:
+        raise PlacementError(
+            f"fleet needs {cursor} chips for disjoint slices, "
+            f"cluster has {spec.num_chips}")
+    return offsets
+
+
+def merge_fleet(placements: Dict[str, Placement], offsets: Dict[str, int],
+                spec: hw.ClusterSpec) -> Placement:
+    """One global :class:`Placement` for a partitioned fleet.
+
+    Slice-local instances are translated by their workflow's offset and
+    renamed ``<workflow>/<llm>`` so instance keys — and therefore
+    :func:`migration_diff` — are unambiguous fleet-wide.
+    """
+    import dataclasses as dc
+
+    out = Placement(spec)
+    for name, pl in placements.items():
+        off = offsets[name]
+        for inst in pl.instances:
+            chips = [c + off for c in inst.chips]
+            out.instances.append(dc.replace(
+                inst, llm=f"{name}/{inst.llm}", chips=chips,
+                host=chips[0] // spec.chips_per_host,
+                domain=chips[0] // spec.hb_domain_size))
+    return out
+
+
 def tenant_routing(placement: Placement,
                    members: Dict[str, List[Tuple[str, str]]],
                    weights: Dict[str, Dict[str, Dict[int, float]]]

@@ -25,6 +25,7 @@ cannot serve every workflow falls through to rung 3.
 
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -36,6 +37,7 @@ from repro.core.drift import (
     Expectation,
     RateDrift,
     ShareDrift,
+    SLOViolation,
     TokenDrift,
     expectation_from,
 )
@@ -43,6 +45,9 @@ from repro.core.pipeline import AggregateLLMPipeline, merge_pipelines
 from repro.core.placement import (
     MigrationDiff,
     Placement,
+    PlacementError,
+    fleet_offsets,
+    merge_fleet,
     migration_diff,
     place,
     tenant_routing,
@@ -57,6 +62,24 @@ from repro.core.scheduler import (
 RUNG_REBALANCE = 1
 RUNG_WARM_REPLAN = 2
 RUNG_FULL_REPLAN = 3
+
+
+def partitioned_fleet_placement(result: MultiScheduleResult,
+                                spec: hw.ClusterSpec) -> Optional[Placement]:
+    """Global placement of a partitioned fleet schedule: each workflow's
+    allocations placed slice-locally, translated by disjoint offsets and
+    merged (instances keyed ``<workflow>/<llm>``), so partitioned
+    re-plans produce a :class:`MigrationDiff` just like pooled ones."""
+    from repro.core.scheduler import _subcluster
+
+    if result.alloc_mode != "partitioned" or not result.chip_split:
+        return None
+    placements: Dict[str, Placement] = {}
+    for name, chips in result.chip_split.items():
+        placements[name] = place(
+            result.per_workflow[name].allocations, _subcluster(spec, chips))
+    offsets = fleet_offsets(placements, result.chip_split, spec)
+    return merge_fleet(placements, offsets, spec)
 
 
 @dataclass
@@ -84,7 +107,10 @@ def recommend_rung(events: List[DriftEvent], *, rebalance_band: float = 0.5) -> 
     shift the pooled replica set can absorb by re-weighting (rung 1);
     larger rate drift needs capacity to move (rung 2).  Share and token
     drift mean the *pipeline synthesis itself* is stale, which only a
-    re-plan (over refreshed pipelines) can answer (rung 2).
+    re-plan (over refreshed pipelines) can answer (rung 2).  An SLO
+    violation (the fourth trigger: promised tiers are being missed) is
+    a mild-overload signal a routing rebalance may absorb when the
+    violation rate is inside the band; past it the tier needs capacity.
     """
     if not events:
         return 0
@@ -92,7 +118,7 @@ def recommend_rung(events: List[DriftEvent], *, rebalance_band: float = 0.5) -> 
     for ev in events:
         if isinstance(ev, (ShareDrift, TokenDrift)):
             rung = max(rung, RUNG_WARM_REPLAN)
-        elif isinstance(ev, RateDrift):
+        elif isinstance(ev, (RateDrift, SLOViolation)):
             if ev.magnitude <= rebalance_band:
                 rung = max(rung, RUNG_REBALANCE)
             else:
@@ -123,6 +149,7 @@ class ReplanController:
         monitor: Optional[DriftMonitor] = None,
         pipeline_refresh: Optional[Callable[[str], AggregateLLMPipeline]] = None,
         rebalance_band: float = 0.5,
+        cooldown_s: float = 0.0,
     ):
         self.pipelines = dict(pipelines)
         self.spec = spec
@@ -133,6 +160,20 @@ class ReplanController:
         self.monitor = monitor
         self.pipeline_refresh = pipeline_refresh
         self.rebalance_band = rebalance_band
+        # rung hysteresis: after an adopted action, drift events inside
+        # the cool-down window are ignored unless they recommend a
+        # strictly HIGHER rung — flapping traffic cannot oscillate
+        # rebalance -> replan -> rebalance, but genuine escalation is
+        # never delayed
+        self.cooldown_s = cooldown_s
+        self._last_action_at = -math.inf
+        self._last_rung = 0
+        # events suppressed by the cool-down: the monitor is
+        # edge-triggered (a fired detector stays latched until the
+        # metric recovers), so a suppressed event would otherwise never
+        # re-fire for a *persistent* condition — it is deferred and
+        # re-considered on the next react()/step() instead
+        self._deferred: List[DriftEvent] = []
         self.warm_state = (
             result.warm_state
             if result is not None and result.warm_state is not None
@@ -235,8 +276,13 @@ class ReplanController:
         if res.alloc_mode == "pooled" and res.pooled is not None:
             placement = place(res.pooled.allocations, self.spec)
             routing = res.pooled.routing
-            if self.placement is not None:
-                migration = migration_diff(self.placement, placement)
+        else:
+            try:
+                placement = partitioned_fleet_placement(res, self.spec)
+            except PlacementError:
+                placement = None  # infeasible slices: diff is meaningless
+        if self.placement is not None and placement is not None:
+            migration = migration_diff(self.placement, placement)
         feasible = all(r.feasible for r in res.per_workflow.values())
         reason = (
             "cold full re-plan + re-placement" if cold else "warm incremental re-plan"
@@ -259,10 +305,21 @@ class ReplanController:
     def react(self, events: List[DriftEvent]) -> Optional[ReplanAction]:
         """Escalate through the ladder until a rung absorbs the drift,
         adopt the resulting action, and return it (None: no reaction
-        needed)."""
+        needed, or suppressed — and deferred — by the cool-down
+        hysteresis)."""
+        events = self._merge_deferred(events)
         rung = recommend_rung(events, rebalance_band=self.rebalance_band)
         if rung == 0:
             return None
+        now = max((ev.at for ev in events), default=0.0)
+        if self.monitor is not None:
+            now = max(now, self.monitor.now)
+        if (self.cooldown_s > 0
+                and now - self._last_action_at < self.cooldown_s
+                and rung <= self._last_rung):
+            self._deferred = events
+            return None
+        self._deferred = []
         lam_targets = self._drifted_targets(events)
         self._refresh_pipelines(events)
         action = None
@@ -278,14 +335,17 @@ class ReplanController:
             action = self.replan(lam_targets, cold=True)
         action.events = list(events)
         self.adopt(action)
+        self._last_action_at = now
+        self._last_rung = action.rung
         return action
 
     def step(self) -> Optional[ReplanAction]:
-        """Poll the attached monitor and react to whatever it saw."""
+        """Poll the attached monitor and react to whatever it saw (or
+        to drift deferred by an earlier cool-down suppression)."""
         if self.monitor is None:
             return None
         events = self.monitor.poll()
-        if not events:
+        if not events and not self._deferred:
             return None
         return self.react(events)
 
@@ -321,6 +381,8 @@ class ReplanController:
                         lam=lam,
                         shares=exp.shares,
                         out_tokens=self.monitor.observed_tokens(w),
+                        slo_target=old.slo_target if old else 0.0,
+                        slo_class=old.slo_class if old else "",
                     )
                 else:
                     # unchanged pipeline: keep the current (possibly
@@ -330,12 +392,24 @@ class ReplanController:
                         lam=lam,
                         shares=dict(old.shares) if old else {},
                         out_tokens=dict(old.out_tokens) if old else {},
+                        slo_target=old.slo_target if old else 0.0,
+                        slo_class=old.slo_class if old else "",
                     )
             self.monitor.rebase(rebased)
         self._refreshed_since_adopt.clear()
         self.history.append(action)
 
     # -- helpers -----------------------------------------------------------
+
+    def _merge_deferred(self, events: List[DriftEvent]) -> List[DriftEvent]:
+        """Carry cool-down-suppressed drift into this batch, deduplicated
+        by detector identity (newest wins) so the buffer stays bounded."""
+        if not self._deferred:
+            return list(events)
+        merged: Dict[tuple, DriftEvent] = {}
+        for ev in self._deferred + list(events):
+            merged[(type(ev), ev.workflow, getattr(ev, "llm", ""))] = ev
+        return list(merged.values())
 
     def _drifted_targets(self, events: List[DriftEvent]) -> Dict[str, float]:
         """Planning targets under drift: observed rates for workflows
@@ -348,6 +422,10 @@ class ReplanController:
         for ev in events:
             if isinstance(ev, RateDrift):
                 out[ev.workflow] = observed.get(ev.workflow, ev.observed)
+            elif isinstance(ev, SLOViolation) and ev.workflow in observed:
+                # a violated tier under an unchanged plan means the
+                # observed load is what the fleet must actually absorb
+                out[ev.workflow] = observed[ev.workflow]
         return out
 
     def _refresh_pipelines(self, events: List[DriftEvent]) -> None:

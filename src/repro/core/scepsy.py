@@ -24,6 +24,25 @@ class ScepsyDeployment:
     pipeline: AggregateLLMPipeline
     schedule: ScheduleResult
     placement: Placement
+    # request-level QoS context (repro.qos.slo.WorkflowQoS): the
+    # resolved SLO class + the pipeline-derived work model; None when
+    # the workflow is unclassified
+    qos: Optional[object] = None
+
+
+def _resolve_qos(wf: Workflow, pipeline: AggregateLLMPipeline,
+                 stats: Optional[WorkflowStats], slo=None):
+    """Build the runtime QoS context for one workflow: resolve the SLO
+    class's relative target against the traced unloaded latency (or the
+    work model's critical-path estimate when stats are unavailable)."""
+    slo = slo if slo is not None else wf.slo
+    if slo is None:
+        return None
+    from repro.qos.slo import WorkflowQoS, WorkModel
+
+    work = WorkModel.from_pipeline(pipeline, stats)
+    base = stats.mean_latency if stats is not None else work.serial_s
+    return WorkflowQoS(slo=slo.resolve(base), work=work)
 
 
 def build_pipeline(wf: Workflow, *, n_trace_requests: int = 60,
@@ -54,9 +73,14 @@ def _default_tp_degrees(spec: hw.ClusterSpec) -> list:
 def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
            n_trace_requests: int = 60, seed: int = 0,
            scheduler_config: Optional[SchedulerConfig] = None,
-           pipeline: Optional[AggregateLLMPipeline] = None
-           ) -> ScepsyDeployment:
-    """Full flow: returns the chosen allocation + concrete placement."""
+           pipeline: Optional[AggregateLLMPipeline] = None,
+           slo=None) -> ScepsyDeployment:
+    """Full flow: returns the chosen allocation + concrete placement.
+
+    ``slo`` (a :class:`repro.qos.slo.SLOClass`) overrides the
+    workflow's own tier; relative targets are resolved against the
+    traced unloaded latency.
+    """
     cfg = scheduler_config or SchedulerConfig(max_tp=spec.hb_domain_size)
     if pipeline is None:
         pipeline, stats, _ = build_pipeline(
@@ -66,7 +90,8 @@ def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
         stats = None
     result = schedule(pipeline, spec, lam_target, cfg)
     placement = place(result.allocations, spec)
-    return ScepsyDeployment(wf.name, stats, pipeline, result, placement)
+    return ScepsyDeployment(wf.name, stats, pipeline, result, placement,
+                            qos=_resolve_qos(wf, pipeline, stats, slo))
 
 
 @dataclass
@@ -97,6 +122,9 @@ class ScepsyFleetDeployment:
     # online drift handling (deploy_multi(..., online=True)): a
     # ReplanController wired to a DriftMonitor over this deployment
     controller: Optional[object] = None
+    # per-workflow request-level QoS contexts (workflow name ->
+    # repro.qos.slo.WorkflowQoS); empty when no workflow carries a tier
+    qos: Dict[str, object] = None
 
     def global_instances(self):
         """Every placed instance in physical cluster coordinates."""
@@ -133,6 +161,8 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
                  welfare: Optional[str] = None,
                  online: bool = False,
                  drift_config=None,
+                 replan_cooldown_s: float = 0.0,
+                 slos: Optional[Dict[str, object]] = None,
                  max_profile_groups: int = 60) -> ScepsyFleetDeployment:
     """Fleet flow: trace/profile each workflow, allocate the cluster with
     :func:`schedule_multi` (``mode`` selects partitioned slices vs the
@@ -154,11 +184,19 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
     executor as ``telemetry=``) plus a
     :class:`repro.core.replan.ReplanController` whose escalation ladder
     re-plans incrementally against this deployment's warm state.
-    ``drift_config`` is an optional :class:`repro.core.drift.DriftConfig`.
+    ``drift_config`` is an optional :class:`repro.core.drift.DriftConfig`;
+    ``replan_cooldown_s`` sets the controller's rung hysteresis (drift
+    events inside the window only act if they escalate the rung).
+
+    ``slos`` overrides per-workflow SLO classes (default: each
+    workflow's own ``Workflow.slo``); resolved classes + pipeline work
+    models land in the returned deployment's ``qos`` dict, and each
+    class's latency target arms the monitor's SLO-violation detector.
     """
     import dataclasses as dc
 
-    from repro.core.placement import PlacementError, tenant_routing
+    from repro.core.placement import (fleet_offsets, merge_fleet,
+                                      tenant_routing)
     from repro.core.scheduler import _subcluster
 
     cfg = scheduler_config or SchedulerConfig(max_tp=spec.hb_domain_size)
@@ -179,6 +217,14 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
     multi = schedule_multi(pipelines, spec, lam_targets, cfg,
                            split_step=split_step, search=search, mode=mode)
 
+    wf_by_name = {wf.name: wf for wf in wfs}
+    qos_by_name = {}
+    for name, pipe in pipelines.items():
+        q = _resolve_qos(wf_by_name[name], pipe, stats_by_name.get(name),
+                         (slos or {}).get(name))
+        if q is not None:
+            qos_by_name[name] = q
+
     def _controller(placement=None):
         if not online:
             return None
@@ -187,11 +233,11 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
         from repro.core.replan import ReplanController
 
         monitor = DriftMonitor(
-            {n: expectation_from(pipelines[n], lam_targets[n],
-                                 stats_by_name.get(n))
+            {n: expectation_from(
+                pipelines[n], lam_targets[n], stats_by_name.get(n),
+                slo=(qos_by_name[n].slo if n in qos_by_name else None))
              for n in pipelines},
             drift_config or DriftConfig())
-        wf_by_name = {wf.name: wf for wf in wfs}
 
         def refresh(name: str) -> AggregateLLMPipeline:
             # a cold (rung-3) re-plan re-runs trace -> profile ->
@@ -205,7 +251,8 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
 
         return ReplanController(pipelines, spec, lam_targets, cfg,
                                 result=multi, placement=placement,
-                                monitor=monitor, pipeline_refresh=refresh)
+                                monitor=monitor, pipeline_refresh=refresh,
+                                cooldown_s=replan_cooldown_s)
 
     if multi.alloc_mode == "pooled":
         pooled = multi.pooled
@@ -214,7 +261,7 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
         deployments = {
             name: ScepsyDeployment(
                 name, stats_by_name.get(name), pipelines[name], result,
-                placement)
+                placement, qos=qos_by_name.get(name))
             for name, result in multi.per_workflow.items()
         }
         return ScepsyFleetDeployment(deployments, {}, multi.welfare, multi,
@@ -222,7 +269,8 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
                                      mode="pooled",
                                      tenant_placement=placement,
                                      routing=routing,
-                                     controller=_controller(placement))
+                                     controller=_controller(placement),
+                                     qos=qos_by_name)
 
     deployments = {}
     for name, result in multi.per_workflow.items():
@@ -230,26 +278,18 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
         placement = place(result.allocations, sub)
         deployments[name] = ScepsyDeployment(
             name, stats_by_name.get(name), pipelines[name], result,
-            placement)
+            placement, qos=qos_by_name.get(name))
     # disjoint slice starts; a slice start is hb-domain-aligned only
     # when the slice actually contains TP groups (TP instances must not
     # cross a domain boundary after translation — TP=1 slices can start
     # anywhere, which matters now that odd-sized splits are schedulable)
-    dom = spec.hb_domain_size
-    offsets: Dict[str, int] = {}
-    cursor = 0
-    for name in multi.chip_split:
-        insts = deployments[name].placement.instances
-        used = 1 + max((c for inst in insts for c in inst.chips), default=0)
-        if any(inst.tp > 1 for inst in insts):
-            cursor = (cursor + dom - 1) // dom * dom
-        offsets[name] = cursor
-        cursor += used
-    if cursor > spec.num_chips:
-        raise PlacementError(
-            f"fleet needs {cursor} chips for disjoint slices, "
-            f"cluster has {spec.num_chips}")
+    per_wf_placements = {n: d.placement for n, d in deployments.items()}
+    offsets = fleet_offsets(per_wf_placements, multi.chip_split, spec)
+    # the merged global placement is the controller's migration-diff
+    # incumbent, so partitioned re-plans emit a MigrationDiff too
+    incumbent = merge_fleet(per_wf_placements, offsets, spec)
     return ScepsyFleetDeployment(deployments, multi.chip_split,
                                  multi.welfare, multi, spec=spec,
                                  chip_offsets=offsets,
-                                 controller=_controller())
+                                 controller=_controller(incumbent),
+                                 qos=qos_by_name)

@@ -4,44 +4,88 @@ Two shapes: per-workflow private replicas (partitioned fleet, one Router
 per workflow-local LLM name), and pooled tenants (one shared replica set
 per canonical model, each workflow holding a weighted routing view into
 it).
+
+Every builder accepts a queue ``discipline`` (``fifo`` | ``priority`` |
+``wfq``, see :mod:`repro.qos.policy`): each engine replica gets its own
+discipline instance, and in pooled ``wfq`` mode the per-replica tenant
+weights are derived from the fleet's routing tables so deficit-round-
+robin hands each workflow its routing-weight share of the replica.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.pipeline import Allocation
+from repro.qos.policy import make_policy
 from repro.serving.simulator import EngineSim, EventLoop, Router
 from repro.workflows.runtime import Workflow
 
 
 def routers_from_allocations(wf: Workflow, allocations: Dict[str, Allocation],
                              loop: EventLoop, *, prefix_caching: bool = True,
-                             avg_context: int = 1024) -> Dict[str, Router]:
+                             avg_context: int = 1024,
+                             discipline: str = "fifo") -> Dict[str, Router]:
     routers: Dict[str, Router] = {}
     for llm, alloc in allocations.items():
         cfg = wf.llms[llm]
         engines = [
             EngineSim(cfg, loop, tp=alloc.tp, fraction=alloc.fraction,
                       name=f"{llm}/{r}", prefix_caching=prefix_caching,
-                      avg_context=avg_context)
+                      avg_context=avg_context,
+                      policy=make_policy(discipline))
             for r in range(alloc.replicas)
         ]
         routers[llm] = Router(engines)
     return routers
 
 
+def wfq_replica_weights(members: Dict[str, List[Tuple[str, str]]],
+                        routing: Dict[str, Dict[str, Dict[int, float]]]
+                        ) -> Dict[str, Dict[int, Dict[str, float]]]:
+    """Per-replica tenant weights from the fleet's routing tables:
+    canonical id -> replica index -> {workflow: weight}.  A workflow
+    pointing several local stages at one tenant contributes the sum of
+    those stages' weights on each replica."""
+    out: Dict[str, Dict[int, Dict[str, float]]] = {}
+    for cid, mem in members.items():
+        per_replica: Dict[int, Dict[str, float]] = {}
+        for workflow, llm in mem:
+            for r, w in routing.get(workflow, {}).get(llm, {}).items():
+                if w <= 0:
+                    continue
+                row = per_replica.setdefault(r, {})
+                row[workflow] = row.get(workflow, 0.0) + w
+        out[cid] = per_replica
+    return out
+
+
 def tenant_routers(allocations: Dict[str, Allocation],
                    cfgs: Dict[str, ArchConfig], loop: EventLoop, *,
                    prefix_caching: bool = True,
-                   avg_context: int = 1024) -> Dict[str, Router]:
-    """One shared Router per tenant (canonical model id)."""
+                   avg_context: int = 1024,
+                   discipline: str = "fifo",
+                   members: Optional[Dict[str, List[Tuple[str, str]]]] = None,
+                   routing: Optional[Dict[str, Dict[str, Dict[int, float]]]] = None
+                   ) -> Dict[str, Router]:
+    """One shared Router per tenant (canonical model id).
+
+    In ``wfq`` mode, pass the pooled schedule's ``members`` and
+    ``routing`` so each replica's deficit-round-robin weights match the
+    workflows' routing-weight shares of that replica.
+    """
+    wfq_weights: Dict[str, Dict[int, Dict[str, float]]] = {}
+    if discipline == "wfq" and members is not None and routing is not None:
+        wfq_weights = wfq_replica_weights(members, routing)
     routers: Dict[str, Router] = {}
     for cid, alloc in allocations.items():
         engines = [
             EngineSim(cfgs[cid], loop, tp=alloc.tp, fraction=alloc.fraction,
                       name=f"{cid}/{r}", prefix_caching=prefix_caching,
-                      avg_context=avg_context)
+                      avg_context=avg_context,
+                      policy=make_policy(
+                          discipline,
+                          weights=wfq_weights.get(cid, {}).get(r)))
             for r in range(alloc.replicas)
         ]
         routers[cid] = Router(engines)

@@ -61,6 +61,7 @@ class EngineRequest:
     on_complete: Optional[Callable[["EngineRequest"], None]] = None
     parent_id: Optional[int] = None  # for prefix caching
     workflow_request: Optional[int] = None
+    qos: Optional[object] = None  # repro.qos.slo.RequestQoS, duck-typed
     # filled by the engine:
     cached_prefix: int = 0
     t_start_service: float = -1.0
@@ -74,14 +75,22 @@ class EngineRequest:
 
 
 class EngineSim:
-    """One serving-engine replica (one LLM, one TP group, one fraction)."""
+    """One serving-engine replica (one LLM, one TP group, one fraction).
+
+    ``policy`` (a :class:`repro.qos.policy.QueueDiscipline`, duck-typed)
+    reorders admission out of the waiting queue: it is asked which
+    waiting request to admit next and charged the admitted request's
+    token cost.  ``policy=None`` is the built-in FIFO fast path.
+    """
 
     def __init__(self, cfg: ArchConfig, loop: EventLoop, *, tp: int = 1,
                  fraction: float = 1.0, name: str = "",
                  prefix_caching: bool = True, avg_context: int = 1024,
                  prefill_chunk: int = 2048, decode_quantum: int = 8,
-                 max_batch_override: Optional[int] = None):
+                 max_batch_override: Optional[int] = None,
+                 policy: Optional[object] = None):
         self.cfg = cfg
+        self.policy = policy
         self.loop = loop
         self.tp = tp
         self.fraction = fraction
@@ -150,16 +159,20 @@ class EngineSim:
             duration += self.swap_overhead_pending
             self.swap_overhead_pending = 0.0
 
-        # 1) admit prefills within chunk budget and batch capacity
+        # 1) admit prefills within chunk budget and batch capacity; the
+        #    queue discipline picks which waiting request goes next
         budget = self.prefill_chunk
         admitted: List[EngineRequest] = []
         while (self.waiting and len(self.running) + len(admitted) < self.max_batch
                and budget > 0):
-            req = self.waiting[0]
+            idx = self.policy.select(self.waiting, t0) if self.policy else 0
+            req = self.waiting[idx]
             new_tokens = req.prompt_tokens - req.cached_prefix
             if new_tokens > budget and admitted:
                 break
-            self.waiting.pop(0)
+            self.waiting.pop(idx)
+            if self.policy:
+                self.policy.on_admit(req, new_tokens + req.output_tokens)
             admitted.append(req)
             budget -= new_tokens
             cost = cm.prefill_cost(self.cfg, req.prompt_tokens, tp=self.tp,

@@ -3,20 +3,41 @@
 The fleet scheduler (:func:`repro.core.scheduler.schedule_multi`) and the
 benchmarks look workloads up here, so adding a scenario is one module +
 one entry.
+
+Each registered workflow carries a default SLO class
+(:mod:`repro.qos.slo`): interactive agent loops are gold (tight latency
+target, never shed), throughput-oriented pipelines are silver (degrade
+under overload), batch-style search/debate workloads are bronze (reject
+under overload).  Targets are relative (a multiple of the workflow's
+unloaded latency) and get resolved against traced stats at deploy time;
+callers that want different tiers pass ``slos=`` to ``deploy_multi`` or
+re-wrap with :func:`repro.workflows.runtime.with_slo`.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.qos.slo import BRONZE, GOLD, SILVER, SLOClass
 from repro.workflows.beam_search import BEAM_SEARCH
 from repro.workflows.debate import DEBATE
 from repro.workflows.map_reduce import MAP_REDUCE
 from repro.workflows.rag_reranker import RAG_RERANKER
 from repro.workflows.react_agent import REACT_AGENT
-from repro.workflows.runtime import Workflow
+from repro.workflows.runtime import Workflow, with_slo
 
+DEFAULT_SLOS: Dict[str, SLOClass] = {
+    "react_agent": GOLD,  # interactive tool agent: a user is waiting
+    "rag_reranker": GOLD,  # interactive retrieval front-end
+    "map_reduce": SILVER,  # throughput pipeline: degrade before reject
+    "beam_search": SILVER,
+    "debate": BRONZE,  # batch-style deliberation: sheddable
+}
+
+# a workflow without a DEFAULT_SLOS entry registers unclassified
+# (best-effort, no admission control) rather than failing at import
 WORKFLOWS: Dict[str, Workflow] = {
-    wf.name: wf
+    wf.name: (with_slo(wf, DEFAULT_SLOS[wf.name])
+              if wf.name in DEFAULT_SLOS else wf)
     for wf in (BEAM_SEARCH, RAG_RERANKER, REACT_AGENT, MAP_REDUCE, DEBATE)
 }
 

@@ -54,6 +54,14 @@ class Workflow:
     name: str
     program: WorkflowProgram
     llms: Dict[str, ArchConfig]  # logical name -> architecture
+    # service tier (repro.qos.slo.SLOClass); None = unclassified, which
+    # every layer treats as best-effort with no admission control
+    slo: Optional[object] = None
+
+
+def with_slo(wf: Workflow, slo) -> Workflow:
+    """The same workflow under a service tier (program shared, not copied)."""
+    return Workflow(wf.name, wf.program, dict(wf.llms), slo=slo)
 
 
 # ---------------------------------------------------------------------------
@@ -125,10 +133,24 @@ class RequestRecord:
     request_id: int
     arrival: float
     done: float = -1.0
+    # request-level QoS bookkeeping (populated when the driver has a
+    # WorkflowQoS context):
+    slo_class: str = ""
+    deadline: float = math.inf  # absolute; inf = best-effort
+    rejected: bool = False  # shed at the front door, never dispatched
+    degraded: bool = False  # admitted, but demoted to best-effort
+    issued_s: float = 0.0  # expected work already dispatched (WorkModel)
 
     @property
     def latency(self) -> float:
         return self.done - self.arrival
+
+    @property
+    def slo_met(self) -> bool:
+        """Completed within its latency target (best-effort is always
+        met; rejected or unfinished requests never are)."""
+        return self.done >= 0 and not self.rejected \
+            and self.done <= self.deadline
 
 
 class ClusterDriver:
@@ -143,18 +165,27 @@ class ClusterDriver:
     ``telemetry`` (optional, duck-typed — e.g. a
     :class:`repro.core.drift.DriftMonitor`) receives ``record_arrival``,
     ``record_call`` and ``record_request_done`` callbacks, the live
-    signal the online drift detector runs on.
+    signal the online drift detector runs on; ``record_shed`` is called
+    (when the sink defines it) for front-door rejections/degradations.
+
+    ``qos`` (a :class:`repro.qos.slo.WorkflowQoS`) turns on request-
+    level QoS: each arrival passes admission control (when the context
+    carries a controller), every engine request is tagged with
+    :class:`repro.qos.slo.RequestQoS` metadata — deadline, class weight
+    and the work model's remaining-work estimate — which the engines'
+    queue disciplines order by.
     """
 
     def __init__(self, wf: Workflow, routers: Dict[str, Router],
                  loop: EventLoop,
                  route_map: Optional[Dict[str, str]] = None,
-                 telemetry=None):
+                 telemetry=None, qos=None):
         self.wf = wf
         self.routers = routers
         self.loop = loop
         self.route_map = route_map or {}
         self.telemetry = telemetry
+        self.qos = qos
         self.records: List[RequestRecord] = []
         self._id_counter = [0]
 
@@ -216,6 +247,27 @@ class ClusterDriver:
         self.records.append(rec)
         if self.telemetry is not None:
             self.telemetry.record_arrival(self.wf.name, self.loop.now)
+        if self.qos is not None:
+            slo = self.qos.slo
+            rec.slo_class = slo.name
+            rec.deadline = self.loop.now + slo.deadline_s
+            if self.qos.admission is not None:
+                decision = self.qos.admission.admit(
+                    self.wf.name, self.loop.now)
+                if decision == "reject":
+                    rec.rejected = True
+                    if self.telemetry is not None and \
+                            hasattr(self.telemetry, "record_shed"):
+                        self.telemetry.record_shed(
+                            self.wf.name, slo.name, "reject", self.loop.now)
+                    return
+                if decision == "degrade":
+                    rec.degraded = True
+                    rec.deadline = math.inf
+                    if self.telemetry is not None and \
+                            hasattr(self.telemetry, "record_shed"):
+                        self.telemetry.record_shed(
+                            self.wf.name, slo.name, "degrade", self.loop.now)
         rng = random.Random((seed << 20) + rid)
         gen = self.wf.program(rng)
         self._advance(gen, rec, None)
@@ -252,8 +304,26 @@ class ClusterDriver:
                 req_id=h, prompt_tokens=c.prompt_tokens,
                 output_tokens=max(c.output_tokens, 1), arrival=self.loop.now,
                 on_complete=on_done, parent_id=c.parent,
-                workflow_request=rec.request_id)
+                workflow_request=rec.request_id,
+                qos=self._request_qos(rec, c.llm))
             self.router_for(c.llm).submit(req)
+
+    def _request_qos(self, rec: RequestRecord, llm: str):
+        """Tag one engine request with this workflow request's urgency
+        state: deadline, class weight, and the work model's estimate of
+        the work still ahead once this call finishes."""
+        if self.qos is None:
+            return None
+        from repro.qos.slo import RequestQoS
+
+        work = self.qos.work
+        rec.issued_s += work.per_call_s.get(llm, 0.0)
+        slo = self.qos.slo
+        return RequestQoS(
+            tenant=self.wf.name, slo=slo.name, weight=slo.weight,
+            deadline=rec.deadline,
+            remaining_s=work.remaining_after(rec.issued_s),
+            degraded=rec.degraded)
 
 
 # ---------------------------------------------------------------------------
@@ -305,4 +375,5 @@ def drift_workflow(wf: Workflow, *,
             except StopIteration:
                 return
 
-    return Workflow(name or f"{wf.name}", program, dict(wf.llms))
+    return Workflow(name or f"{wf.name}", program, dict(wf.llms),
+                    slo=wf.slo)

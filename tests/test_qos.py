@@ -1,0 +1,480 @@
+"""Request-level QoS: queue disciplines, admission control, SLO telemetry.
+
+EngineSim scheduling coverage the ISSUE asks for: fifo/priority parity
+when every request is in the same class, conservation of served tokens
+across disciplines, and a hypothesis property test that wfq is
+starvation-free under overload.  Plus the SLOViolation drift trigger,
+the replan cool-down hysteresis, and partitioned migration diffs.
+"""
+import math
+from types import SimpleNamespace
+
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.drift import (DriftConfig, DriftMonitor, Expectation,
+                              RateDrift, SLOViolation, expectation_from)
+from repro.core.replan import (RUNG_REBALANCE, RUNG_WARM_REPLAN,
+                               ReplanController, partitioned_fleet_placement,
+                               recommend_rung)
+from repro.core.scheduler import schedule_multi
+from repro.qos.admission import AdmissionController
+from repro.qos.policy import make_policy, request_cost
+from repro.qos.slo import BRONZE, GOLD, RequestQoS, SLOClass, WorkModel
+from repro.serving.simulator import EngineRequest, EngineSim, EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import Workflow, with_slo
+
+from tests.test_drift import LAMS, SCFG, SPEC  # noqa: F401
+from tests.test_drift import SHARED, sharing_fleet  # noqa: F401
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+ENGINE_CFG = ArchConfig(name="qos-small", family="dense", num_layers=8,
+                        d_model=1024, num_heads=8, num_kv_heads=8,
+                        d_ff=4096, vocab_size=32_000)
+
+
+def _run_engine(discipline, reqs, *, weights=None, max_batch=2,
+                until=math.inf):
+    loop = EventLoop()
+    eng = EngineSim(ENGINE_CFG, loop, name="e",
+                    max_batch_override=max_batch,
+                    policy=make_policy(discipline, weights=weights))
+    for r in reqs:
+        eng.submit(r)
+    loop.run(until)
+    return eng
+
+
+def _req(i, *, prompt=300, out=48, qos=None):
+    return EngineRequest(req_id=i, prompt_tokens=prompt, output_tokens=out,
+                         arrival=0.001 * i, qos=qos)
+
+
+# ---------------------------------------------------------------------------
+# queue disciplines
+# ---------------------------------------------------------------------------
+
+
+def test_make_policy_fifo_is_none_and_unknown_raises():
+    assert make_policy("fifo") is None
+    assert make_policy("priority") is not None
+    assert make_policy("wfq", weights={"a": 1.0}) is not None
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+@pytest.mark.parametrize("qos_of", [
+    lambda i: None,  # unclassified traffic
+    lambda i: RequestQoS(tenant="wf", slo="gold", weight=2.0,
+                         deadline=500.0, remaining_s=1.0),  # one equal class
+])
+def test_priority_parity_with_fifo_when_classes_equal(qos_of):
+    """With every request in the same class (identical deadline and
+    remaining work) — or with no QoS metadata at all — the priority
+    discipline degenerates to arrival order: completion order and times
+    match FIFO exactly."""
+    fifo = _run_engine("fifo", [_req(i, qos=qos_of(i)) for i in range(16)])
+    prio = _run_engine("priority", [_req(i, qos=qos_of(i)) for i in range(16)])
+    assert [r.req_id for r in fifo.done] == [r.req_id for r in prio.done]
+    assert [r.t_done for r in fifo.done] == [r.t_done for r in prio.done]
+
+
+def test_priority_urgent_request_jumps_burst():
+    """A nearly-finished workflow request (tight deadline, tiny remaining
+    work) submitted behind a fresh best-effort burst is served first."""
+    burst = [_req(i, qos=RequestQoS(tenant="batch", slo="best_effort",
+                                    weight=1.0, deadline=math.inf))
+             for i in range(12)]
+    urgent = _req(99, qos=RequestQoS(tenant="chat", slo="gold", weight=4.0,
+                                     deadline=5.0, remaining_s=0.1))
+    eng = _run_engine("priority", burst + [urgent])
+    order = [r.req_id for r in eng.done]
+    assert order.index(99) == 0
+    fifo = _run_engine("fifo", [_req(i) for i in range(12)] + [_req(99)])
+    assert [r.req_id for r in fifo.done].index(99) == 12
+
+
+def test_served_token_conservation_across_disciplines():
+    """Scheduling reorders service; it must not create or destroy work."""
+    def mk():
+        reqs = []
+        for i in range(24):
+            tenant = ("a", "b", "c")[i % 3]
+            q = RequestQoS(tenant=tenant, slo="gold", weight=1.0 + (i % 3),
+                           deadline=10.0 + i, remaining_s=0.5 * (i % 5))
+            reqs.append(_req(i, prompt=200 + 40 * (i % 4), out=32 + (i % 7),
+                             qos=q))
+        return reqs
+
+    totals = {}
+    for disc in ("fifo", "priority", "wfq"):
+        eng = _run_engine(disc, mk(), weights={"a": 1.0, "b": 2.0, "c": 3.0})
+        assert len(eng.done) == 24
+        totals[disc] = sum(request_cost(r) for r in eng.done)
+    assert totals["fifo"] == totals["priority"] == totals["wfq"]
+
+
+def test_wfq_served_tokens_track_weights_under_overload():
+    """With both tenants continuously backlogged, DRR serves tokens in
+    proportion to the configured weights (within 10%)."""
+    reqs = []
+    for i in range(120):
+        t = "a" if i % 2 == 0 else "b"
+        reqs.append(_req(i, prompt=256, out=32, qos=RequestQoS(tenant=t)))
+    loop = EventLoop()
+    eng = EngineSim(ENGINE_CFG, loop, name="e", max_batch_override=2,
+                    policy=make_policy("wfq", weights={"a": 3.0, "b": 1.0}))
+    for r in reqs:
+        eng.submit(r)
+    # stop while both tenants still have backlog
+    loop.run(until=0.0)
+    while eng.waiting and min(
+            sum(1 for r in eng.waiting if r.qos.tenant == t)
+            for t in ("a", "b")) > 4:
+        loop.run(until=loop._heap[0][0] if loop._heap else math.inf)
+    served = {"a": 0.0, "b": 0.0}
+    for r in eng.done:
+        served[r.qos.tenant] += request_cost(r)
+    assert served["a"] > 0 and served["b"] > 0
+    share_a = served["a"] / (served["a"] + served["b"])
+    assert abs(share_a - 0.75) <= 0.10
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        w_a=st.floats(0.1, 5.0), w_b=st.floats(0.1, 5.0),
+        w_c=st.floats(0.1, 5.0),
+        sizes=st.lists(st.integers(64, 512), min_size=9, max_size=30),
+    )
+    def test_wfq_starvation_free_under_overload_property(w_a, w_b, w_c,
+                                                         sizes):
+        """Every positive-weight tenant with backlog is eventually
+        served: its deficit grows by quantum x weight per round, so no
+        weight assignment or request-size mix can starve it."""
+        tenants = ("a", "b", "c")
+        reqs = [_req(i, prompt=sz, out=16,
+                     qos=RequestQoS(tenant=tenants[i % 3]))
+                for i, sz in enumerate(sizes)]
+        eng = _run_engine("wfq", reqs,
+                          weights={"a": w_a, "b": w_b, "c": w_c},
+                          max_batch=1)
+        assert len(eng.done) == len(reqs)  # nothing stranded in the queue
+        done_of = {t: [r for r in eng.done if r.qos.tenant == t]
+                   for t in tenants}
+        for t in tenants:
+            expect = [r for r in reqs if r.qos.tenant == t]
+            assert len(done_of[t]) == len(expect)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def _work(total=2.0, serial=1.0, spt=0.001):
+    return WorkModel(per_call_s={"m": 0.5}, total_s=total, serial_s=serial,
+                     sec_per_token={"m": spt})
+
+
+def _router(load):
+    return SimpleNamespace(replicas=[SimpleNamespace(load=load,
+                                                     failed=False)])
+
+
+def test_admission_reject_and_degrade_on_backlog():
+    ctrl = AdmissionController()
+    rej = SLOClass("bronze", latency_target_s=2.0, shed_policy="reject")
+    deg = SLOClass("silver", latency_target_s=2.0, shed_policy="degrade")
+    nev = SLOClass("gold", latency_target_s=2.0, shed_policy="never")
+    ctrl.register("wf_r", rej, _work(), routers={"m": _router(50_000)})
+    ctrl.register("wf_d", deg, _work(), routers={"m": _router(50_000)})
+    ctrl.register("wf_n", nev, _work(), routers={"m": _router(50_000)})
+    # 50k queued tokens at 1ms/token = 50s wait >> 2s target
+    assert ctrl.admit("wf_r", 0.0) == "reject"
+    assert ctrl.admit("wf_d", 0.0) == "degrade"
+    assert ctrl.admit("wf_n", 0.0) == "admit"
+    assert ctrl.admit("unknown", 0.0) == "admit"
+    s = ctrl.stats()
+    assert s["wf_r"]["rejected"] == 1 and s["wf_d"]["degraded"] == 1
+    assert s["wf_n"]["admitted"] == 1
+
+
+def test_admission_sees_only_routable_replicas():
+    """Partition routing: an idle replica in another tenant's block
+    (weight 0 for this workflow) must not mask the backlog on the
+    replica this workflow actually routes to."""
+    ctrl = AdmissionController()
+    slo = SLOClass("bronze", latency_target_s=2.0, shed_policy="reject")
+    router = SimpleNamespace(
+        replicas=[SimpleNamespace(load=50_000, failed=False),
+                  SimpleNamespace(load=0, failed=False)],
+        weights={0: 1.0, 1: 0.0})
+    ctrl.register("wf", slo, _work(), routers={"m": router})
+    assert ctrl.admit("wf", 0.0) == "reject"
+    # unweighted router: the idle replica IS routable -> admit
+    router2 = SimpleNamespace(
+        replicas=[SimpleNamespace(load=50_000, failed=False),
+                  SimpleNamespace(load=0, failed=False)],
+        weights=None)
+    ctrl.register("wf2", slo, _work(), routers={"m": router2})
+    assert ctrl.admit("wf2", 0.0) == "admit"
+
+
+def test_admission_admits_when_idle_and_uses_predictor():
+    ctrl = AdmissionController()
+    slo = SLOClass("bronze", latency_target_s=2.0, shed_policy="reject")
+    ctrl.register("wf", slo, _work(), routers={"m": _router(0)},
+                  predictor=lambda lam: 100.0)  # model says: hopeless
+    # predictor only kicks in once the rate EWMA has samples
+    assert ctrl.admit("wf", 0.0) == "admit"
+    for k in range(12):
+        ctrl.admit("wf", 0.1 * (k + 1))
+    assert ctrl.admit("wf", 2.0) == "reject"
+
+
+def test_cluster_driver_rejects_and_tags_records():
+    from repro.qos.slo import WorkflowQoS
+
+    wf = Workflow("wf", lambda rng: iter(()), {})
+    slo = SLOClass("bronze", latency_target_s=0.5, shed_policy="reject")
+    ctrl = AdmissionController()
+    ctrl.register("wf", slo, _work(spt=0.01),
+                  routers={"m": _router(10_000)})
+    qos = WorkflowQoS(slo=slo, work=_work(spt=0.01), admission=ctrl)
+    loop = EventLoop()
+    from repro.workflows.runtime import ClusterDriver
+
+    drv = ClusterDriver(wf, {}, loop, qos=qos)
+    drv.start_request(0)
+    assert drv.records[0].rejected and drv.records[0].done < 0
+    assert not drv.records[0].slo_met
+    assert drv.records[0].slo_class == "bronze"
+
+
+# ---------------------------------------------------------------------------
+# SLO classes + work model
+# ---------------------------------------------------------------------------
+
+
+def test_slo_resolve_and_validation():
+    g = GOLD.resolve(10.0)
+    assert g.latency_target_s == pytest.approx(20.0)
+    assert g.target_factor is None and g.deadline_s == pytest.approx(20.0)
+    assert GOLD.resolve(10.0).resolve(99.0).latency_target_s == \
+        pytest.approx(20.0)  # absolute targets never re-resolve
+    be = SLOClass("free")
+    assert be.best_effort and be.deadline_s == math.inf
+    with pytest.raises(ValueError):
+        SLOClass("bad", shed_policy="drop-everything")
+    with pytest.raises(ValueError):
+        SLOClass("bad", weight=0.0)
+
+
+def test_work_model_from_pipeline(sharing_fleet):  # noqa: F811
+    pipe = sharing_fleet["wf_a"]
+    wm = WorkModel.from_pipeline(pipe)
+    assert set(wm.per_call_s) == set(pipe.stages)
+    st_ = pipe.stages["gen"]
+    assert wm.total_s == pytest.approx(st_.n * wm.per_call_s["gen"])
+    assert wm.serial_s == pytest.approx(
+        st_.n / st_.p * wm.per_call_s["gen"])
+    assert wm.remaining_after(wm.total_s + 1.0) == 0.0
+    assert wm.remaining_after(0.0) == pytest.approx(wm.total_s)
+
+
+def test_registry_workflows_carry_slos():
+    assert get_workflow("react_agent").slo.name == "gold"
+    assert get_workflow("debate").slo.shed_policy == "reject"
+    swapped = with_slo(get_workflow("debate"), BRONZE)
+    assert swapped.slo is BRONZE and swapped.name == "debate"
+
+
+# ---------------------------------------------------------------------------
+# SLOViolation drift trigger
+# ---------------------------------------------------------------------------
+
+
+def _slo_monitor(target=1.0, threshold=0.3):
+    exp = Expectation(lam=1.0, shares={}, slo_target=target,
+                      slo_class="gold")
+    cfg = DriftConfig(min_samples=10, slo_violation_threshold=threshold)
+    return DriftMonitor({"wf": exp}, cfg)
+
+
+def _done(mon, i, latency, violate_target=1.0):
+    mon.record_request_done(
+        "wf", SimpleNamespace(request_id=i, done=float(i) + latency,
+                              latency=latency, degraded=False))
+
+
+def test_slo_violation_fires_on_sustained_misses():
+    mon = _slo_monitor()
+    for i in range(40):
+        _done(mon, i, 0.5)  # within target: silent
+    assert mon.poll() == []
+    for i in range(40, 120):
+        _done(mon, i, 3.0)  # sustained misses
+    events = [e for e in mon.poll() if isinstance(e, SLOViolation)]
+    assert events and events[0].slo_class == "gold"
+    assert events[0].violation_rate > 0.3
+    assert mon.slo_counters["wf"]["violations"] > 0
+    assert mon.observed_violation_rate("wf") > 0.3
+    # rung mapping: the rising-edge event (rate just past the 0.3
+    # threshold) is a mild overload -> rebalance; a heavy violation
+    # rate needs capacity -> warm re-plan
+    assert recommend_rung(events) == RUNG_REBALANCE
+    heavy = SLOViolation(workflow="wf", at=1.0, magnitude=0.8,
+                         slo_class="gold", violation_rate=0.8, target_s=1.0)
+    assert recommend_rung([heavy]) == RUNG_WARM_REPLAN
+
+
+def test_slo_sheds_count_as_violations():
+    mon = _slo_monitor()
+    for i in range(60):
+        mon.record_shed("wf", "gold", "reject", float(i))
+    events = [e for e in mon.poll() if isinstance(e, SLOViolation)]
+    assert events
+    assert mon.slo_counters["wf"]["rejected"] == 60
+
+
+def test_slo_detector_disarmed_without_target():
+    exp = Expectation(lam=1.0, shares={})
+    mon = DriftMonitor({"wf": exp}, DriftConfig(min_samples=5))
+    for i in range(50):
+        _done(mon, i, 100.0)
+    assert [e for e in mon.poll() if isinstance(e, SLOViolation)] == []
+
+
+def test_expectation_from_arms_slo(sharing_fleet):  # noqa: F811
+    slo = SLOClass("gold", latency_target_s=4.2)
+    exp = expectation_from(sharing_fleet["wf_a"], 1.0, slo=slo)
+    assert exp.slo_target == pytest.approx(4.2)
+    assert exp.slo_class == "gold"
+    assert expectation_from(sharing_fleet["wf_a"], 1.0).slo_target == 0.0
+
+
+# ---------------------------------------------------------------------------
+# replan: cool-down hysteresis + partitioned migration diffs
+# ---------------------------------------------------------------------------
+
+
+def _rate_event(wf, magnitude, observed, expected, at=1.0):
+    return RateDrift(workflow=wf, at=at, magnitude=magnitude,
+                     observed=observed, expected=expected)
+
+
+def test_replan_cooldown_suppresses_flapping(sharing_fleet):  # noqa: F811
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res,
+                            cooldown_s=100.0)
+    act = ctrl.react([_rate_event("wf_a", 0.3, 0.52, 0.4, at=10.0)])
+    assert act is not None and act.rung == RUNG_REBALANCE
+    # flapping: same-rung drift inside the window is ignored
+    assert ctrl.react([_rate_event("wf_a", 0.3, 0.41, 0.52, at=20.0)]) is None
+    # genuine escalation is never delayed
+    act2 = ctrl.react([_rate_event("wf_a", 1.5, 1.0, 0.4, at=30.0)])
+    assert act2 is not None and act2.rung == RUNG_WARM_REPLAN
+    # once the window expires, the same rung reacts again
+    act3 = ctrl.react([_rate_event("wf_a", 0.3, 0.5, 1.0, at=200.0)])
+    assert act3 is not None
+
+
+def test_replan_cooldown_defers_persistent_drift(sharing_fleet):  # noqa: F811
+    """The monitor is edge-triggered, so a suppressed event must be
+    deferred and acted on once the window expires — not dropped forever
+    while the condition persists."""
+    from repro.core.drift import DriftMonitor
+
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    mon = DriftMonitor({w: Expectation(lam=LAMS[w], shares={})
+                        for w in LAMS}, DriftConfig())
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res,
+                            monitor=mon, cooldown_s=100.0)
+    mon.now = 10.0
+    assert ctrl.react([_rate_event("wf_a", 0.3, 0.52, 0.4, at=10.0)])
+    # suppressed inside the window: deferred, not dropped
+    mon.now = 20.0
+    assert ctrl.react([_rate_event("wf_a", 0.3, 0.55, 0.4, at=20.0)]) is None
+    assert ctrl._deferred
+    # still inside the window: step() keeps deferring (no new events)
+    mon.now = 50.0
+    assert ctrl.step() is None
+    # window expired: step() reacts to the deferred drift with no fresh
+    # event needed (the latched detector will never re-fire on its own)
+    mon.now = 200.0
+    act = ctrl.step()
+    assert act is not None and act.rung == RUNG_REBALANCE
+    assert not ctrl._deferred
+
+
+def test_replan_no_cooldown_by_default(sharing_fleet):  # noqa: F811
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res)
+    assert ctrl.react([_rate_event("wf_a", 0.3, 0.52, 0.4, at=1.0)])
+    assert ctrl.react([_rate_event("wf_a", 0.3, 0.41, 0.52, at=1.5)])
+
+
+def test_partitioned_replan_emits_migration_diff(sharing_fleet):  # noqa: F811
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="partitioned")
+    incumbent = partitioned_fleet_placement(res, SPEC)
+    assert incumbent is not None
+    names = {i.llm.split("/")[0] for i in incumbent.instances}
+    assert names == set(sharing_fleet)  # instances keyed workflow/llm
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res,
+                            placement=incumbent)
+    act = ctrl.replan({"wf_a": 0.9, "wf_b": 0.6}, cold=False)
+    assert act.feasible and act.result.alloc_mode == "partitioned"
+    assert act.placement is not None
+    assert act.migration is not None
+    s = act.migration.summary()
+    assert (s["replicas_added"] + s["replicas_moved"]
+            + s["replicas_unchanged"]) == len(act.placement.instances)
+    # identical targets -> identical placement -> all-unchanged diff
+    same = ctrl.replan({"wf_a": 0.9, "wf_b": 0.6}, cold=False)
+    assert same.migration.summary()["replicas_moved"] == 0
+    assert same.migration.summary()["replicas_added"] == 0
+
+
+def test_deploy_multi_partitioned_controller_has_incumbent(sharing_fleet):  # noqa: F811
+    wfa = Workflow("wf_a", lambda rng: iter(()), {"gen": SHARED})
+    wfb = Workflow("wf_b", lambda rng: iter(()), {"draft": SHARED})
+    from repro.core.scepsy import deploy_multi
+
+    dep = deploy_multi([wfa, wfb], SPEC, LAMS, pipelines=sharing_fleet,
+                       scheduler_config=SCFG, mode="partitioned",
+                       online=True)
+    assert dep.controller.placement is not None
+    act = dep.controller.replan({"wf_a": 0.9, "wf_b": 0.6}, cold=False)
+    assert act.migration is not None
+
+
+def test_deploy_multi_threads_slos(sharing_fleet):  # noqa: F811
+    wfa = with_slo(Workflow("wf_a", lambda rng: iter(()), {"gen": SHARED}),
+                   GOLD)
+    wfb = Workflow("wf_b", lambda rng: iter(()), {"draft": SHARED})
+    from repro.core.scepsy import deploy_multi
+
+    dep = deploy_multi([wfa, wfb], SPEC, LAMS, pipelines=sharing_fleet,
+                       scheduler_config=SCFG, mode="pooled", online=True)
+    assert "wf_a" in dep.qos and "wf_b" not in dep.qos
+    q = dep.qos["wf_a"]
+    assert q.slo.latency_target_s is not None  # resolved
+    assert q.work.total_s > 0
+    exp = dep.controller.monitor.expectations["wf_a"]
+    assert exp.slo_target == pytest.approx(q.slo.latency_target_s)
+    assert dep.controller.monitor.expectations["wf_b"].slo_target == 0.0
+    # slos= override wins over Workflow.slo
+    dep2 = deploy_multi([wfa, wfb], SPEC, LAMS, pipelines=sharing_fleet,
+                        scheduler_config=SCFG, mode="pooled",
+                        slos={"wf_b": SLOClass("gold", latency_target_s=9.0)})
+    assert dep2.qos["wf_b"].slo.latency_target_s == pytest.approx(9.0)
