@@ -1,0 +1,290 @@
+"""Placement benchmark: placement-blind vs placement-aware split search.
+
+The partitioned fleet split search historically scored splits purely on
+predicted welfare, modeling each workflow's slice as contiguous — so on
+deliberately tight or fragmented clusters its best-scoring split can be
+*unplaceable* on the real host/ICI-domain topology (sub-chip replicas
+that overcommit chips, TP groups with no free hb domain, alignment
+padding).  This benchmark deploys the same fleets both ways:
+
+* **blind** — ``SchedulerConfig(placement_aware=False)``: the winner is
+  evaluated against BOTH deploy models — the legacy contiguous-slice
+  placement (slice-local ``place`` + hb-domain-aligned offsets: the
+  placement-blind baseline system as it existed before co-placement)
+  and the co-placement probe
+  (:func:`repro.core.placement.fleet_feasibility`, what ``deploy_multi``
+  runs today).  A plan whose placement fails realizes welfare 0;
+* **aware** — ``SchedulerConfig(placement_aware=True)``: every candidate
+  split is probed during the search, unplaceable splits rejected, and
+  placeable ones scored ``welfare - fragmentation_weight * frag``.
+
+Per scenario the report gives both plans' predicted welfare, placement
+feasibility, fragmentation, the legacy contiguous-slice feasibility
+(the pre-co-placement model), and — for the aware plan — a simulated
+sanity run over routers built from the co-placement itself
+(:func:`repro.serving.deploy.fleet_routers_from_placement`).
+
+Acceptance (CI-gated via ``benchmarks.validate`` + the JSON booleans):
+the aware search achieves mean realized welfare >= the blind baseline's
+with strictly fewer placement failures on at least one tight-cluster
+scenario.  JSON schema is documented in benchmarks/README.md;
+``--smoke`` is the tiny-config mode CI runs (schema-identical).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses as dc
+import json
+import math
+
+from benchmarks.common import drive_fleet
+from repro import hw
+from repro.core import placement as pl
+from repro.core.scepsy import build_pipeline
+from repro.core.scheduler import SchedulerConfig, _subcluster, schedule_multi
+from repro.serving.deploy import fleet_routers_from_placement
+from repro.serving.simulator import EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver
+
+FRAGMENTATION_WEIGHT = 0.05
+WELFARE = "weighted"  # egalitarian min is ~always 0 on deliberately
+#                       tight clusters; the weighted mean stays informative
+
+
+def _settings(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return {"mode": "smoke", "n_trace": 8, "profile_groups": 6,
+                "n_req": 12}
+    return {"mode": "quick" if quick else "full",
+            "n_trace": 12 if quick else 30,
+            "profile_groups": 10 if quick else 30,
+            "n_req": 30 if quick else 60}
+
+
+def _scenarios(full: bool) -> list:
+    """Deliberately tight / fragmented clusters plus one comfortable
+    control.  ``tight`` marks the scenarios the acceptance clause
+    'strictly fewer failures on at least one tight-cluster scenario'
+    quantifies over."""
+    out = [
+        {
+            "name": "tight_8chip",
+            "tight": True,
+            "spec": hw.ClusterSpec(num_hosts=2, chips_per_host=4,
+                                   hb_domain_size=2),
+            "lam_targets": {"react_agent": 1.0, "map_reduce": 0.8,
+                            "debate": 1.6},
+        },
+        {
+            "name": "tail_5chip",
+            "tight": True,
+            "spec": hw.ClusterSpec(num_hosts=1, chips_per_host=4,
+                                   hb_domain_size=2, tail_chips=1),
+            "lam_targets": {"react_agent": 1.0, "debate": 1.2},
+        },
+        {
+            "name": "comfortable_16chip",
+            "tight": False,
+            "spec": hw.PAPER_CLUSTER_16,
+            "lam_targets": {"react_agent": 1.0, "map_reduce": 0.8,
+                            "debate": 1.6},
+        },
+    ]
+    if full:
+        out.append({
+            "name": "fragmented_12chip_dom4",
+            "tight": True,
+            "spec": hw.ClusterSpec(num_hosts=3, chips_per_host=4,
+                                   hb_domain_size=4),
+            "lam_targets": {"react_agent": 2.0, "map_reduce": 1.6,
+                            "debate": 3.2},
+        })
+    return out
+
+
+def _cluster_row(spec: hw.ClusterSpec) -> dict:
+    return {"hosts": spec.num_hosts, "chips_per_host": spec.chips_per_host,
+            "hb_domain_size": spec.hb_domain_size,
+            "tail_chips": spec.tail_chips, "chips": spec.num_chips}
+
+
+def _contiguous_placeable(result, spec: hw.ClusterSpec) -> bool:
+    """Would the legacy contiguous-slice model (slice-local place +
+    hb-domain-aligned offsets) have deployed this plan?"""
+    try:
+        placements = {
+            n: pl.place(result.per_workflow[n].allocations,
+                        _subcluster(spec, chips))
+            for n, chips in result.chip_split.items()
+        }
+        pl.fleet_offsets(placements, result.chip_split, spec)
+        return True
+    except pl.PlacementError:
+        return False
+
+
+def _plan_row(result, probe: pl.FeasibilityResult) -> dict:
+    return {
+        "welfare_predicted": result.welfare,
+        "placeable": probe.ok,
+        "realized_welfare": result.welfare if probe.ok else 0.0,
+        "fragmentation": probe.fragmentation,
+        "failed_shape": probe.failed_shape,
+        "chip_split": dict(result.chip_split),
+        "evaluated_splits": result.evaluated_splits,
+        "search_time_s": result.search_time_s,
+    }
+
+
+def _simulate(wfs, placement: pl.Placement, lams, n_req: int,
+              seed: int) -> dict:
+    """Drive the co-placed fleet through engines built from the placement
+    itself; per-workflow completions + mean latency (finite-guarded)."""
+    loop = EventLoop()
+    routers = fleet_routers_from_placement(wfs, placement, loop)
+    drivers = {n: ClusterDriver(wfs[n], routers[n], loop) for n in routers}
+    res = drive_fleet(drivers, lams, n_req, loop, seed=seed)
+    return {
+        n: {
+            "completed": r["completed"],
+            "mean_latency_s": (r["mean_latency_s"]
+                               if math.isfinite(r["mean_latency_s"])
+                               else None),
+        }
+        for n, r in res.items()
+    }
+
+
+def run(quick: bool = True, smoke: bool = False, seed: int = 0,
+        out=None) -> dict:
+    s = _settings(quick, smoke)
+    scenarios = _scenarios(full=s["mode"] == "full")
+
+    needed = sorted({n for sc in scenarios for n in sc["lam_targets"]})
+    wfs, pipes = {}, {}
+    for name in needed:
+        wf = get_workflow(name)
+        wfs[name] = wf
+        pipes[name], _, _ = build_pipeline(
+            wf, n_trace_requests=s["n_trace"], tp_degrees=(1, 2, 4),
+            max_profile_groups=s["profile_groups"], seed=seed)
+
+    rows = []
+    for sc in scenarios:
+        spec = sc["spec"]
+        lams = sc["lam_targets"]
+        sub_pipes = {n: pipes[n] for n in lams}
+        base = SchedulerConfig(max_tp=spec.hb_domain_size, welfare=WELFARE,
+                               fragmentation_weight=FRAGMENTATION_WEIGHT)
+
+        blind = schedule_multi(sub_pipes, spec, lams, base,
+                               mode="partitioned")
+        blind_probe = pl.fleet_feasibility(
+            {n: blind.per_workflow[n].allocations for n in lams}, spec)
+
+        aware = schedule_multi(sub_pipes, spec, lams,
+                               dc.replace(base, placement_aware=True),
+                               mode="partitioned")
+        aware_probe = pl.fleet_feasibility(
+            {n: aware.per_workflow[n].allocations for n in lams}, spec)
+
+        contiguous_ok = _contiguous_placeable(blind, spec)
+        row = {
+            "name": sc["name"],
+            "tight": sc["tight"],
+            "cluster": _cluster_row(spec),
+            "lam_targets": lams,
+            "blind": {**_plan_row(blind, blind_probe),
+                      "contiguous_slices_placeable": contiguous_ok,
+                      "realized_welfare_legacy":
+                          blind.welfare if contiguous_ok else 0.0},
+            "aware": {**_plan_row(aware, aware_probe),
+                      "rejected_splits": aware.placement_rejected_splits,
+                      "placement_ok_flag": aware.placement_ok},
+        }
+        if aware_probe.ok:
+            placement = pl.place_fleet(
+                {n: aware.per_workflow[n].allocations for n in lams}, spec)
+            row["aware"]["fragmentation_placed"] = placement.fragmentation()
+            row["measured_aware"] = _simulate(
+                wfs, placement, lams, s["n_req"], seed + 1)
+        else:
+            row["measured_aware"] = None
+        rows.append(row)
+        print(f"[{sc['name']}] blind: welfare={blind.welfare:.4f} "
+              f"placeable={blind_probe.ok}  aware: "
+              f"welfare={aware.welfare:.4f} placeable={aware_probe.ok} "
+              f"rejected={aware.placement_rejected_splits}", flush=True)
+
+    blind_fail = sum(0 if r["blind"]["placeable"] else 1 for r in rows)
+    legacy_fail = sum(
+        0 if r["blind"]["contiguous_slices_placeable"] else 1 for r in rows)
+    aware_fail = sum(0 if r["aware"]["placeable"] else 1 for r in rows)
+    mean_blind = sum(r["blind"]["realized_welfare"] for r in rows) / len(rows)
+    mean_legacy = sum(r["blind"]["realized_welfare_legacy"]
+                      for r in rows) / len(rows)
+    mean_aware = sum(r["aware"]["realized_welfare"] for r in rows) / len(rows)
+    # the placement-blind BASELINE is the pre-co-placement system: blind
+    # search deployed through contiguous slices.  The aware system must
+    # beat it outright on some tight cluster; the co-placement-probe
+    # comparison (blind_fail) additionally isolates the search's own
+    # contribution when trace/profile fidelity makes blind plans packable
+    fewer_on_tight = any(
+        r["tight"] and not r["blind"]["contiguous_slices_placeable"]
+        and r["aware"]["placeable"] for r in rows)
+
+    doc = {
+        "benchmark": "placement_aware",
+        "mode": s["mode"],
+        "seed": seed,
+        "config": {
+            "workflows": needed,
+            "welfare": WELFARE,
+            "fragmentation_weight": FRAGMENTATION_WEIGHT,
+            "n_trace": s["n_trace"],
+            "profile_groups": s["profile_groups"],
+            "n_req": s["n_req"],
+            "scenario_names": [sc["name"] for sc in scenarios],
+        },
+        "scenarios": rows,
+        "summary": {
+            "scenarios": len(rows),
+            "placement_failures_legacy": legacy_fail,
+            "placement_failures_blind": blind_fail,
+            "placement_failures_aware": aware_fail,
+            "mean_realized_welfare_legacy": mean_legacy,
+            "mean_realized_welfare_blind": mean_blind,
+            "mean_realized_welfare_aware": mean_aware,
+        },
+        "acceptance": {
+            "aware_realized_welfare_ge_blind":
+                mean_aware >= max(mean_blind, mean_legacy) - 1e-9,
+            "strictly_fewer_failures_on_tight_cluster": fewer_on_tight,
+            "aware_all_placeable": aware_fail == 0,
+        },
+    }
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true", help="full-size sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (schema-identical)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for tracing/profiling/simulation")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report here")
+    args = ap.parse_args()
+    run(quick=not args.full, smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

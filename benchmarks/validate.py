@@ -37,6 +37,12 @@ REQUIRED = {
         "admission",
         "acceptance",
     ),
+    "placement_aware": (
+        "config",
+        "scenarios",
+        "summary",
+        "acceptance",
+    ),
 }
 
 

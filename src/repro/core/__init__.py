@@ -1,3 +1,27 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Scepsy's planning core — the paper's primary contribution.
+
+The modules chain into the Fig. 2 flow (see ``docs/architecture.md``
+for the guided tour):
+
+* :mod:`repro.core.trace` — LLM-level execution traces (§4 step 1);
+* :mod:`repro.core.aggregate` — per-LLM invocation counts, parallelism
+  and execution-time shares (§4 step 2, the §2.4 stability
+  observation);
+* :mod:`repro.core.profiler` — per-LLM throughput/latency profiles by
+  TP degree and chip fraction (§4 step 3);
+* :mod:`repro.core.pipeline` — the Aggregate LLM Pipeline predictor and
+  ``merge_pipelines`` for pooled multi-tenant fleets (§4 steps 4-5);
+* :mod:`repro.core.scheduler` — allocation search for one workflow or a
+  fleet, with welfare objectives and placement feedback (§5);
+* :mod:`repro.core.placement` — hierarchical topology-aware placement,
+  co-placement of partitioned fleets, feasibility probe, migration
+  diffs (§6);
+* :mod:`repro.core.drift` / :mod:`repro.core.replan` — online drift
+  detection driving the three-rung re-plan ladder (post-paper, ROADMAP
+  "Online re-scheduling on share drift");
+* :mod:`repro.core.scepsy` — the ``deploy`` / ``deploy_multi`` facade.
+
+Sibling subpackages supply the substrates: :mod:`repro.serving` (the
+discrete-event runtime + cost model), :mod:`repro.workflows` (servable
+agentic workloads), :mod:`repro.qos` (request-level SLO layer).
+"""

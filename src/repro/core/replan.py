@@ -46,10 +46,9 @@ from repro.core.placement import (
     MigrationDiff,
     Placement,
     PlacementError,
-    fleet_offsets,
-    merge_fleet,
     migration_diff,
     place,
+    place_fleet,
     tenant_routing,
 )
 from repro.core.scheduler import (
@@ -66,20 +65,17 @@ RUNG_FULL_REPLAN = 3
 
 def partitioned_fleet_placement(result: MultiScheduleResult,
                                 spec: hw.ClusterSpec) -> Optional[Placement]:
-    """Global placement of a partitioned fleet schedule: each workflow's
-    allocations placed slice-locally, translated by disjoint offsets and
-    merged (instances keyed ``<workflow>/<llm>``), so partitioned
-    re-plans produce a :class:`MigrationDiff` just like pooled ones."""
-    from repro.core.scheduler import _subcluster
-
+    """Global placement of a partitioned fleet schedule: all workflows'
+    replicas co-placed in one pass over the real topology
+    (:func:`~repro.core.placement.place_fleet`, instances keyed
+    ``<workflow>/<llm>``), so partitioned re-plans produce a
+    :class:`MigrationDiff` just like pooled ones — and rungs 2-3 deploy
+    through the same packing the placement-aware split search probes."""
     if result.alloc_mode != "partitioned" or not result.chip_split:
         return None
-    placements: Dict[str, Placement] = {}
-    for name, chips in result.chip_split.items():
-        placements[name] = place(
-            result.per_workflow[name].allocations, _subcluster(spec, chips))
-    offsets = fleet_offsets(placements, result.chip_split, spec)
-    return merge_fleet(placements, offsets, spec)
+    return place_fleet(
+        {name: result.per_workflow[name].allocations
+         for name in result.chip_split}, spec)
 
 
 @dataclass
@@ -273,17 +269,27 @@ class ReplanController:
         placement = None
         migration = None
         routing = None
+        placement_failed = False
         if res.alloc_mode == "pooled" and res.pooled is not None:
-            placement = place(res.pooled.allocations, self.spec)
             routing = res.pooled.routing
+            try:
+                placement = place(res.pooled.allocations, self.spec)
+            except PlacementError:
+                placement_failed = True  # plan cannot deploy: escalate
+        elif res.placement_ok is False:
+            # placement-aware search found NO placeable split and fell
+            # back to the blind winner: placing it is guaranteed to
+            # fail, and the plan must not be reported deployable
+            placement_failed = True
         else:
             try:
                 placement = partitioned_fleet_placement(res, self.spec)
             except PlacementError:
-                placement = None  # infeasible slices: diff is meaningless
+                placement_failed = True
         if self.placement is not None and placement is not None:
             migration = migration_diff(self.placement, placement)
-        feasible = all(r.feasible for r in res.per_workflow.values())
+        feasible = (all(r.feasible for r in res.per_workflow.values())
+                    and not placement_failed)
         reason = (
             "cold full re-plan + re-placement" if cold else "warm incremental re-plan"
         )

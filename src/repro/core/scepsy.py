@@ -1,5 +1,17 @@
 """Scepsy facade: trace -> aggregate -> profile -> pipeline -> schedule ->
-place (paper Fig. 2 end-to-end flow)."""
+place (paper Fig. 2 end-to-end flow).
+
+Inputs are :class:`~repro.workflows.runtime.Workflow` programs plus a
+:class:`repro.hw.ClusterSpec` and arrival-rate targets; outputs are
+deployment objects bundling the chosen allocation, its concrete
+placement and (optionally) QoS contexts and an online re-plan
+controller.  :func:`deploy` serves one workflow; :func:`deploy_multi`
+serves a fleet — partitioned (disjoint chips, co-placed in one pass
+over the real topology via :func:`~repro.core.placement.place_fleet`),
+pooled (LLMs are tenants, workflows hold routing tables into a shared
+replica set — ROADMAP "Cross-workflow LLM sharing"), or auto
+(whichever wins on welfare).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -98,11 +110,15 @@ def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
 class ScepsyFleetDeployment:
     """N workflows sharing one cluster.
 
-    Partitioned mode: each per-workflow placement is *slice-local* (chip
-    ids numbered from 0 within that workflow's sub-cluster) and
-    ``chip_offsets`` maps a workflow to the start of its
-    (hb-domain-aligned, disjoint) slice of the physical cluster;
-    :meth:`global_instances` applies them.
+    Partitioned mode: the fleet is co-placed in ONE pass over the real
+    topology (:func:`~repro.core.placement.place_fleet`) —
+    ``fleet_placement`` holds the global ``workflow/llm``-keyed
+    placement (the replan ladder's migration-diff incumbent) and each
+    per-workflow ``deployments[name].placement`` is its view of that
+    placement with chip ids already GLOBAL.  Chip ownership is
+    exclusive per workflow but slices are neither contiguous nor
+    hb-domain-aligned; ``chip_offsets`` is kept for API compatibility
+    and is all zeros.
 
     Pooled mode: LLMs are tenants — the shared replica set gets ONE
     physical placement (``tenant_placement``, chip ids already global)
@@ -117,6 +133,8 @@ class ScepsyFleetDeployment:
     spec: Optional[hw.ClusterSpec] = None
     chip_offsets: Dict[str, int] = None
     mode: str = "partitioned"
+    # partitioned mode: the global workflow/llm-keyed co-placement
+    fleet_placement: Optional[Placement] = None
     tenant_placement: Optional[Placement] = None
     routing: Optional[Dict[str, Dict[str, Dict[str, float]]]] = None
     # online drift handling (deploy_multi(..., online=True)): a
@@ -134,6 +152,8 @@ class ScepsyFleetDeployment:
             return list(self.tenant_placement.instances)
         out = []
         for name, dep in self.deployments.items():
+            # co-placed views already hold global chip ids (offset 0);
+            # the translation is kept for placements built externally
             off = self.chip_offsets[name]
             for inst in dep.placement.instances:
                 chips = [c + off for c in inst.chips]
@@ -168,12 +188,14 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
     :func:`schedule_multi` (``mode`` selects partitioned slices vs the
     pooled multi-tenant allocation vs auto), and emit placements.
 
-    Partitioned placements are slice-local (see
-    :class:`ScepsyFleetDeployment`); the returned ``chip_offsets`` give
-    each workflow a disjoint, hb-domain-aligned range of physical chips
-    so TP groups never span a domain boundary after translation.  In
-    pooled mode the tenants' shared replica set is placed once over the
-    whole cluster and each workflow gets a routing table into it.
+    A partitioned fleet is co-placed in one pass over the real topology
+    (:func:`~repro.core.placement.place_fleet`): chips stay exclusive
+    per workflow but slices are neither contiguous nor hb-domain-
+    aligned, so tail chips and odd-sized leftovers are usable; pass a
+    ``scheduler_config`` with ``placement_aware=True`` to also feed
+    placement feasibility and fragmentation back into the split search.
+    In pooled mode the tenants' shared replica set is placed once over
+    the whole cluster and each workflow gets a routing table into it.
 
     ``welfare`` overrides ``scheduler_config.welfare`` (egalitarian /
     weighted / proportional).
@@ -195,9 +217,7 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
     """
     import dataclasses as dc
 
-    from repro.core.placement import (fleet_offsets, merge_fleet,
-                                      tenant_routing)
-    from repro.core.scheduler import _subcluster
+    from repro.core.placement import place_fleet, split_fleet, tenant_routing
 
     cfg = scheduler_config or SchedulerConfig(max_tp=spec.hb_domain_size)
     if welfare is not None:
@@ -272,24 +292,39 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
                                      controller=_controller(placement),
                                      qos=qos_by_name)
 
-    deployments = {}
-    for name, result in multi.per_workflow.items():
-        sub = _subcluster(spec, multi.chip_split[name])
-        placement = place(result.allocations, sub)
-        deployments[name] = ScepsyDeployment(
+    # a placement-aware search that found NO placeable split returns
+    # the blind winner flagged placement_ok=False: placing it below is
+    # guaranteed to fail, so surface the scheduler's diagnosis instead
+    # of a low-level per-instance packing error
+    if multi.placement_ok is False:
+        from repro.core.placement import PlacementError
+
+        raise PlacementError(
+            f"placement-aware search found no placeable split: all "
+            f"{multi.placement_rejected_splits} probed candidate(s) were "
+            f"rejected (search mode {multi.search_mode!r}; a greedy "
+            f"search only probes its welfare-driven trajectory, so an "
+            f"off-trajectory placeable split may still exist)",
+            hint="try search='enumerate' for exhaustive coverage, grant "
+                 "the fleet more chips, relax TP (max_tp), or use "
+                 "mode='auto' so a placeable pooled plan can win")
+    # true co-placement: every workflow's replicas packed in one pass
+    # over the real topology (tail chips included), chip ownership
+    # exclusive per workflow but with no contiguity or hb-domain
+    # alignment waste; the global workflow/llm-keyed placement is the
+    # controller's migration-diff incumbent
+    incumbent = place_fleet(
+        {n: r.allocations for n, r in multi.per_workflow.items()}, spec)
+    views = split_fleet(incumbent)
+    deployments = {
+        name: ScepsyDeployment(
             name, stats_by_name.get(name), pipelines[name], result,
-            placement, qos=qos_by_name.get(name))
-    # disjoint slice starts; a slice start is hb-domain-aligned only
-    # when the slice actually contains TP groups (TP instances must not
-    # cross a domain boundary after translation — TP=1 slices can start
-    # anywhere, which matters now that odd-sized splits are schedulable)
-    per_wf_placements = {n: d.placement for n, d in deployments.items()}
-    offsets = fleet_offsets(per_wf_placements, multi.chip_split, spec)
-    # the merged global placement is the controller's migration-diff
-    # incumbent, so partitioned re-plans emit a MigrationDiff too
-    incumbent = merge_fleet(per_wf_placements, offsets, spec)
+            views[name], qos=qos_by_name.get(name))
+        for name, result in multi.per_workflow.items()
+    }
     return ScepsyFleetDeployment(deployments, multi.chip_split,
                                  multi.welfare, multi, spec=spec,
-                                 chip_offsets=offsets,
+                                 chip_offsets={n: 0 for n in deployments},
+                                 fleet_placement=incumbent,
                                  controller=_controller(incumbent),
                                  qos=qos_by_name)

@@ -14,6 +14,22 @@ Pruning (paper's three strategies + one exploited symmetry):
   (iv)  separability: eq. (1) is a sum and eq. (2) a min over per-LLM
         terms, so for a fixed unit split the best (TP, replicas) choice
         decomposes per LLM — no cross-product over parallelism configs.
+
+Fleet scheduling (:func:`schedule_multi`, post-paper): N workflows share
+one cluster under partitioned / pooled / auto allocation modes with
+egalitarian, weighted or proportional welfare; the partitioned split
+search can close the loop with the placement layer
+(``SchedulerConfig.placement_aware``): every candidate split is probed
+through :func:`repro.core.placement.fleet_feasibility` — unplaceable
+splits are rejected outright and placeable ones pay a
+``fragmentation_weight``-scaled penalty, so the winning split is one
+that actually deploys on the real host/ICI-domain topology (ROADMAP
+"Placement-aware partitioned splits").
+
+Inputs: :class:`AggregateLLMPipeline` predictors + a
+:class:`repro.hw.ClusterSpec` + arrival-rate targets; outputs:
+:class:`ScheduleResult` / :class:`MultiScheduleResult` allocation plans
+consumed by :mod:`repro.core.placement` and :mod:`repro.core.scepsy`.
 """
 from __future__ import annotations
 
@@ -24,6 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro import hw
 from repro.configs.base import ArchConfig
+from repro.core import placement as _pl
 from repro.core.pipeline import (AggregateLLMPipeline,
                                  Allocation,
                                  Prediction,
@@ -54,6 +71,15 @@ class SchedulerConfig:
     # share each workflow's best_option_for table across the split
     # search's sub-schedules (neighbouring chip counts re-use it)
     warm_start: bool = True
+    # close the scheduler<->placement loop: probe every candidate
+    # partitioned split through placement.fleet_feasibility — reject
+    # splits that cannot be placed on the real topology, and break
+    # welfare ties toward less fragmented packings
+    placement_aware: bool = False
+    # soft penalty: split score = welfare - weight * fragmentation
+    # (fragmentation in [0, 1] = stranded fraction of free units); keep
+    # small so it only breaks near-ties, never trades real welfare away
+    fragmentation_weight: float = 0.05
 
 
 @dataclass
@@ -433,6 +459,16 @@ class MultiScheduleResult:
     pooled: Optional[PooledScheduleResult] = None
     welfare_by_mode: Dict[str, float] = field(default_factory=dict)
     warm_state: Optional[FleetWarmState] = None
+    # placement feedback (None unless config.placement_aware): did the
+    # winning plan pass the placement probe, at what fragmentation, and
+    # how many candidate splits the probe rejected as unplaceable
+    placement_ok: Optional[bool] = None
+    fragmentation: Optional[float] = None
+    placement_rejected_splits: int = 0
+    # True when a requested pooled plan existed but its shared replica
+    # set failed the placement probe, so the result degraded to a
+    # partitioned plan (distinct from "no shared LLMs")
+    pooled_unplaceable: bool = False
 
 
 def _welfare_fn(config: SchedulerConfig, names: Sequence[str]):
@@ -490,6 +526,22 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
     from the previous merged units.  The state is invalidated
     conservatively (see :meth:`FleetWarmState.sync`), so warm results are
     identical to a cold search over the same inputs.
+
+    With ``config.placement_aware`` the partitioned split search closes
+    the loop with :mod:`repro.core.placement`: every candidate split's
+    per-workflow allocations are probed through
+    :func:`~repro.core.placement.fleet_feasibility` (the exact packing a
+    deploy would run, without materializing a manifest) — unplaceable
+    splits are filtered out, and placeable ones are scored
+    ``welfare - fragmentation_weight * fragmentation``.  The pooled
+    search probes its shared replica set over the whole cluster the same
+    way.  The winner's ``placement_ok`` / ``fragmentation`` /
+    ``placement_rejected_splits`` fields report what the probe saw; if
+    NO split is placeable the placement-blind winner is returned with
+    ``placement_ok=False``.  ``mode="pooled"`` with an unplaceable
+    shared replica set degrades to the partitioned result flagged
+    ``pooled_unplaceable=True``; ``mode="auto"`` prefers a placeable
+    pooled plan over an unplaceable partitioned fallback.
     """
     t0 = time.perf_counter()
     names = list(pipelines)
@@ -594,18 +646,41 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
             utils = {n: utility(n, per[n]) for n in names}
             return welfare_of(utils), utils, per
 
-        best: Optional[Tuple[float, Dict[str, float],
-                             Dict[str, ScheduleResult],
-                             Dict[str, int]]] = None
+        # best entries: (score_key, welfare, utils, per, split, frag);
+        # score_key folds in the fragmentation penalty when the search
+        # is placement-aware.  best_blind ignores the placement probe —
+        # it is the fallback when NO candidate split is placeable, so a
+        # pathological cluster still yields a plan (placement_ok=False)
+        best: Optional[Tuple] = None
+        best_blind: Optional[Tuple] = None
+        rejected = {"n": 0}
 
         def consider(split: Dict[str, int]) -> None:
-            nonlocal best
+            nonlocal best, best_blind
             s = score(split)
             if s is None:
                 return
             welfare, utils, per = s
-            if best is None or welfare > best[0]:
-                best = (welfare, utils, per, dict(split))
+            if config.placement_aware and (best_blind is None
+                                           or welfare > best_blind[1]):
+                best_blind = (welfare, welfare, utils, per, dict(split), None)
+            frag = None
+            key = welfare
+            if config.placement_aware:
+                # fragmentation >= 0 means key <= welfare: a split whose
+                # raw welfare cannot beat the incumbent key can never
+                # win, so skip its (full greedy packing) probe
+                if best is not None and welfare <= best[0]:
+                    return
+                probe = _pl.fleet_feasibility(
+                    {n: per[n].allocations for n in names}, spec)
+                if not probe.ok:
+                    rejected["n"] += 1
+                    return
+                frag = probe.fragmentation
+                key = welfare - config.fragmentation_weight * frag
+            if best is None or key > best[0]:
+                best = (key, welfare, utils, per, dict(split), frag)
 
         # the previous plan's split is the incumbent: evaluated first so
         # greedy refinement and cache-driven re-plans start from it
@@ -629,9 +704,18 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
                                         lam_targets, refs, sched, utility,
                                         welfare_of):
                 consider(split)
+        placement_ok: Optional[bool] = None
+        if best is None and best_blind is not None and config.placement_aware:
+            # every scoreable split failed the probe: fall back to the
+            # placement-blind winner so the caller still gets a plan,
+            # flagged unplaceable
+            best = best_blind
+            placement_ok = False
+        elif best is not None and config.placement_aware:
+            placement_ok = True
         if best is None:
             raise RuntimeError("no feasible multi-workflow split")
-        welfare, utils, per_wf, split = best
+        _, welfare, utils, per_wf, split, frag = best
         ws.last_split = dict(split)
         ws.last_units = {n: dict(per_wf[n].units) for n in names}
         return MultiScheduleResult(per_wf, split, welfare,
@@ -641,7 +725,14 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
                                    schedule_calls=stats["schedule_calls"],
                                    search_mode=smode,
                                    alloc_mode="partitioned",
-                                   warm_state=ws)
+                                   warm_state=ws,
+                                   placement_ok=placement_ok,
+                                   fragmentation=frag,
+                                   placement_rejected_splits=rejected["n"])
+
+    # set by pooled_search when a pooled plan existed but its shared
+    # replica set failed the placement probe (vs. "no shared LLMs")
+    pooled_degraded = {"unplaceable": False}
 
     def pooled_search() -> Optional[MultiScheduleResult]:
         merged = merge_pipelines(pipelines, lam_targets)
@@ -656,6 +747,19 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
             return None
         stats["schedule_calls"] += 1
         ws.merged_units = dict(res.units)
+        pooled_ok: Optional[bool] = None
+        pooled_frag: Optional[float] = None
+        if config.placement_aware:
+            # the shared replica set is placed once over the whole
+            # cluster; probe it the same way the split search probes
+            # per-split slices
+            probe = _pl.feasibility(res.allocations, spec)
+            if not probe.ok:
+                # unplaceable pool: partitioned path decides, but the
+                # degradation is flagged on the returned result
+                pooled_degraded["unplaceable"] = True
+                return None
+            pooled_ok, pooled_frag = True, probe.fragmentation
         preds = merged.attribute(res.allocations, config.percentile)
         utils = {n: utility_of(n, preds[n]) for n in names}
         welfare = welfare_of(utils)
@@ -696,23 +800,36 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
             evaluated_splits=stats["evaluated_splits"],
             schedule_calls=stats["schedule_calls"],
             search_mode="pooled", alloc_mode="pooled", pooled=pooled,
-            warm_state=ws)
+            warm_state=ws, placement_ok=pooled_ok,
+            fragmentation=pooled_frag)
 
     if mode == "partitioned":
         return partitioned_search()
     if mode == "pooled":
         pooled = pooled_search()
-        if pooled is None:  # no shared LLMs: exact partitioned parity
-            return partitioned_search()
+        if pooled is None:
+            # no shared LLMs (exact partitioned parity) OR an
+            # unplaceable shared replica set — the latter is flagged so
+            # explicit pooled-mode callers can tell the difference
+            part = partitioned_search()
+            part.pooled_unplaceable = pooled_degraded["unplaceable"]
+            return part
         return pooled
-    # auto: evaluate both, keep the better welfare (ties -> partitioned)
+    # auto: evaluate both, keep the better welfare (ties -> partitioned).
+    # A placement-aware partitioned result flagged placement_ok=False is
+    # the blind fallback — it cannot deploy, so a placeable pooled plan
+    # beats it regardless of welfare.
     part = partitioned_search()
     pooled = pooled_search()
     by_mode = {"partitioned": part.welfare}
     if pooled is not None:
         by_mode["pooled"] = pooled.welfare
-    winner = (pooled if pooled is not None and pooled.welfare > part.welfare
+    part_unplaceable = config.placement_aware and part.placement_ok is False
+    winner = (pooled if pooled is not None
+              and (pooled.welfare > part.welfare or part_unplaceable)
               else part)
+    winner.pooled_unplaceable = (winner is part
+                                 and pooled_degraded["unplaceable"])
     winner.welfare_by_mode = by_mode
     winner.search_time_s = time.perf_counter() - t0
     return winner

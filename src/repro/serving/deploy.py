@@ -40,6 +40,40 @@ def routers_from_allocations(wf: Workflow, allocations: Dict[str, Allocation],
     return routers
 
 
+def fleet_routers_from_placement(
+        wfs: Dict[str, "Workflow"], placement,
+        loop: EventLoop, *, prefix_caching: bool = True,
+        avg_context: int = 1024,
+        discipline: str = "fifo") -> Dict[str, Dict[str, Router]]:
+    """Per-workflow routers over a co-placed partitioned fleet.
+
+    ``placement`` is a global ``workflow/llm``-keyed
+    :class:`~repro.core.placement.Placement` (from
+    :func:`~repro.core.placement.place_fleet` or a fleet deployment's
+    ``fleet_placement``): one :class:`EngineSim` is built per placed
+    instance with the instance's own TP degree and chip fraction, so
+    the simulated replica set is exactly what the placement says is on
+    the cluster.  Returned dict is keyed workflow -> local llm name ->
+    Router, directly usable as a ClusterDriver's ``routers``.
+    """
+    F = placement.spec.fractions_per_chip
+    groups: Dict[Tuple[str, str], List[EngineSim]] = {}
+    for inst in placement.instances:
+        wf_name, _, llm = inst.llm.partition("/")
+        cfg = wfs[wf_name].llms[llm]
+        groups.setdefault((wf_name, llm), []).append(
+            EngineSim(cfg, loop, tp=inst.tp,
+                      fraction=inst.units_per_chip / F,
+                      name=f"{inst.llm}-r{inst.replica}",
+                      prefix_caching=prefix_caching,
+                      avg_context=avg_context,
+                      policy=make_policy(discipline)))
+    out: Dict[str, Dict[str, Router]] = {}
+    for (wf_name, llm), engines in groups.items():
+        out.setdefault(wf_name, {})[llm] = Router(engines)
+    return out
+
+
 def wfq_replica_weights(members: Dict[str, List[Tuple[str, str]]],
                         routing: Dict[str, Dict[str, Dict[int, float]]]
                         ) -> Dict[str, Dict[int, Dict[str, float]]]:

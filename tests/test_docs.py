@@ -1,0 +1,48 @@
+"""Docs stay honest: the markdown link/reference checker runs in tier-1.
+
+Mirrors the CI ``docs`` job (``tools/check_docs.py``): every relative
+link in README.md, docs/ and benchmarks/README.md must resolve, and
+every backtick reference to a ``repro.*`` module or a ``*.py`` file
+must name something that exists in the repo.
+"""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    sys.path.insert(0, str(REPO / "tools"))
+    try:
+        import check_docs
+    finally:
+        sys.path.pop(0)
+    return check_docs
+
+
+def test_docs_links_and_references_resolve(capsys):
+    check_docs = _checker()
+    rc = check_docs.main([])
+    out = capsys.readouterr().out
+    assert rc == 0, f"docs check failed:\n{out}"
+
+
+def test_checker_catches_broken_link(tmp_path, monkeypatch):
+    check_docs = _checker()
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](no/such/file.md) and `repro.no.such`\n")
+    monkeypatch.setattr(check_docs, "REPO", tmp_path)
+    errors = check_docs.check_file(bad)
+    assert any("broken link" in e for e in errors)
+    assert any("nonexistent module" in e for e in errors)
+
+
+def test_checker_catches_submodule_typo_of_real_package():
+    check_docs = _checker()
+    # an existing package prefix must not excuse a misspelled submodule
+    assert not check_docs.module_exists("repro.core.plcement")
+    assert not check_docs.module_exists("repro.qos.nonexistent")
+    # but packages themselves and attribute tails of module files resolve
+    assert check_docs.module_exists("repro.core")
+    assert check_docs.module_exists("repro.core.placement.place_fleet")
+    assert check_docs.module_exists("repro.qos.slo.RequestQoS.slack")

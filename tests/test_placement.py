@@ -1,0 +1,341 @@
+"""Topology-aware placement: co-placement, feasibility probe, errors.
+
+Covers the scheduler<->placement loop added with the placement-aware
+split search (ROADMAP "Placement-aware partitioned splits"): the
+hierarchical packing's invariants (exclusive chip ownership, TP groups
+inside one hb domain, tail chips usable), the fragmentation metric
+(property: 0 for any exactly-tiling placement), probe/deploy agreement
+(``fleet_feasibility`` says ok iff ``place_fleet`` succeeds), the
+structured :class:`PlacementError` diagnostics, and the placement-aware
+``schedule_multi`` rejecting unplaceable splits a blind search picks.
+"""
+import math
+
+import pytest
+
+from repro import hw
+from repro.core import placement as pl
+from repro.core.pipeline import Allocation
+from repro.core.placement import (FeasibilityResult, Placement,
+                                  PlacedInstance, PlacementError,
+                                  feasibility, fleet_feasibility, place,
+                                  place_fleet, split_fleet)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SPEC8 = hw.ClusterSpec(num_hosts=2, chips_per_host=4, hb_domain_size=2)
+
+
+# ---------------------------------------------------------------------------
+# fragmentation: 0 for exactly-tiling placements
+# ---------------------------------------------------------------------------
+
+
+def _tiling_placement(spec: hw.ClusterSpec, per_chip_units) -> Placement:
+    """A synthetic placement where every chip is either untouched or
+    exactly tiled by sub-chip instances summing to F."""
+    placement = Placement(spec)
+    for chip, parts in per_chip_units.items():
+        assert sum(parts) == spec.fractions_per_chip
+        for k, u in enumerate(parts):
+            placement.instances.append(PlacedInstance(
+                llm=f"m{chip}", replica=k, tp=1, chips=[chip],
+                units_per_chip=u, host=chip // spec.chips_per_host,
+                domain=chip // spec.hb_domain_size))
+    return placement
+
+
+def test_fragmentation_zero_when_exactly_tiled():
+    spec = SPEC8
+    placement = _tiling_placement(spec, {0: [10], 3: [4, 6], 5: [2, 2, 6]})
+    placement.validate()
+    assert placement.fragmentation() == 0.0
+
+
+def test_fragmentation_positive_on_partial_chip():
+    placement = _tiling_placement(SPEC8, {0: [10]})
+    placement.instances.append(PlacedInstance(
+        llm="p", replica=0, tp=1, chips=[1], units_per_chip=3,
+        host=0, domain=0))
+    assert placement.fragmentation() > 0.0
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def tilings(draw):
+        spec = hw.ClusterSpec(
+            num_hosts=draw(st.integers(1, 3)),
+            chips_per_host=draw(st.sampled_from([2, 4])),
+            hb_domain_size=2,
+            tail_chips=draw(st.integers(0, 2)))
+        F = spec.fractions_per_chip
+        per_chip = {}
+        for chip in draw(st.sets(st.integers(0, spec.num_chips - 1))):
+            parts, left = [], F
+            while left > 0:
+                u = draw(st.integers(1, left))
+                parts.append(u)
+                left -= u
+            per_chip[chip] = parts
+        return spec, per_chip
+
+    @settings(max_examples=40, deadline=None)
+    @given(tilings())
+    def test_property_tiling_has_zero_fragmentation(tiling):
+        spec, per_chip = tiling
+        placement = _tiling_placement(spec, per_chip)
+        placement.validate()
+        assert placement.fragmentation() == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 4), st.sampled_from([1, 2, 5, 10]))
+    def test_property_packed_fractions_tile_exactly(hosts, units):
+        # F/units replicas per chip, every chip filled: the greedy pack
+        # must reach an exactly-tiling (fragmentation 0) placement
+        spec = hw.ClusterSpec(num_hosts=hosts, chips_per_host=2,
+                              hb_domain_size=2)
+        F = spec.fractions_per_chip
+        n = spec.num_chips * (F // units)
+        placement = place(
+            {"m": Allocation(replicas=n, tp=1, fraction=units / F)}, spec)
+        assert placement.fragmentation() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# co-placement: ownership, keys, tail chips
+# ---------------------------------------------------------------------------
+
+
+def test_place_fleet_keys_and_disjoint_ownership():
+    fleet = {
+        "alpha": {"agent": Allocation(replicas=1, tp=2, fraction=1.0),
+                  "summ": Allocation(replicas=2, tp=1, fraction=0.4)},
+        "beta": {"judge": Allocation(replicas=1, tp=2, fraction=1.0),
+                 "debater": Allocation(replicas=3, tp=1, fraction=0.3)},
+    }
+    placement = place_fleet(fleet, SPEC8)
+    placement.validate()
+    assert all("/" in inst.llm for inst in placement.instances)
+    chips = {"alpha": set(), "beta": set()}
+    for inst in placement.instances:
+        chips[inst.llm.split("/")[0]].update(inst.chips)
+    assert not chips["alpha"] & chips["beta"]
+    # per-workflow views keep global chip ids and local llm names
+    views = split_fleet(placement)
+    assert set(views) == {"alpha", "beta"}
+    assert {i.llm for i in views["alpha"].instances} == {"agent", "summ"}
+    assert {c for i in views["alpha"].instances
+            for c in i.chips} == chips["alpha"]
+
+
+def test_view_fragmentation_uses_touched_scope():
+    # a split_fleet view keeps the full-cluster spec: cluster-scope
+    # fragmentation would count other workflows' chips as free capacity,
+    # scope="touched" restricts to the workflow's own footprint
+    fleet = {
+        "a": {"m": Allocation(replicas=1, tp=1, fraction=0.3)},
+        "b": {"m": Allocation(replicas=6, tp=1, fraction=1.0)},
+    }
+    placement = place_fleet(fleet, SPEC8)
+    view_a = split_fleet(placement)["a"]
+    # a's single 3-unit replica strands 7 units on its one chip
+    assert view_a.fragmentation(scope="touched") == 1.0
+    # cluster scope dilutes it with the untouched free chip
+    assert view_a.fragmentation() < 1.0
+    with pytest.raises(ValueError):
+        view_a.fragmentation(scope="bogus")
+
+
+def test_tail_chips_survive_co_placement():
+    # 2 full hosts of 4 + one tail chip = 9 chips; the fleet needs all 9
+    spec = hw.ClusterSpec(num_hosts=2, chips_per_host=4,
+                          hb_domain_size=2, tail_chips=1)
+    fleet = {
+        "a": {"m": Allocation(replicas=5, tp=1, fraction=1.0)},
+        "b": {"m": Allocation(replicas=4, tp=1, fraction=1.0)},
+    }
+    placement = place_fleet(fleet, spec)
+    placement.validate()
+    used = {c for i in placement.instances for c in i.chips}
+    assert used == set(range(9)), "tail chip must be placeable"
+
+
+def test_tail_chip_never_hosts_tp_group():
+    spec = hw.ClusterSpec(num_hosts=1, chips_per_host=4,
+                          hb_domain_size=2, tail_chips=1)
+    fleet = {
+        "a": {"m": Allocation(replicas=2, tp=2, fraction=1.0)},
+        "b": {"m": Allocation(replicas=1, tp=1, fraction=0.5)},
+    }
+    placement = place_fleet(fleet, spec)
+    placement.validate()  # would raise if a TP group spanned into chip 4
+    for inst in placement.instances:
+        if inst.tp > 1:
+            assert 4 not in inst.chips
+
+
+# ---------------------------------------------------------------------------
+# probe <-> deploy agreement
+# ---------------------------------------------------------------------------
+
+
+def test_probe_matches_place_fleet_on_success():
+    fleet = {
+        "a": {"m": Allocation(replicas=2, tp=2, fraction=1.0)},
+        "b": {"m": Allocation(replicas=4, tp=1, fraction=0.5)},
+    }
+    probe = fleet_feasibility(fleet, SPEC8)
+    assert isinstance(probe, FeasibilityResult)
+    ok, frag = probe  # iterable as (ok, fragmentation_cost)
+    assert ok and probe.ok
+    placement = place_fleet(fleet, SPEC8)
+    assert math.isclose(frag, placement.fragmentation())
+
+
+def test_probe_matches_place_fleet_on_failure():
+    # 18 units on a 2-chip cluster passes unit accounting but each chip
+    # holds only one 6-unit replica: unplaceable, and the probe says so
+    spec = hw.ClusterSpec(num_hosts=1, chips_per_host=2, hb_domain_size=2)
+    fleet = {"a": {"m": Allocation(replicas=3, tp=1, fraction=0.6)}}
+    probe = fleet_feasibility(fleet, spec)
+    assert not probe.ok
+    assert probe.failed_shape["units_per_chip"] == 6
+    with pytest.raises(PlacementError):
+        place_fleet(fleet, spec)
+    # single-group probe agrees
+    assert not feasibility(fleet["a"], spec).ok
+
+
+def test_placement_error_is_structured():
+    spec = hw.ClusterSpec(num_hosts=1, chips_per_host=4, hb_domain_size=2)
+    with pytest.raises(PlacementError) as ei:
+        place({"m": Allocation(replicas=5, tp=2, fraction=1.0)}, spec)
+    err = ei.value
+    assert err.shape["tp"] == 2 and err.shape["units_per_chip"] == 10
+    assert set(err.domain_capacity) == {0, 1}
+    for cap in err.domain_capacity.values():
+        assert {"host", "free_chips", "free_units",
+                "largest_chip_free_units"} <= set(cap)
+    assert "hint" in str(err) and err.hint
+
+
+# ---------------------------------------------------------------------------
+# placement-aware split search
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tight_fleet_pipelines():
+    from repro.core.scepsy import build_pipeline
+    from repro.workflows.registry import get_workflow
+
+    pipes = {}
+    for name in ("react_agent", "debate"):
+        pipes[name], _, _ = build_pipeline(
+            get_workflow(name), n_trace_requests=6, tp_degrees=(1, 2),
+            max_profile_groups=4, seed=0)
+    return pipes
+
+
+def test_placement_aware_search_rejects_unplaceable_splits(
+        tight_fleet_pipelines):
+    import dataclasses as dc
+
+    from repro.core.scheduler import SchedulerConfig, schedule_multi
+
+    spec = hw.ClusterSpec(num_hosts=1, chips_per_host=4,
+                          hb_domain_size=2, tail_chips=1)
+    lams = {"react_agent": 1.0, "debate": 1.2}
+    cfg = SchedulerConfig(max_tp=2, welfare="weighted")
+
+    blind = schedule_multi(tight_fleet_pipelines, spec, lams, cfg,
+                           mode="partitioned")
+    aware = schedule_multi(tight_fleet_pipelines, spec, lams,
+                           dc.replace(cfg, placement_aware=True),
+                           mode="partitioned")
+
+    aware_probe = fleet_feasibility(
+        {n: aware.per_workflow[n].allocations for n in lams}, spec)
+    assert aware.placement_ok is True
+    assert aware_probe.ok
+    assert aware.fragmentation == pytest.approx(aware_probe.fragmentation)
+    # blind search has no placement fields
+    assert blind.placement_ok is None and blind.fragmentation is None
+    blind_probe = fleet_feasibility(
+        {n: blind.per_workflow[n].allocations for n in lams}, spec)
+    if blind_probe.ok:
+        # placement did not bind here: the aware search must then agree
+        assert aware.welfare == pytest.approx(blind.welfare, rel=1e-6)
+    else:
+        assert aware.placement_rejected_splits >= 1
+
+
+def test_deploy_multi_partitioned_coplacement(tight_fleet_pipelines):
+    from repro.core.scepsy import deploy_multi
+    from repro.core.scheduler import SchedulerConfig
+    from repro.workflows.registry import get_workflow
+
+    spec = hw.ClusterSpec(num_hosts=1, chips_per_host=4,
+                          hb_domain_size=2, tail_chips=1)
+    lams = {"react_agent": 1.0, "debate": 1.2}
+    wfs = [get_workflow(n) for n in lams]
+    dep = deploy_multi(
+        wfs, spec, lams,
+        scheduler_config=SchedulerConfig(max_tp=2, welfare="weighted",
+                                         placement_aware=True),
+        pipelines=dict(tight_fleet_pipelines), mode="partitioned")
+    assert dep.fleet_placement is not None
+    dep.fleet_placement.validate()
+    assert dep.chip_offsets == {n: 0 for n in lams}
+    # per-workflow views are global-coordinate and disjoint
+    seen = {}
+    for name, d in dep.deployments.items():
+        d.placement.validate()
+        for inst in d.placement.instances:
+            for c in inst.chips:
+                assert 0 <= c < spec.num_chips
+                assert seen.setdefault(c, name) == name
+    # the global placement is keyed workflow/llm for migration diffs
+    assert all("/" in i.llm for i in dep.fleet_placement.instances)
+
+
+def test_fleet_routers_from_placement():
+    from repro.serving.deploy import fleet_routers_from_placement
+    from repro.serving.simulator import EventLoop
+    from repro.workflows.registry import get_workflow
+
+    wfs = {n: get_workflow(n) for n in ("react_agent", "debate")}
+    fleet = {
+        "react_agent": {"agent": Allocation(replicas=1, tp=2, fraction=1.0),
+                        "summ": Allocation(replicas=2, tp=1, fraction=0.4)},
+        "debate": {"debater": Allocation(replicas=2, tp=1, fraction=1.0),
+                   "judge": Allocation(replicas=1, tp=1, fraction=0.5)},
+    }
+    placement = place_fleet(fleet, SPEC8)
+    routers = fleet_routers_from_placement(wfs, placement, EventLoop())
+    assert set(routers) == set(fleet)
+    for wf_name, by_llm in routers.items():
+        for llm, router in by_llm.items():
+            alloc = fleet[wf_name][llm]
+            assert len(router.replicas) == alloc.replicas
+            for eng in router.replicas:
+                assert eng.tp == alloc.tp
+
+
+def test_legacy_contiguous_model_kept():
+    # fleet_offsets/merge_fleet stay importable as the blind baseline
+    sub = hw.ClusterSpec(num_hosts=1, chips_per_host=2)
+    placements = {
+        "a": place({"m": Allocation(replicas=2, tp=1, fraction=1.0)}, sub),
+        "b": place({"m": Allocation(replicas=2, tp=1, fraction=1.0)}, sub),
+    }
+    offsets = pl.fleet_offsets(placements, ["a", "b"], SPEC8)
+    merged = pl.merge_fleet(placements, offsets, SPEC8)
+    assert {i.llm for i in merged.instances} == {"a/m", "b/m"}
+    merged.validate()

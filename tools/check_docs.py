@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Documentation consistency checker (CI ``docs`` job).
+
+Scans the repo's user-facing markdown — ``README.md``, everything under
+``docs/`` and ``benchmarks/README.md`` — and fails on:
+
+* relative markdown links ``[text](path)`` whose target file does not
+  exist (http(s)/mailto links and pure ``#anchors`` are skipped;
+  relative targets are resolved against the linking file's directory,
+  then against the repo root);
+* backtick references to nonexistent code: `` `repro.foo.bar` `` dotted
+  module paths that resolve to no module under ``src/`` (attribute
+  tails like ``repro.core.placement.place_fleet`` are fine — the
+  longest importable prefix is what must exist), and `` `*.py` `` file
+  mentions (``benchmarks/bench_placement.py`` or a bare
+  ``bench_placement.py``) naming files that exist nowhere in the repo.
+
+Usage::
+
+    python tools/check_docs.py [file-or-dir ...]
+
+Exit code 0 = clean, 1 = problems (each printed as ``FAIL path: ...``).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_TARGETS = ["README.md", "docs", "benchmarks/README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`]+)`")
+MODULE_RE = re.compile(r"^(repro|benchmarks|tools)(\.[A-Za-z_][A-Za-z0-9_]*)+$")
+PYFILE_RE = re.compile(r"^[\w./-]+\.py$")
+
+
+def md_files(targets) -> list:
+    out = []
+    for t in targets:
+        p = REPO / t
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            out.append(p)
+        else:
+            print(f"FAIL {t}: target does not exist")
+            out.append(None)
+    return out
+
+
+def strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks: shell snippets legitimately mention
+    paths that only exist at runtime (report_*.json etc.)."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def module_exists(dotted: str) -> bool:
+    """A dotted reference resolves iff its longest existing prefix is a
+    module *file* (the rest is then an attribute tail, e.g.
+    ``repro.core.placement.place_fleet``) or the FULL path is a
+    package/module.  A prefix that is merely a package does NOT excuse
+    a nonexistent next segment — ``repro.core.plcement`` (typo) must
+    fail even though ``repro.core`` exists.  ``repro.*`` is rooted at
+    src/, ``benchmarks.*``/``tools.*`` at the repo root."""
+    parts = dotted.split(".")
+    roots = {"repro": REPO / "src", "benchmarks": REPO, "tools": REPO}
+    base = roots[parts[0]]
+    for k in range(len(parts), 1, -1):
+        head = base / Path(*parts[:k])
+        if head.with_suffix(".py").exists():
+            return True  # module file: trailing segments are attributes
+        if (head / "__init__.py").exists():
+            # a package only resolves the reference when it IS the
+            # reference; otherwise the next segment is a missing module
+            return k == len(parts)
+    return False
+
+
+def pyfile_exists(ref: str) -> bool:
+    if "/" in ref:
+        # the docs' established shorthand roots layer paths at
+        # src/repro/ (e.g. `core/trace.py`, `qos/slo.py`)
+        return any((base / ref).exists()
+                   for base in (REPO, REPO / "src", REPO / "src" / "repro"))
+    name = Path(ref).name
+    return any(REPO.glob(f"**/{name}"))
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    rel = path.relative_to(REPO)
+    text = path.read_text()
+    body = strip_code_blocks(text)
+
+    for m in LINK_RE.finditer(body):
+        target = m.group(1).split("#", 1)[0]
+        if not target or "://" in target or target.startswith("mailto:"):
+            continue
+        cand = (path.parent / target, REPO / target)
+        if not any(c.exists() for c in cand):
+            errors.append(f"{rel}: broken link -> {m.group(1)}")
+
+    for m in CODE_RE.finditer(body):
+        tok = m.group(1).strip().rstrip("()")
+        if MODULE_RE.match(tok) and not module_exists(tok):
+            errors.append(f"{rel}: reference to nonexistent module `{tok}`")
+        elif PYFILE_RE.match(tok) and not pyfile_exists(tok):
+            errors.append(f"{rel}: reference to nonexistent file `{tok}`")
+    return errors
+
+
+def main(argv) -> int:
+    targets = argv or DEFAULT_TARGETS
+    files = md_files(targets)
+    if None in files:
+        return 1
+    failures = []
+    for f in files:
+        failures.extend(check_file(f))
+    for err in failures:
+        print(f"FAIL {err}")
+    if not failures:
+        print(f"OK   {len(files)} markdown file(s) checked")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
