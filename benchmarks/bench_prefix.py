@@ -1,0 +1,358 @@
+"""Prefix-serving benchmark: measured KV reuse, affinity routing, QoS
+preemption.
+
+Three measured sections over the react_agent/debate fleet (the two
+workloads whose calls re-send a growing conversation prefix):
+
+* ``savings`` — the fleet runs twice, with prefix-affinity routing on
+  vs off (same arrivals, same replicas); the metric is prefill tokens
+  the engines actually computed.  Affinity routes a call to the replica
+  holding the longest live prefix of its prompt, so the shared prefix
+  is served from the radix cache instead of recomputed.
+* ``exactness`` — single replica per stage with the default (ample) KV
+  budget: the simulator's per-request measured cached-prefix tokens
+  must equal the driver's ground-truth shared-prefix tokens *exactly*
+  (no eviction occurs, parent chains are the only sharing).  A
+  tiny-budget variant is reported alongside to show eviction honesty
+  (measured < truth once KV is dropped).
+* ``preemption`` — a bench_qos-style overload burst on a pooled
+  replica set (react_agent = gold and debate = bronze share the
+  LLAMA-3.2-1B stage): the bronze arrival rate multiplies for a burst
+  window while gold stays planned, under priority queues, with engine
+  preemption off vs on.  Preemption lets a gold prefill bump a bronze
+  decode out of a full batch, so gold p99 must be no worse; every
+  preemption event is checked for priority inversion.
+
+``acceptance`` gates the ISSUE criteria: >= 30% prefill-token savings
+with affinity on, exact cached-prefix accounting under no eviction, gold
+p99 no worse with preemption, and no priority-inverting preemption.
+
+JSON schema is documented in benchmarks/README.md; ``--smoke`` is the
+tiny-config mode CI runs (schema-identical, small fleet/horizons).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import statistics
+from typing import Dict, List, Optional
+
+from repro.qos.policy import make_policy
+from repro.qos.slo import BRONZE, GOLD, WorkflowQoS, WorkModel
+from repro.serving.simulator import EngineSim, EventLoop, Router
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver, trace_workflow
+
+FLEET = ("react_agent", "debate")
+
+
+def _settings(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return {
+            "mode": "smoke",
+            "replicas": 3,
+            "lam": {"react_agent": 2.0, "debate": 2.5},
+            "n_requests": {"react_agent": 40, "debate": 40},
+            "exact_n": 10,
+            "burst_factor": 8.0,
+            "t_warm": 20.0,
+            "t_burst": 60.0,
+            "t_tail": 20.0,
+            "drain": 600.0,
+            "pool_replicas": 2,
+            "pool_max_batch": 8,
+        }
+    return {
+        "mode": "quick" if quick else "full",
+        "replicas": 4,
+        "lam": {"react_agent": 2.5, "debate": 3.0},
+        "n_requests": {"react_agent": 80 if quick else 200,
+                       "debate": 80 if quick else 200},
+        "exact_n": 16 if quick else 40,
+        "burst_factor": 8.0,
+        "t_warm": 30.0,
+        "t_burst": 90.0 if quick else 240.0,
+        "t_tail": 30.0,
+        "drain": 1200.0,
+        "pool_replicas": 3,
+        "pool_max_batch": 8,
+    }
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# affinity on/off prefill-token savings
+# ---------------------------------------------------------------------------
+
+
+def _private_fleet(wfs, loop: EventLoop, *, replicas: int,
+                   affinity: bool,
+                   kv_override: Optional[int] = None):
+    """Per-workflow, per-stage private replica sets (one Router each)."""
+    routers: Dict[str, Dict[str, Router]] = {}
+    engines: List[EngineSim] = []
+    for name, wf in wfs.items():
+        routers[name] = {}
+        for llm, cfg in wf.llms.items():
+            engs = [EngineSim(cfg, loop, name=f"{name}/{llm}/{r}",
+                              kv_capacity_override=kv_override)
+                    for r in range(replicas)]
+            engines.extend(engs)
+            routers[name][llm] = Router(engs, affinity=affinity)
+    return routers, engines
+
+
+def _run_fleet(wfs, s, seed: int, *, affinity: bool, replicas: int,
+               kv_override: Optional[int] = None):
+    loop = EventLoop()
+    routers, engines = _private_fleet(
+        wfs, loop, replicas=replicas, affinity=affinity,
+        kv_override=kv_override)
+    # schedule every workflow's Poisson arrivals on the shared loop,
+    # then run once (identical arrivals for the on/off comparison)
+    drivers = {}
+    for k, name in enumerate(sorted(wfs)):
+        drv = ClusterDriver(wfs[name], routers[name], loop)
+        rng = random.Random(seed * 1000 + k)
+        t = 0.0
+        for rid in range(s["n_requests"][name]):
+            loop.schedule(t, lambda rid=rid, d=drv, k=k: d.start_request(
+                rid, seed * 1000 + k))
+            t += rng.expovariate(s["lam"][name])
+        drivers[name] = drv
+    loop.run(1e7)
+    return drivers, engines
+
+
+def _savings(wfs, s, seed: int) -> dict:
+    out = {}
+    totals = {}
+    for affinity in (True, False):
+        drivers, engines = _run_fleet(wfs, s, seed, affinity=affinity,
+                                      replicas=s["replicas"])
+        key = "affinity_on" if affinity else "affinity_off"
+        per_wf = {}
+        for name, drv in drivers.items():
+            done = [r for r in drv.records if r.done >= 0]
+            per_wf[name] = {
+                "completed": len(done),
+                "mean_latency_s": statistics.mean(
+                    [r.latency for r in done]) if done else 0.0,
+            }
+        totals[key] = {
+            "prefill_tokens": sum(e.prefill_tokens for e in engines),
+            "cached_tokens": sum(e.cached_tokens for e in engines),
+        }
+        out[key] = {"per_workflow": per_wf, **totals[key]}
+    on, off = totals["affinity_on"], totals["affinity_off"]
+    saved = (1.0 - on["prefill_tokens"] / off["prefill_tokens"]
+             if off["prefill_tokens"] else 0.0)
+    out["prefill_token_savings"] = saved
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cached-prefix exactness (no eviction) + eviction honesty
+# ---------------------------------------------------------------------------
+
+
+def _exactness(wfs, s, seed: int) -> dict:
+    out = {}
+    for name, wf in wfs.items():
+        row = {}
+        for label, kv_override in (("no_eviction", None),
+                                   ("tiny_budget", 64)):
+            loop = EventLoop()
+            routers, engines = _private_fleet(
+                {name: wf}, loop, replicas=1, affinity=True,
+                kv_override=kv_override)
+            drv = ClusterDriver(wf, routers[name], loop)
+            drv.run_open_loop(s["lam"][name], s["exact_n"],
+                              seed=seed + 17, until=1e7)
+            reqs = [r for e in engines for r in e.done]
+            measured = sum(r.cached_prefix for r in reqs)
+            truth = sum(r.true_prefix for r in reqs)
+            row[label] = {
+                "requests": len(reqs),
+                "measured_cached_tokens": measured,
+                "true_shared_tokens": truth,
+                "exact": measured == truth,
+            }
+        out[name] = row
+    return out
+
+
+# ---------------------------------------------------------------------------
+# preemption under a bench_qos-style burst (pooled gold + bronze stage)
+# ---------------------------------------------------------------------------
+
+
+def _pooled_burst(wfs, s, seed: int, *, preemption: bool) -> dict:
+    """react_agent (gold) and debate (bronze) share the LLAMA-3.2-1B
+    stage (react's ``summ`` == debate's ``debater`` architecture); the
+    bronze rate multiplies during the burst window."""
+    loop = EventLoop()
+    react, debate = wfs["react_agent"], wfs["debate"]
+    shared_cfg = react.llms["summ"]  # == debate.llms["debater"]
+    shared = [EngineSim(shared_cfg, loop, name=f"pool/{r}",
+                        policy=make_policy("priority"),
+                        preemption=preemption,
+                        max_batch_override=s["pool_max_batch"])
+              for r in range(s["pool_replicas"])]
+    pool = Router(shared)
+    w = {i: 1.0 for i in range(len(shared))}
+    routers = {
+        "react_agent": {
+            "agent": Router([EngineSim(react.llms["agent"], loop,
+                                       name="react/agent/0",
+                                       policy=make_policy("priority"))]),
+            "summ": pool.view(w),
+        },
+        "debate": {
+            "debater": pool.view(w),
+            "judge": Router([EngineSim(debate.llms["judge"], loop,
+                                       name="debate/judge/0",
+                                       policy=make_policy("priority"))]),
+        },
+    }
+    # absolute SLO targets from unloaded trace latency (cheap, cached by
+    # the caller via `bases`)
+    qos = {
+        "react_agent": WorkflowQoS(
+            slo=GOLD.resolve(s["bases"]["react_agent"]),
+            work=WorkModel(per_call_s={}, total_s=0.0, serial_s=0.0)),
+        "debate": WorkflowQoS(
+            slo=BRONZE.resolve(s["bases"]["debate"]),
+            work=WorkModel(per_call_s={}, total_s=0.0, serial_s=0.0)),
+    }
+    drivers = {}
+    for k, name in enumerate(sorted(wfs)):
+        drv = ClusterDriver(wfs[name], routers[name], loop, qos=qos[name])
+        lam = s["lam"][name]
+        factor = s["burst_factor"] if name == "debate" else 1.0
+        drv.schedule_arrivals(
+            [(lam, s["t_warm"]), (lam * factor, s["t_burst"]),
+             (lam, s["t_tail"])],
+            seed=seed * 1000 + k)
+        drivers[name] = drv
+    horizon = s["t_warm"] + s["t_burst"] + s["t_tail"]
+    loop.run(horizon + s["drain"])
+
+    def metrics(drv):
+        done = [r for r in drv.records if r.done >= 0]
+        lats = [r.latency for r in done]
+        return {
+            "arrived": len(drv.records),
+            "completed": len(done),
+            "p50_latency_s": _percentile(lats, 0.50),
+            "p99_latency_s": _percentile(lats, 0.99),
+        }
+
+    log = [ev for e in shared for ev in e.preempt_log]
+    return {
+        "per_workflow": {n: metrics(d) for n, d in drivers.items()},
+        "preemptions": len(log),
+        "priority_inversions": sum(1 for pw, vw, _ in log if pw <= vw),
+    }
+
+
+def _preemption(wfs, s, seed: int) -> dict:
+    bases = {}
+    for name in FLEET:
+        store = trace_workflow(wfs[name], 6, seed=seed)
+        bases[name] = statistics.mean(
+            tr.t_end - tr.t_start for tr in store.traces)
+    s = dict(s, bases=bases)
+    off = _pooled_burst(wfs, s, seed, preemption=False)
+    on = _pooled_burst(wfs, s, seed, preemption=True)
+    return {
+        "slo_targets_s": {n: 2.0 * bases[n] for n in FLEET},
+        "preemption_off": off,
+        "preemption_on": on,
+        "gold_p99_off_s": off["per_workflow"]["react_agent"]["p99_latency_s"],
+        "gold_p99_on_s": on["per_workflow"]["react_agent"]["p99_latency_s"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    s = _settings(quick, smoke)
+    wfs = {name: get_workflow(name) for name in FLEET}
+
+    savings = _savings(wfs, s, seed)
+    exactness = _exactness(wfs, s, seed)
+    preemption = _preemption(wfs, s, seed)
+
+    acceptance = {
+        "prefill_savings_ge_30pct": savings["prefill_token_savings"] >= 0.30,
+        "cached_prefix_exact_no_eviction": all(
+            row["no_eviction"]["exact"] for row in exactness.values()),
+        "eviction_reduces_hits": all(
+            row["tiny_budget"]["measured_cached_tokens"]
+            < row["tiny_budget"]["true_shared_tokens"]
+            for row in exactness.values()),
+        "gold_p99_not_worse_with_preemption": (
+            preemption["gold_p99_on_s"]
+            <= preemption["gold_p99_off_s"] * (1.0 + 1e-9)),
+        "preemptions_never_invert_priority": (
+            preemption["preemption_off"]["priority_inversions"] == 0
+            and preemption["preemption_on"]["priority_inversions"] == 0),
+        "preemption_exercised": (
+            preemption["preemption_on"]["preemptions"] > 0),
+    }
+
+    doc = {
+        "benchmark": "prefix_serving",
+        "mode": s["mode"],
+        "seed": seed,
+        "config": {
+            "fleet": list(FLEET),
+            "replicas_per_stage": s["replicas"],
+            "lam": s["lam"],
+            "n_requests": s["n_requests"],
+            "burst_factor": s["burst_factor"],
+            "phases_s": {"warm": s["t_warm"], "burst": s["t_burst"],
+                         "tail": s["t_tail"]},
+            "pool": {"replicas": s["pool_replicas"],
+                     "max_batch": s["pool_max_batch"]},
+        },
+        "savings": savings,
+        "exactness": exactness,
+        "preemption": preemption,
+        "acceptance": acceptance,
+    }
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true", help="full-size sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (schema-identical)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for all phases")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report here")
+    args = ap.parse_args()
+    run(quick=not args.full, smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

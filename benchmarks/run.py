@@ -18,8 +18,8 @@ def main() -> None:
     from benchmarks import (bench_ablation, bench_combined, bench_drift,
                             bench_e2e, bench_kernels, bench_multi_workflow,
                             bench_multiplexing, bench_pipeline_accuracy,
-                            bench_placement, bench_qos, bench_roofline,
-                            bench_scheduler, bench_stability,
+                            bench_placement, bench_prefix, bench_qos,
+                            bench_roofline, bench_scheduler, bench_stability,
                             bench_workflow_aware)
 
     sections = [
@@ -33,6 +33,7 @@ def main() -> None:
         ("multi_workflow_fleet", bench_multi_workflow),
         ("drift_rescheduling", bench_drift),
         ("qos_scheduling", bench_qos),
+        ("prefix_serving", bench_prefix),
         ("placement_aware", bench_placement),
         ("pipeline_accuracy", bench_pipeline_accuracy),
         ("kernels", bench_kernels),

@@ -43,6 +43,13 @@ REQUIRED = {
         "summary",
         "acceptance",
     ),
+    "prefix_serving": (
+        "config",
+        "savings",
+        "exactness",
+        "preemption",
+        "acceptance",
+    ),
 }
 
 

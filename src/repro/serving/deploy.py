@@ -25,7 +25,8 @@ from repro.workflows.runtime import Workflow
 def routers_from_allocations(wf: Workflow, allocations: Dict[str, Allocation],
                              loop: EventLoop, *, prefix_caching: bool = True,
                              avg_context: int = 1024,
-                             discipline: str = "fifo") -> Dict[str, Router]:
+                             discipline: str = "fifo",
+                             preemption: bool = False) -> Dict[str, Router]:
     routers: Dict[str, Router] = {}
     for llm, alloc in allocations.items():
         cfg = wf.llms[llm]
@@ -33,7 +34,8 @@ def routers_from_allocations(wf: Workflow, allocations: Dict[str, Allocation],
             EngineSim(cfg, loop, tp=alloc.tp, fraction=alloc.fraction,
                       name=f"{llm}/{r}", prefix_caching=prefix_caching,
                       avg_context=avg_context,
-                      policy=make_policy(discipline))
+                      policy=make_policy(discipline),
+                      preemption=preemption)
             for r in range(alloc.replicas)
         ]
         routers[llm] = Router(engines)
@@ -44,7 +46,8 @@ def fleet_routers_from_placement(
         wfs: Dict[str, "Workflow"], placement,
         loop: EventLoop, *, prefix_caching: bool = True,
         avg_context: int = 1024,
-        discipline: str = "fifo") -> Dict[str, Dict[str, Router]]:
+        discipline: str = "fifo",
+        preemption: bool = False) -> Dict[str, Dict[str, Router]]:
     """Per-workflow routers over a co-placed partitioned fleet.
 
     ``placement`` is a global ``workflow/llm``-keyed
@@ -67,7 +70,8 @@ def fleet_routers_from_placement(
                       name=f"{inst.llm}-r{inst.replica}",
                       prefix_caching=prefix_caching,
                       avg_context=avg_context,
-                      policy=make_policy(discipline)))
+                      policy=make_policy(discipline),
+                      preemption=preemption))
     out: Dict[str, Dict[str, Router]] = {}
     for (wf_name, llm), engines in groups.items():
         out.setdefault(wf_name, {})[llm] = Router(engines)
@@ -99,6 +103,7 @@ def tenant_routers(allocations: Dict[str, Allocation],
                    prefix_caching: bool = True,
                    avg_context: int = 1024,
                    discipline: str = "fifo",
+                   preemption: bool = False,
                    members: Optional[Dict[str, List[Tuple[str, str]]]] = None,
                    routing: Optional[Dict[str, Dict[str, Dict[int, float]]]] = None
                    ) -> Dict[str, Router]:
@@ -119,7 +124,8 @@ def tenant_routers(allocations: Dict[str, Allocation],
                       avg_context=avg_context,
                       policy=make_policy(
                           discipline,
-                          weights=wfq_weights.get(cid, {}).get(r)))
+                          weights=wfq_weights.get(cid, {}).get(r)),
+                      preemption=preemption)
             for r in range(alloc.replicas)
         ]
         routers[cid] = Router(engines)

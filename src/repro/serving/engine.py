@@ -4,7 +4,9 @@ Slot-based continuous batching on an actual :class:`ModelBundle`:
 
   * prefill admits a waiting request into a free slot (logits for its
     last token seed decoding); exact-prefix cache reuse via
-    :class:`PrefixCache` + ``SlotKVCache.copy_prefix``;
+    :class:`PrefixCache` + :meth:`SlotKVCache.copy_prefix` — the longest
+    cached prefix of the prompt is *copied* from the slot that already
+    holds its KV and only the suffix is computed (dense-KV models);
   * decode runs one jitted step for ALL active slots with per-slot
     positions (ragged continuous batching — the (B,) position path of
     ``attention_block_decode``);
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import ModelBundle
+from repro.serving.kv_cache import SlotKVCache
 from repro.serving.prefix_cache import PrefixCache
 
 
@@ -36,18 +39,26 @@ class ServeRequest:
     generated: List[int] = field(default_factory=list)
     slot: int = -1
     done: bool = False
+    cached_tokens: int = 0  # prompt tokens served from the prefix cache
 
 
 class ServingEngine:
     def __init__(self, bundle: ModelBundle, params, *, slots: int = 8,
-                 max_len: int = 256, prefix_caching: bool = True):
+                 max_len: int = 256, prefix_caching: bool = True,
+                 min_prefix: int = 8):
         self.bundle = bundle
         self.params = params
         self.cfg = bundle.cfg
         self.slots = slots
         self.max_len = max_len
-        self.prefix_cache = PrefixCache() if prefix_caching else None
+        self.min_prefix = min_prefix
         self.cache = bundle.init_cache(slots, max_len)
+        # prefix reuse needs a positional (L, slots, KV, S, D) KV layout
+        # (dense/MoE attention); recurrent-state caches (rwkv, hymba
+        # groups) have no per-token prefix to copy.
+        self._dense_kv = self._is_dense_kv(self.cache)
+        self.prefix_cache = (PrefixCache()
+                             if prefix_caching and self._dense_kv else None)
         self.lengths = np.zeros(slots, np.int32)
         self.active: Dict[int, ServeRequest] = {}  # slot -> request
         self.waiting: List[ServeRequest] = []
@@ -57,6 +68,14 @@ class ServingEngine:
 
         self._prefill_one = jax.jit(self._prefill_fn)
         self._decode = jax.jit(self.bundle.decode_step)
+
+    def _is_dense_kv(self, cache) -> bool:
+        if not (isinstance(cache, tuple) and len(cache) == 2):
+            return False
+        k, v = cache
+        return (hasattr(k, "ndim") and hasattr(v, "ndim")
+                and k.ndim == 5 and v.ndim == 5
+                and k.shape[1] == self.slots and k.shape[3] == self.max_len)
 
     # -- model-facing helpers --
     def _prefill_fn(self, params, tokens):
@@ -85,16 +104,63 @@ class ServingEngine:
             slot = self.free_slots.pop()
             req.slot = slot
             plen = len(req.prompt)
-            logits, cache = self._prefill_one(
-                self.params, jnp.asarray(req.prompt)[None])
-            self.stats["prefill_tokens"] += plen
-            # write the prefill cache into the slot (dense-layout caches)
-            self.cache = _merge_slot(self.cache, cache, slot, plen,
-                                     self.max_len)
+            tokens = [int(t) for t in req.prompt]
+
+            matched, src = 0, None
+            if self.prefix_cache is not None:
+                matched, src = self.prefix_cache.longest_prefix(tokens)
+                matched = min(matched, plen - 1)
+                if matched < self.min_prefix:
+                    matched, src = 0, None
+            # the slot's old KV is about to be overwritten: every cache
+            # entry still pointing at it is stale from here on (the
+            # lookup above may legitimately have matched it — the bytes
+            # are still in place until we write)
+            if self.prefix_cache is not None:
+                self.prefix_cache.invalidate_slot(slot)
+
+            if src is not None:
+                first_tok = self._prefill_from_prefix(
+                    req, slot, src, matched, tokens)
+                req.cached_tokens = matched
+                self.stats["cached_tokens"] += matched
+                self.stats["prefill_tokens"] += plen - matched
+            else:
+                logits, cache = self._prefill_one(
+                    self.params, jnp.asarray(req.prompt)[None])
+                self.stats["prefill_tokens"] += plen
+                # write the prefill cache into the slot (dense layouts)
+                self.cache = _merge_slot(self.cache, cache, slot, plen,
+                                         self.max_len)
+                first_tok = int(jnp.argmax(logits[0]))
             self.lengths[slot] = plen
-            first_tok = int(jnp.argmax(logits[0]))
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert(tokens, slot)
             req.generated.append(first_tok)
             self.active[slot] = req
+
+    def _prefill_from_prefix(self, req: ServeRequest, slot: int, src: int,
+                             matched: int, tokens: List[int]) -> int:
+        """Prefix-cache hit: copy the shared KV out of ``src`` and run
+        only the suffix through the model (token-at-a-time decode on an
+        isolated batch=1 view of the slot), returning the first sampled
+        token."""
+        kv = SlotKVCache(k=self.cache[0], v=self.cache[1],
+                         lengths=self.lengths)
+        kv.copy_prefix(src, slot, matched)
+        cache = (kv.k, kv.v)
+        k1 = jax.lax.dynamic_slice_in_dim(cache[0], slot, 1, axis=1)
+        v1 = jax.lax.dynamic_slice_in_dim(cache[1], slot, 1, axis=1)
+        logits = None
+        for pos in range(matched, len(tokens)):
+            logits, (k1, v1) = self._decode(
+                self.params, (k1, v1),
+                jnp.asarray([tokens[pos]], jnp.int32),
+                jnp.asarray([pos], jnp.int32))
+        self.cache = (
+            jax.lax.dynamic_update_slice(cache[0], k1, (0, slot, 0, 0, 0)),
+            jax.lax.dynamic_update_slice(cache[1], v1, (0, slot, 0, 0, 0)))
+        return int(jnp.argmax(logits[0]))
 
     def _decode_step(self) -> List[ServeRequest]:
         if not self.active:
@@ -118,6 +184,12 @@ class ServingEngine:
                 req.done = True
                 completed.append(req)
                 del self.active[s]
+                # the slot's KV (prompt + all but the final generated
+                # token) stays valid until the slot is reused; register
+                # the full sequence for exact-prefix reuse
+                if self.prefix_cache is not None:
+                    seq = [int(t) for t in req.prompt] + req.generated[:-1]
+                    self.prefix_cache.insert(seq[:self.max_len - 1], s)
                 self.lengths[s] = 0
                 self.free_slots.append(s)
         return completed

@@ -56,18 +56,30 @@ class PagedKVCache:
 
     # -- device-side writes --
     def append(self, seq_id: int, k_new: jax.Array, v_new: jax.Array) -> None:
-        """k_new/v_new: (L, KV, T, D) — T new tokens for one sequence."""
+        """k_new/v_new: (L, KV, T, D) — T new tokens for one sequence.
+
+        Writes are batched per page: each touched page gets ONE
+        ``dynamic_update_slice`` covering its contiguous run of new
+        tokens (O(T / page_size) device dispatches, not O(T)).
+        """
         T = k_new.shape[2]
         start = self.lengths[seq_id]
         self._ensure_capacity(seq_id, start + T)
         table = self.tables[seq_id]
         ps = self.page_size
-        for t in range(T):
+        t = 0
+        while t < T:
             pos = start + t
             page = table[pos // ps]
             off = pos % ps
-            self.k = self.k.at[:, page, :, off, :].set(k_new[:, :, t, :])
-            self.v = self.v.at[:, page, :, off, :].set(v_new[:, :, t, :])
+            n = min(ps - off, T - t)
+            # (L, KV, n, D) -> (L, 1, KV, n, D) at (0, page, 0, off, 0)
+            k_chunk = k_new[:, None, :, t:t + n, :].astype(self.k.dtype)
+            v_chunk = v_new[:, None, :, t:t + n, :].astype(self.v.dtype)
+            idx = (0, page, 0, off, 0)
+            self.k = jax.lax.dynamic_update_slice(self.k, k_chunk, idx)
+            self.v = jax.lax.dynamic_update_slice(self.v, v_chunk, idx)
+            t += n
         self.lengths[seq_id] = start + T
 
     def gather_seq(self, seq_id: int) -> Tuple[jax.Array, jax.Array, int]:

@@ -2,7 +2,10 @@
 
 Maps token prefixes to (slot, length) of a sequence whose KV covers that
 prefix; the engine copies the prefix KV instead of recomputing prefill.
-Eviction is LRU over leaves.
+Eviction is LRU over leaf chains and runs in a loop until the trie is
+back under ``max_entries`` (one ``insert`` may add one node per token).
+``invalidate_slot`` prunes dead slotless chains so the trie never
+accumulates unreachable nodes.
 """
 from __future__ import annotations
 
@@ -28,15 +31,19 @@ class PrefixCache:
     def insert(self, tokens: Sequence[int], slot: int) -> None:
         self.clock += 1
         node = self.root
+        fresh = []  # nodes created by THIS insert (never evicted below)
         for t in tokens:
             if t not in node.children:
                 node.children[t] = _Node(depth=node.depth + 1)
                 self.entries += 1
+                fresh.append(node.children[t])
             node = node.children[t]
             node.stamp = self.clock
         node.slot = slot
-        if self.entries > self.max_entries:
-            self._evict()
+        protect = set(map(id, fresh))
+        while self.entries > self.max_entries:
+            if not self._evict(protect):
+                break  # only the just-inserted chain remains
 
     def longest_prefix(self, tokens: Sequence[int]) -> Tuple[int, Optional[int]]:
         """Returns (matched_length, slot) of the deepest cached ancestor."""
@@ -54,28 +61,49 @@ class PrefixCache:
         return best
 
     def invalidate_slot(self, slot: int) -> None:
-        def walk(n: _Node):
+        """Forget every entry backed by ``slot`` and prune the now-dead
+        chains: a childless node with no slot serves no lookup and would
+        otherwise live in the trie (and count against ``entries``)
+        forever."""
+
+        def walk(n: _Node) -> bool:
+            """Returns True when ``n`` is prunable after the sweep."""
             if n.slot == slot:
                 n.slot = None
-            for c in n.children.values():
-                walk(c)
+            for t in list(n.children):
+                if walk(n.children[t]):
+                    del n.children[t]
+                    self.entries -= 1
+            return not n.children and n.slot is None and n is not self.root
 
         walk(self.root)
 
-    def _evict(self) -> None:
-        # drop the oldest leaf chain
+    def _evict(self, protect=frozenset()) -> bool:
+        """Drop the oldest evictable leaf and its exclusive (childless
+        once the leaf is gone, slotless) ancestor chain.  Returns False
+        when nothing outside ``protect`` can be evicted."""
+
         def oldest_leaf(n: _Node, path):
             if not n.children:
-                return (n.stamp, path)
+                stamp = n.stamp if id(n) not in protect else float("inf")
+                return (stamp, path)
             return min((oldest_leaf(c, path + [t])
                         for t, c in n.children.items()),
                        key=lambda x: x[0])
 
-        _, path = oldest_leaf(self.root, [])
-        if not path:
-            return
-        node = self.root
-        for t in path[:-1]:
-            node = node.children[t]
-        node.children.pop(path[-1], None)
-        self.entries -= 1
+        stamp, path = oldest_leaf(self.root, [])
+        if not path or stamp == float("inf"):
+            return False
+        # walk down recording the chain, then prune from the leaf up
+        chain = [self.root]
+        for t in path:
+            chain.append(chain[-1].children[t])
+        for i in range(len(path), 0, -1):
+            node, parent = chain[i], chain[i - 1]
+            if node.children or id(node) in protect:
+                break
+            del parent.children[path[i - 1]]
+            self.entries -= 1
+            if parent.slot is not None or parent is self.root:
+                break
+        return True

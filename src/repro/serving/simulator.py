@@ -14,9 +14,18 @@ Fidelity notes (what is modeled):
     of ``decode_quantum`` tokens between scheduling points;
   * KV-capacity admission control (max concurrent sequences from HBM
     budget), queueing, and per-request latency accounting;
-  * prefix caching: a request whose parent was served by the same replica
-    skips prefill FLOPs for the shared prefix (radix-cache effect that
-    dominates beam search);
+  * prefix caching: requests carry their prompt's *segment sequence*
+    (``EngineRequest.prefix``, see :mod:`repro.serving.radix`) and each
+    replica tracks resident KV in a token-budgeted radix cache — the
+    cached-prefix discount is the *measured* shared-prefix length, and
+    evicted KV stops producing hits.  Requests without segments fall
+    back to the legacy parent-id heuristic (85% of the prompt), bounded
+    by the same KV budget via an LRU over completed requests;
+  * QoS preemption (opt-in): at an iteration boundary, a waiting request
+    of a strictly higher SLO weight may preempt a running lower-weight
+    decode when the batch is full; the victim requeues with its decoded
+    progress retained and its KV re-registered in the radix cache (so it
+    is "retained" exactly while the budget keeps it resident);
   * fractional chip shares scale compute/bandwidth linearly (static
     MPS-like partitioning); TP scales per the cost model incl. collectives;
   * model swapping (for the Aegaeon-like baseline) pays the weight reload.
@@ -26,11 +35,21 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro import hw
 from repro.configs.base import ArchConfig
 from repro.serving import costmodel as cm
+from repro.serving.radix import RadixCache, Segment
+
+
+def output_segment(req_id: int, tokens: int) -> Segment:
+    """The synthetic segment id for a request's generated output — the
+    driver and the engine must agree on it so a child call's prompt
+    segments match what the engine registered at the parent's finish."""
+    return (("o", req_id), tokens)
 
 
 class EventLoop:
@@ -59,19 +78,43 @@ class EngineRequest:
     output_tokens: int
     arrival: float
     on_complete: Optional[Callable[["EngineRequest"], None]] = None
-    parent_id: Optional[int] = None  # for prefix caching
+    parent_id: Optional[int] = None  # legacy prefix-caching heuristic
     workflow_request: Optional[int] = None
     qos: Optional[object] = None  # repro.qos.slo.RequestQoS, duck-typed
+    # token-accurate prefix model: the prompt as (segment id, length)
+    # pairs (None = legacy heuristic path)
+    prefix: Optional[Tuple[Segment, ...]] = None
+    # driver-computed ground-truth shared-prefix tokens (bench gate)
+    true_prefix: int = 0
     # filled by the engine:
     cached_prefix: int = 0
     t_start_service: float = -1.0
     t_first_token: float = -1.0
     t_done: float = -1.0
     remaining: int = 0
+    progress: int = 0       # tokens already decoded (kept across preemption)
+    preemptions: int = 0
+    pinned_seq: Optional[Tuple[Segment, ...]] = None
 
     @property
     def latency(self) -> float:
         return self.t_done - self.arrival
+
+
+def _qos_weight(req) -> float:
+    """Effective preemption weight: best-effort (no QoS, degraded, or no
+    deadline) sits at the BEST_EFFORT weight."""
+    q = getattr(req, "qos", None)
+    if q is None or q.degraded or not math.isfinite(q.deadline):
+        return 0.5
+    return q.weight
+
+
+def _can_preempt(req) -> bool:
+    """Only deadline-carrying, non-degraded requests may preempt."""
+    q = getattr(req, "qos", None)
+    return (q is not None and not q.degraded
+            and math.isfinite(q.deadline))
 
 
 class EngineSim:
@@ -81,6 +124,11 @@ class EngineSim:
     reorders admission out of the waiting queue: it is asked which
     waiting request to admit next and charged the admitted request's
     token cost.  ``policy=None`` is the built-in FIFO fast path.
+
+    ``preemption=True`` additionally lets the head-of-queue request (per
+    the discipline) preempt a strictly-lower-weight running decode when
+    the batch is full; every event is logged in ``preempt_log`` as
+    ``(preemptor_weight, victim_weight, time)``.
     """
 
     def __init__(self, cfg: ArchConfig, loop: EventLoop, *, tp: int = 1,
@@ -88,7 +136,9 @@ class EngineSim:
                  prefix_caching: bool = True, avg_context: int = 1024,
                  prefill_chunk: int = 2048, decode_quantum: int = 8,
                  max_batch_override: Optional[int] = None,
-                 policy: Optional[object] = None):
+                 policy: Optional[object] = None,
+                 preemption: bool = False,
+                 kv_capacity_override: Optional[int] = None):
         self.cfg = cfg
         self.policy = policy
         self.loop = loop
@@ -96,16 +146,33 @@ class EngineSim:
         self.fraction = fraction
         self.name = name or cfg.name
         self.prefix_caching = prefix_caching
+        self.preemption = preemption
         self.prefill_chunk = prefill_chunk
         self.decode_quantum = decode_quantum
         mb = cm.max_batch_size(cfg, avg_context, tp=tp, fraction=fraction)
         self.max_batch = max_batch_override or max(min(mb, 256), 1)
+        # modeled KV residency budget in tokens: the replica's HBM share
+        # minus weights, divided by per-token KV bytes
+        if kv_capacity_override is not None:
+            self.kv_capacity_tokens = int(kv_capacity_override)
+        else:
+            budget = tp * fraction * hw.HBM_BYTES * 0.9 - cm.model_bytes(cfg)
+            per_tok = max(cm.kv_bytes_per_seq(cfg, 1), 1.0)
+            self.kv_capacity_tokens = max(int(budget / per_tok), 1)
+        self.radix = RadixCache(self.kv_capacity_tokens)
         self.waiting: List[EngineRequest] = []
         self.running: List[EngineRequest] = []
         self.done: List[EngineRequest] = []
         self.busy = False
         self.busy_time = 0.0
-        self._served: Dict[int, None] = {}  # request ids with live KV here
+        self.prefill_tokens = 0  # prompt tokens actually computed
+        self.cached_tokens = 0   # prompt tokens served from cached KV
+        self.preempt_log: List[Tuple[float, float, float]] = []
+        # legacy parent-id prefix path: completed request ids with live
+        # KV, LRU-bounded by the same token budget (token cost = prompt
+        # + output per entry)
+        self._served: "OrderedDict[int, int]" = OrderedDict()
+        self._served_tokens = 0
         self.current_model: Optional[str] = cfg.name  # for swap modeling
         self.swap_overhead_pending = 0.0
         self.failed = False
@@ -117,14 +184,31 @@ class EngineSim:
                 + sum(r.remaining for r in self.running))
 
     def has_parent(self, parent_id: Optional[int]) -> bool:
-        return parent_id is not None and parent_id in self._served
+        if parent_id is None or parent_id not in self._served:
+            return False
+        self._served.move_to_end(parent_id)  # LRU touch
+        return True
+
+    def prefix_lookup(self, req: EngineRequest) -> int:
+        """Live cached-prefix tokens this replica would grant ``req``
+        (router probe; does not touch LRU state)."""
+        if self.failed or not self.prefix_caching:
+            return 0
+        if req.prefix is not None:
+            return min(self.radix.match(req.prefix, touch=False),
+                       max(req.prompt_tokens - 1, 0))
+        if req.parent_id is not None and req.parent_id in self._served:
+            return min(int(req.prompt_tokens * 0.85),
+                       req.prompt_tokens - 1)
+        return 0
 
     # -- submission --
     def submit(self, req: EngineRequest) -> None:
-        if self.prefix_caching and self.has_parent(req.parent_id):
-            req.cached_prefix = min(int(req.prompt_tokens * 0.85),
-                                    req.prompt_tokens - 1)
-        req.remaining = req.output_tokens
+        # estimate the discount now (queue disciplines cost by it); the
+        # engine re-measures against live KV at admission
+        req.cached_prefix = self._measure_prefix(req) \
+            if self.prefix_caching else 0
+        req.remaining = req.output_tokens - req.progress
         self.waiting.append(req)
         if not self.busy:
             self.busy = True
@@ -141,12 +225,87 @@ class EngineSim:
         orphans = self.waiting + self.running
         self.waiting, self.running = [], []
         self._served.clear()
+        self._served_tokens = 0
+        self.radix.clear()
         for r in orphans:
             r.cached_prefix = 0  # KV lost; full prefill elsewhere
+            r.progress = 0
             r.remaining = r.output_tokens
+            r.pinned_seq = None
             if resubmit is not None:
                 resubmit(r)
         return orphans
+
+    # -- prefix bookkeeping --
+    def _eff_seq(self, req: EngineRequest) -> Optional[Tuple[Segment, ...]]:
+        """The request's resident-KV sequence: prompt segments plus any
+        decoded progress retained across a preemption."""
+        if req.prefix is None:
+            return None
+        if req.progress > 0:
+            return req.prefix + (output_segment(req.req_id, req.progress),)
+        return req.prefix
+
+    def _measure_prefix(self, req: EngineRequest) -> int:
+        eff_prompt = req.prompt_tokens + req.progress
+        seq = self._eff_seq(req)
+        if seq is not None:
+            return min(self.radix.match(seq, touch=False), eff_prompt - 1)
+        if self.has_parent(req.parent_id):
+            return min(int(req.prompt_tokens * 0.85), req.prompt_tokens - 1)
+        return 0
+
+    def _on_admitted(self, req: EngineRequest) -> None:
+        seq = self._eff_seq(req)
+        if seq is not None and self.prefix_caching:
+            self.radix.insert(seq)
+            self.radix.pin(seq)
+            req.pinned_seq = seq
+
+    def _on_finished(self, req: EngineRequest) -> None:
+        if req.pinned_seq is not None:
+            self.radix.unpin(req.pinned_seq)
+            req.pinned_seq = None
+        if req.prefix is not None and self.prefix_caching:
+            self.radix.insert(
+                req.prefix + (output_segment(req.req_id, req.output_tokens),))
+        # legacy LRU registry, bounded by the same modeled KV budget
+        self._served[req.req_id] = req.prompt_tokens + req.output_tokens
+        self._served_tokens += self._served[req.req_id]
+        while self._served_tokens > self.kv_capacity_tokens \
+                and len(self._served) > 1:
+            _, cost = self._served.popitem(last=False)
+            self._served_tokens -= cost
+
+    def _preempt_one(self, t0: float) -> bool:
+        """Let the discipline's head-of-queue request bump the weakest
+        strictly-lower-weight running request out of a full batch."""
+        idx = self.policy.select(self.waiting, t0) if self.policy else 0
+        cand = self.waiting[idx]
+        if not _can_preempt(cand):
+            return False
+        cw = _qos_weight(cand)
+        victims = [r for r in self.running if _qos_weight(r) < cw]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda r: (_qos_weight(r), -r.arrival))
+        self.running.remove(victim)
+        victim.preemptions += 1
+        victim.progress = victim.output_tokens - victim.remaining
+        if victim.pinned_seq is not None:
+            self.radix.unpin(victim.pinned_seq)
+            victim.pinned_seq = None
+        seq = self._eff_seq(victim)
+        if seq is not None and self.prefix_caching:
+            # decoded-so-far KV stays resident while the budget allows —
+            # re-admission re-measures, so "retained vs dropped" is
+            # decided by eviction pressure, not a flag
+            self.radix.insert(seq)
+        victim.cached_prefix = self._measure_prefix(victim) \
+            if self.prefix_caching else 0
+        self.waiting.append(victim)
+        self.preempt_log.append((cw, _qos_weight(victim), t0))
+        return True
 
     # -- engine loop --
     def _iterate(self) -> None:
@@ -159,6 +318,12 @@ class EngineSim:
             duration += self.swap_overhead_pending
             self.swap_overhead_pending = 0.0
 
+        # 0) QoS preemption: a high-weight arrival stuck behind a full
+        #    batch bumps one weaker decode per iteration
+        if (self.preemption and self.waiting
+                and len(self.running) >= self.max_batch):
+            self._preempt_one(t0)
+
         # 1) admit prefills within chunk budget and batch capacity; the
         #    queue discipline picks which waiting request goes next
         budget = self.prefill_chunk
@@ -167,15 +332,23 @@ class EngineSim:
                and budget > 0):
             idx = self.policy.select(self.waiting, t0) if self.policy else 0
             req = self.waiting[idx]
-            new_tokens = req.prompt_tokens - req.cached_prefix
+            # re-measure against live KV (submit-time value is a queue-
+            # ordering estimate; residency may have changed since)
+            if self.prefix_caching:
+                req.cached_prefix = self._measure_prefix(req)
+            eff_prompt = req.prompt_tokens + req.progress
+            new_tokens = eff_prompt - req.cached_prefix
             if new_tokens > budget and admitted:
                 break
             self.waiting.pop(idx)
             if self.policy:
-                self.policy.on_admit(req, new_tokens + req.output_tokens)
+                self.policy.on_admit(req, new_tokens + req.remaining)
             admitted.append(req)
+            self._on_admitted(req)
             budget -= new_tokens
-            cost = cm.prefill_cost(self.cfg, req.prompt_tokens, tp=self.tp,
+            self.prefill_tokens += new_tokens
+            self.cached_tokens += req.cached_prefix
+            cost = cm.prefill_cost(self.cfg, eff_prompt, tp=self.tp,
                                    fraction=self.fraction,
                                    cached_tokens=req.cached_prefix)
             duration += cost.total
@@ -208,7 +381,7 @@ class EngineSim:
                 if r.remaining <= 0:
                     r.t_done = t1
                     self.done.append(r)
-                    self._served[r.req_id] = None
+                    self._on_finished(r)
                     if r.on_complete:
                         r.on_complete(r)
                 else:
@@ -220,13 +393,22 @@ class EngineSim:
 
 
 class Router:
-    """KV-cache-aware + least-loaded routing across one LLM's replicas.
+    """Prefix-affinity + least-loaded routing across one LLM's replicas.
 
-    ``weights`` (replica index -> weight) biases the least-loaded choice
-    to the workflow's routing table in pooled multi-tenant deployments:
-    a replica's effective load is load/weight, and zero-weight replicas
-    are never chosen.  Several routers may *share* one replica list (one
-    per tenant workflow — see :meth:`view`); queue state then reflects
+    Target selection, in order:
+
+    1. **longest live prefix** — the replica whose radix cache (or
+       legacy parent registry) holds the longest cached prefix of the
+       request's prompt;
+    2. **sticky** (pooled tenant views, i.e. ``weights`` set) — the
+       replica this workflow instance last used, while it is alive and
+       positively weighted, so one instance's calls keep landing where
+       its KV lives even before the first parent completes;
+    3. **weighted least-loaded** — effective load is load/weight and
+       zero-weight replicas are never chosen.
+
+    Several routers may *share* one replica list (one per tenant
+    workflow — see :meth:`view`); queue state then reflects
     cross-workflow contention automatically.
     """
 
@@ -236,6 +418,7 @@ class Router:
         self.replicas = replicas
         self.affinity = affinity
         self.weights = weights
+        self._sticky: Dict[int, int] = {}  # workflow instance -> replica
 
     def view(self, weights: Dict[int, float]) -> "Router":
         """A per-tenant view over the same physical replicas."""
@@ -251,14 +434,27 @@ class Router:
                 if not getattr(r, "failed", False) and self._weight(i) > 0]
         if not live:
             raise RuntimeError("no live replicas")
-        target = None
-        if self.affinity and req.parent_id is not None:
-            for _, r in live:
-                if r.has_parent(req.parent_id):
-                    target = r
-                    break
-        if target is None:
-            _, target = min(live, key=lambda ir: ir[1].load / self._weight(ir[0]))
+        choice = None
+        if self.affinity:
+            best_len = 0
+            for i, r in live:
+                pl = r.prefix_lookup(req)
+                if pl > best_len:
+                    best_len, choice = pl, (i, r)
+        if choice is None and self.weights is not None \
+                and req.workflow_request is not None:
+            idx = self._sticky.get(req.workflow_request)
+            if idx is not None:
+                for i, r in live:
+                    if i == idx:
+                        choice = (i, r)
+                        break
+        if choice is None:
+            choice = min(live,
+                         key=lambda ir: ir[1].load / self._weight(ir[0]))
+        idx, target = choice
+        if req.workflow_request is not None:
+            self._sticky[req.workflow_request] = idx
         target.submit(req)
 
     def fail_replica(self, idx: int) -> None:
@@ -278,9 +474,10 @@ class ReplicaSpec:
 
 def build_llm_service(specs: List[ReplicaSpec], loop: EventLoop, *,
                       prefix_caching: bool = True,
-                      avg_context: int = 1024) -> Router:
+                      avg_context: int = 1024,
+                      preemption: bool = False) -> Router:
     engines = [EngineSim(s.cfg, loop, tp=s.tp, fraction=s.fraction,
                          name=f"{s.llm}/{i}", prefix_caching=prefix_caching,
-                         avg_context=avg_context)
+                         avg_context=avg_context, preemption=preemption)
                for i, s in enumerate(specs)]
     return Router(engines)

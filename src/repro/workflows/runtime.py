@@ -15,15 +15,18 @@ Two executors drive the same programs:
 """
 from __future__ import annotations
 
+import itertools
 import math
 import random
 from dataclasses import dataclass
-from typing import Callable, Dict, Generator, List, Optional, Sequence
+from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.trace import LLMCall, TracingProxy, TraceStore
 from repro.serving import costmodel as cm
-from repro.serving.simulator import EngineRequest, EventLoop, Router
+from repro.serving.radix import Segment
+from repro.serving.simulator import (EngineRequest, EventLoop, Router,
+                                     output_segment)
 
 
 @dataclass
@@ -86,6 +89,7 @@ def trace_workflow(wf: Workflow, n_requests: int, *, seed: int = 0,
         proxy.begin_request(rid, 0.0)
         t = 0.0
         handles: Dict[int, CallResult] = {}
+        totals: Dict[int, int] = {}  # handle -> prompt+output tokens
         try:
             group = next(gen)
             while True:
@@ -100,14 +104,17 @@ def trace_workflow(wf: Workflow, n_requests: int, *, seed: int = 0,
                     cfg = wf.llms[c.llm]
                     cached = 0
                     if cache_aware and c.parent is not None and c.parent in handles:
-                        cached = min(int(c.prompt_tokens * 0.85),
-                                     c.prompt_tokens - 1)
+                        # exact: the child re-sends its parent's full
+                        # sequence (prompt + output) as its prefix
+                        cached = max(min(totals[c.parent],
+                                         c.prompt_tokens - 1), 0)
                     dur = nominal_call_seconds(cfg, c.prompt_tokens,
                                                c.output_tokens, cached)
                     handle_counter[0] += 1
                     h = handle_counter[0]
                     res = CallResult(h, t, t + dur)
                     handles[h] = res
+                    totals[h] = c.prompt_tokens + c.output_tokens
                     results.append(res)
                     proxy.record(LLMCall(
                         workflow_request=rid, llm=c.llm, t_start=t,
@@ -126,6 +133,19 @@ def trace_workflow(wf: Workflow, n_requests: int, *, seed: int = 0,
 # ---------------------------------------------------------------------------
 # Cluster executor (end-to-end benchmark driver)
 # ---------------------------------------------------------------------------
+
+
+def _truncate_seq(seq: Sequence[Segment], n: int) -> Tuple[Segment, ...]:
+    """Leading ``n`` tokens of a segment sequence (last span partial)."""
+    out: List[Segment] = []
+    left = n
+    for seg_id, length in seq:
+        if left <= 0:
+            break
+        take = min(length, left)
+        out.append((seg_id, take))
+        left -= take
+    return tuple(out)
 
 
 @dataclass
@@ -176,6 +196,10 @@ class ClusterDriver:
     queue disciplines order by.
     """
 
+    # handles are unique process-wide: drivers can share pooled engine
+    # replicas, and engine-side prefix/parent registries key on them
+    _uid = itertools.count(1)
+
     def __init__(self, wf: Workflow, routers: Dict[str, Router],
                  loop: EventLoop,
                  route_map: Optional[Dict[str, str]] = None,
@@ -187,7 +211,11 @@ class ClusterDriver:
         self.telemetry = telemetry
         self.qos = qos
         self.records: List[RequestRecord] = []
-        self._id_counter = [0]
+        # call handle -> full segment sequence (prompt + output) of the
+        # call, kept while its workflow request is in flight so children
+        # can extend it; pruned at request completion
+        self._seqs: Dict[int, Tuple[Segment, ...]] = {}
+        self._rec_handles: Dict[int, List[int]] = {}
 
     def router_for(self, llm: str) -> Router:
         """The router serving a workflow-local LLM name (tenancy-aware)."""
@@ -277,6 +305,8 @@ class ClusterDriver:
             group = next(gen) if send_val is None else gen.send(send_val)
         except StopIteration:
             rec.done = self.loop.now
+            for h in self._rec_handles.pop(rec.request_id, []):
+                self._seqs.pop(h, None)
             if self.telemetry is not None:
                 self.telemetry.record_request_done(self.wf.name, rec)
             return
@@ -289,8 +319,7 @@ class ClusterDriver:
         results: List[Optional[CallResult]] = [None] * len(calls)
 
         for i, c in enumerate(calls):
-            self._id_counter[0] += 1
-            h = self._id_counter[0]
+            h = next(ClusterDriver._uid)
 
             def on_done(req: EngineRequest, i=i, h=h, c=c):
                 results[i] = CallResult(h, req.t_start_service, req.t_done)
@@ -300,13 +329,41 @@ class ClusterDriver:
                 if pending[0] == 0:
                     self._advance(gen, rec, results)
 
+            out_tokens = max(c.output_tokens, 1)
+            prefix, truth = self._prefix_for(h, c)
+            self._seqs[h] = prefix + (output_segment(h, out_tokens),)
+            self._rec_handles.setdefault(rec.request_id, []).append(h)
             req = EngineRequest(
                 req_id=h, prompt_tokens=c.prompt_tokens,
-                output_tokens=max(c.output_tokens, 1), arrival=self.loop.now,
+                output_tokens=out_tokens, arrival=self.loop.now,
                 on_complete=on_done, parent_id=c.parent,
                 workflow_request=rec.request_id,
+                prefix=prefix, true_prefix=truth,
                 qos=self._request_qos(rec, c.llm))
             self.router_for(c.llm).submit(req)
+
+    def _prefix_for(self, h: int, c: Call
+                    ) -> Tuple[Tuple[Segment, ...], int]:
+        """The call's prompt as a segment sequence, plus the ground-truth
+        shared-prefix tokens (vs its parent) for the exactness gate.
+
+        A child's prompt is modeled as its parent's full sequence
+        (prompt + generated output) followed by a fresh delta segment;
+        when the child's prompt is *shorter* than the parent's sequence
+        (beam-search style truncation) it is the truncated parent
+        sequence instead.  Parentless prompts are one fresh segment.
+        """
+        p = c.parent
+        if p is None or p not in self._seqs:
+            return ((("s", h), max(c.prompt_tokens, 1)),), 0
+        parent_seq = self._seqs[p]
+        ptotal = sum(length for _, length in parent_seq)
+        if c.prompt_tokens > ptotal:
+            prefix = parent_seq + ((("d", h), c.prompt_tokens - ptotal),)
+        else:
+            prefix = _truncate_seq(parent_seq, max(c.prompt_tokens, 1))
+        truth = max(min(ptotal, c.prompt_tokens - 1), 0)
+        return prefix, truth
 
     def _request_qos(self, rec: RequestRecord, llm: str):
         """Tag one engine request with this workflow request's urgency

@@ -1,0 +1,332 @@
+"""The prefix-aware serving hot path (real engine + fleet simulator).
+
+Real engine: exact-prefix KV reuse is numerically transparent — a prompt
+served from the cache generates token-for-token what a cold prefill
+generates — and honestly accounted (``cached_tokens``).  Simulator: the
+radix-cache model's measured cached-prefix length equals the driver's
+ground-truth shared prefix when nothing is evicted, eviction removes
+hits deterministically, the router prefers the longest-prefix replica
+and fails over cleanly, and QoS preemption never inverts priority
+(hypothesis property when available).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduced_config
+from repro.models import build_model
+from repro.qos.policy import make_policy
+from repro.qos.slo import RequestQoS
+from repro.serving.engine import ServeRequest, ServingEngine
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.radix import RadixCache
+from repro.serving.simulator import (EngineRequest, EngineSim, EventLoop,
+                                     Router, output_segment)
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# real engine: prefix reuse is exact and honestly accounted
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def qwen_engine_parts():
+    cfg = reduced_config(get_config("qwen2.5-3b"))
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0))
+    return cfg, bundle, params
+
+
+def test_engine_identical_prompt_served_from_cache(qwen_engine_parts):
+    """Satellite regression: the second of two identical prompts must
+    prefill its shared prefix from the cache (the seed engine built a
+    PrefixCache and never consulted it)."""
+    cfg, bundle, params = qwen_engine_parts
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+    eng = ServingEngine(bundle, params, slots=2, max_len=64)
+    eng.submit(ServeRequest(0, prompt, max_new_tokens=4))
+    first = eng.run_to_completion()[0]
+    eng.submit(ServeRequest(1, prompt, max_new_tokens=4))
+    second = eng.run_to_completion()[0]
+    assert second.cached_tokens == len(prompt) - 1
+    assert eng.stats["cached_tokens"] == len(prompt) - 1
+    # reuse is numerically transparent
+    assert second.generated == first.generated
+
+
+def test_engine_prefix_reuse_token_identical_vs_cold(qwen_engine_parts):
+    cfg, bundle, params = qwen_engine_parts
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, cfg.vocab_size, size=20).astype(np.int32)
+    ext = np.concatenate(
+        [base, rng.integers(0, cfg.vocab_size, size=9).astype(np.int32)])
+
+    warm_eng = ServingEngine(bundle, params, slots=2, max_len=64)
+    warm_eng.submit(ServeRequest(0, base, max_new_tokens=3))
+    warm_eng.run_to_completion()
+    warm_eng.submit(ServeRequest(1, ext, max_new_tokens=5))
+    warm = warm_eng.run_to_completion()[0]
+    assert warm.cached_tokens >= len(base)  # prompt + generated prefix
+
+    cold_eng = ServingEngine(bundle, params, slots=1, max_len=64,
+                             prefix_caching=False)
+    cold_eng.submit(ServeRequest(9, ext, max_new_tokens=5))
+    cold = cold_eng.run_to_completion()[0]
+    assert cold.cached_tokens == 0
+    assert warm.generated == cold.generated
+
+
+def test_engine_slot_reuse_invalidates_stale_entries(qwen_engine_parts):
+    """Once a slot's KV is overwritten, cache entries pointing at it
+    must not produce hits (correctness, not just accounting)."""
+    cfg, bundle, params = qwen_engine_parts
+    rng = np.random.default_rng(11)
+    p1 = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    eng = ServingEngine(bundle, params, slots=1, max_len=64)
+    eng.submit(ServeRequest(0, p1, max_new_tokens=2))
+    eng.run_to_completion()
+    # p2 overwrites the only slot; p1's entries must be gone
+    eng.submit(ServeRequest(1, p2, max_new_tokens=2))
+    eng.run_to_completion()
+    matched, slot = eng.prefix_cache.longest_prefix([int(t) for t in p1])
+    assert slot is None and matched == 0
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache / paged-cache regressions (satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_eviction_bounded():
+    """insert adds one node per token; eviction must loop until the trie
+    is back under budget (the seed evicted exactly one node)."""
+    pc = PrefixCache(max_entries=32)
+    for i in range(10):
+        pc.insert(list(range(i * 100, i * 100 + 20)), slot=i)
+        assert pc.entries <= 32
+    # the freshly inserted chain itself is never evicted
+    assert pc.longest_prefix(list(range(900, 920)))[1] == 9
+
+
+def test_prefix_cache_invalidate_prunes_dead_chains():
+    pc = PrefixCache()
+    pc.insert([1, 2, 3, 4], slot=0)
+    pc.insert([1, 2, 9], slot=1)
+    assert pc.entries == 5
+    pc.invalidate_slot(0)
+    # the [3, 4] tail is slotless and childless -> pruned, entries drop
+    assert pc.entries == 3
+    assert pc.longest_prefix([1, 2, 3, 4]) == (2, 1) or \
+        pc.longest_prefix([1, 2, 3, 4])[0] <= 2
+    pc.invalidate_slot(1)
+    assert pc.entries == 0
+
+
+def test_paged_append_batches_pages_against_oracle():
+    """Multi-page append in one call must match the gather_seq oracle
+    (the write path batches one dynamic_update_slice per touched page)."""
+    import jax.numpy as jnp
+    from repro.serving.kv_cache import PagedKVCache
+
+    L, KV, D, ps = 2, 2, 8, 4
+    cache = PagedKVCache.create(L, num_pages=8, kv_heads=KV, page_size=ps,
+                                head_dim=D, dtype=jnp.float32)
+    rng = jax.random.key(1)
+    T = 11  # spans 3 pages, starts/ends mid-page after the second append
+    k_all = jax.random.normal(rng, (L, KV, T, D))
+    v_all = k_all * 3
+    cache.alloc_seq(0)
+    cache.append(0, k_all[:, :, :3], v_all[:, :, :3])   # mid-page start
+    cache.append(0, k_all[:, :, 3:], v_all[:, :, 3:])   # crosses 2 pages
+    k, v, length = cache.gather_seq(0)
+    assert length == T
+    np.testing.assert_allclose(np.asarray(k[:, :, :T]), np.asarray(k_all),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v[:, :, :T]), np.asarray(v_all),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# simulator: token-accurate radix model
+# ---------------------------------------------------------------------------
+
+
+def _react_driver(loop, engines, affinity=True):
+    wf = get_workflow("react_agent")
+    routers = {m: Router(engines, affinity=affinity) for m in wf.llms}
+    return ClusterDriver(wf, routers, loop)
+
+
+def test_sim_cached_prefix_exact_without_eviction():
+    wf = get_workflow("react_agent")
+    cfg = next(iter(wf.llms.values()))
+    loop = EventLoop()
+    eng = EngineSim(cfg, loop)
+    drv = _react_driver(loop, [eng])
+    recs = drv.run_open_loop(0.5, 8, seed=4, until=1e6)
+    assert len(recs) == 8
+    assert eng.done
+    for r in eng.done:
+        assert r.cached_prefix == r.true_prefix
+    assert sum(r.cached_prefix for r in eng.done) > 0
+
+
+def test_sim_evicted_parent_yields_no_cached_prefix():
+    """Deterministic: a parent whose KV fell out of the token budget
+    stops producing prefix hits."""
+    cfg = next(iter(get_workflow("react_agent").llms.values()))
+    loop = EventLoop()
+    eng = EngineSim(cfg, loop, kv_capacity_override=100)
+    done = []
+    parent = EngineRequest(req_id=1, prompt_tokens=80, output_tokens=10,
+                           arrival=0.0, on_complete=done.append,
+                           prefix=((("s", 1), 80),))
+    eng.submit(parent)
+    loop.run()
+    # a fat stranger evicts the parent's 90 resident tokens
+    stranger = EngineRequest(req_id=2, prompt_tokens=95, output_tokens=4,
+                             arrival=loop.now, on_complete=done.append,
+                             prefix=((("s", 2), 95),))
+    eng.submit(stranger)
+    loop.run()
+    child_prefix = ((("s", 1), 80), output_segment(1, 10), (("d", 3), 5))
+    child = EngineRequest(req_id=3, prompt_tokens=95, output_tokens=4,
+                          arrival=loop.now, on_complete=done.append,
+                          prefix=child_prefix)
+    eng.submit(child)
+    loop.run()
+    assert child.cached_prefix == 0
+
+
+def test_sim_legacy_served_registry_is_lru_bounded():
+    """The parent-id heuristic path must forget completed requests once
+    their modeled KV exceeds the budget (the seed grew without bound)."""
+    cfg = next(iter(get_workflow("react_agent").llms.values()))
+    loop = EventLoop()
+    eng = EngineSim(cfg, loop, kv_capacity_override=250)
+    for i in range(3):
+        eng.submit(EngineRequest(req_id=i, prompt_tokens=90,
+                                 output_tokens=10, arrival=loop.now))
+        loop.run()
+    # 3 x 100 tokens > 250: the oldest entry must have been evicted
+    assert not eng.has_parent(0)
+    assert eng.has_parent(2)
+    assert len(eng._served) <= 2
+
+
+def test_router_prefers_longest_prefix_replica_and_fails_over():
+    cfg = next(iter(get_workflow("react_agent").llms.values()))
+    loop = EventLoop()
+    engines = [EngineSim(cfg, loop, name=f"r{i}") for i in range(3)]
+    router = Router(engines)
+    done = []
+    parent = EngineRequest(req_id=1, prompt_tokens=50, output_tokens=8,
+                           arrival=0.0, on_complete=done.append,
+                           prefix=((("s", 1), 50),))
+    # load replica 0 so least-loaded would NOT pick it later
+    engines[0].submit(parent)
+    loop.run()
+    host = engines[0]
+    assert host.done  # parent's KV lives on replica 0
+    child_prefix = parent.prefix + (output_segment(1, 8),) + ((("d", 2), 6),)
+    child = EngineRequest(req_id=2, prompt_tokens=64, output_tokens=4,
+                          arrival=loop.now, on_complete=done.append,
+                          prefix=child_prefix)
+    assert host.prefix_lookup(child) == 58
+    router.submit(child)
+    loop.run()
+    assert child in host.done  # affinity routed to the prefix holder
+    assert child.cached_prefix == 58
+
+    # replica failure clears prefix state and fails over cleanly
+    grandchild = EngineRequest(
+        req_id=3, prompt_tokens=70, output_tokens=4, arrival=loop.now,
+        on_complete=done.append,
+        prefix=child_prefix + (output_segment(2, 4),) + ((("d", 3), 2),))
+    router.fail_replica(0)
+    assert host.radix.tokens == 0 and not host._served
+    router.submit(grandchild)
+    loop.run()
+    assert grandchild not in host.done
+    assert grandchild.t_done >= 0 and grandchild.cached_prefix == 0
+
+
+# ---------------------------------------------------------------------------
+# preemption never inverts priority
+# ---------------------------------------------------------------------------
+
+
+_TIERS = (
+    ("gold", 4.0, 5.0),       # (slo, weight, relative deadline)
+    ("silver", 2.0, 20.0),
+    ("bronze", 1.0, 60.0),
+    ("best_effort", 0.5, math.inf),
+)
+
+
+def _qos_for(tier_idx: int, arrival: float):
+    name, weight, dl = _TIERS[tier_idx]
+    if not math.isfinite(dl):
+        return RequestQoS(tenant="t", slo=name, weight=weight,
+                          deadline=math.inf, remaining_s=0.0)
+    return RequestQoS(tenant="t", slo=name, weight=weight,
+                      deadline=arrival + dl, remaining_s=0.0)
+
+
+def _run_preemption_stream(spec):
+    """spec: list of (tier_idx, inter_arrival_scaled) request templates."""
+    cfg = next(iter(get_workflow("react_agent").llms.values()))
+    loop = EventLoop()
+    eng = EngineSim(cfg, loop, policy=make_policy("priority"),
+                    preemption=True, max_batch_override=2,
+                    prefill_chunk=4096)
+    t = 0.0
+    for i, (tier, gap) in enumerate(spec):
+        t += gap / 10.0
+        arrival = t
+
+        def submit(i=i, tier=tier, arrival=arrival):
+            eng.submit(EngineRequest(
+                req_id=i, prompt_tokens=256, output_tokens=64,
+                arrival=arrival, qos=_qos_for(tier, arrival)))
+
+        loop.schedule(arrival, submit)
+    loop.run()
+    return eng
+
+
+def test_preemption_never_inverts_priority_smoke():
+    eng = _run_preemption_stream(
+        [(3, 0.0), (3, 0.1), (2, 1.0), (0, 1.0), (0, 0.5), (1, 2.0)])
+    assert eng.preempt_log, "stream should trigger at least one preemption"
+    for pw, vw, _ in eng.preempt_log:
+        assert pw > vw
+    assert len(eng.done) == 6  # every victim still completes
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_preemption_never_inverts_priority_property():
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3),
+                              st.floats(0.0, 3.0)),
+                    min_size=2, max_size=12))
+    def check(spec):
+        eng = _run_preemption_stream(spec)
+        for pw, vw, _ in eng.preempt_log:
+            assert pw > vw
+        assert len(eng.done) == len(spec)
+
+    check()
