@@ -35,7 +35,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import random
 import statistics
 from typing import Dict, List, Optional
 
@@ -121,12 +120,8 @@ def _run_fleet(wfs, s, seed: int, *, affinity: bool, replicas: int,
     drivers = {}
     for k, name in enumerate(sorted(wfs)):
         drv = ClusterDriver(wfs[name], routers[name], loop)
-        rng = random.Random(seed * 1000 + k)
-        t = 0.0
-        for rid in range(s["n_requests"][name]):
-            loop.schedule(t, lambda rid=rid, d=drv, k=k: d.start_request(
-                rid, seed * 1000 + k))
-            t += rng.expovariate(s["lam"][name])
+        drv.schedule_open_loop(s["lam"][name], s["n_requests"][name],
+                               seed=seed * 1000 + k)
         drivers[name] = drv
     loop.run(1e7)
     return drivers, engines

@@ -83,15 +83,12 @@ def joint_run(wf_allocs, rates: Dict[str, float], n_req: int, *,
 def drive_fleet(drivers: Dict[str, ClusterDriver],
                 rates: Dict[str, float], n_req: int, loop: EventLoop, *,
                 seed: int = 0, horizon: float = 1e5) -> Dict[str, dict]:
-    import random
-
+    # lazy sources: one pending arrival per driver, same RNG streams as
+    # the old eager pre-scheduling (arrival process from seed*1000+k,
+    # request programs from seed)
     for k, name in enumerate(sorted(drivers)):
-        drv = drivers[name]
-        rng = random.Random(seed * 1000 + k)
-        t = 0.0
-        for rid in range(n_req):
-            loop.schedule(t, lambda rid=rid, d=drv: d.start_request(rid, seed))
-            t += rng.expovariate(rates[name])
+        drivers[name].schedule_open_loop(rates[name], n_req, seed=seed,
+                                         arrival_seed=seed * 1000 + k)
     loop.run(horizon)
     out: Dict[str, dict] = {}
     for name, drv in drivers.items():

@@ -19,8 +19,8 @@ def main() -> None:
                             bench_e2e, bench_kernels, bench_multi_workflow,
                             bench_multiplexing, bench_pipeline_accuracy,
                             bench_placement, bench_prefix, bench_qos,
-                            bench_roofline, bench_scheduler, bench_stability,
-                            bench_workflow_aware)
+                            bench_roofline, bench_scale, bench_scheduler,
+                            bench_stability, bench_workflow_aware)
 
     sections = [
         ("fig3_stability", bench_stability),
@@ -35,6 +35,7 @@ def main() -> None:
         ("qos_scheduling", bench_qos),
         ("prefix_serving", bench_prefix),
         ("placement_aware", bench_placement),
+        ("scale_event_core", bench_scale),
         ("pipeline_accuracy", bench_pipeline_accuracy),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),

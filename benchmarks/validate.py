@@ -50,6 +50,14 @@ REQUIRED = {
         "preemption",
         "acceptance",
     ),
+    "scale_event_core": (
+        "config",
+        "throughput",
+        "memory",
+        "sketch",
+        "workflows",
+        "acceptance",
+    ),
 }
 
 

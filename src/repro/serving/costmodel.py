@@ -41,20 +41,50 @@ class StepCost:
         return max(terms, key=terms.get)
 
 
+# Per-config derived constants, memoized by object identity (hashing a
+# ~30-field frozen dataclass per call is slower than the loops it would
+# replace; the entry holds a strong ref to cfg so its id can't be
+# recycled).  The model zoo is small, so the cache never grows large.
+#
+# The closed forms below are BIT-EXACT equivalents of the original
+# per-layer accumulation loops: every per-layer term is an
+# integer-valued float, so as long as the totals stay below 2**53 (they
+# do by ~9 orders of magnitude for real configs) iterated addition and
+# one multiplication produce the identical float.
+_cfg_cache: dict = {}
+
+
+def _cfg_consts(cfg: ArchConfig) -> tuple:
+    """(cfg, active_params, params, n_full_attn_layers)"""
+    entry = _cfg_cache.get(id(cfg))
+    if entry is None:
+        n_full = (sum(1 for layer in cfg.full_attn_layers
+                      if 0 <= layer < cfg.num_layers)
+                  if (cfg.sliding_window and cfg.full_attn_layers)
+                  else cfg.num_layers)
+        entry = (cfg, cfg.active_param_count(), cfg.param_count(), n_full)
+        _cfg_cache[id(cfg)] = entry
+    return entry
+
+
+def _span_sum(cfg: ArchConfig, n_full: int, context: int) -> float:
+    """Sum over layers of each layer's attention span at ``context``."""
+    if cfg.sliding_window and cfg.full_attn_layers:
+        return (n_full * context
+                + (cfg.num_layers - n_full) * min(context,
+                                                  cfg.sliding_window))
+    return cfg.num_layers * context
+
+
 def flops_per_token(cfg: ArchConfig, context: int) -> float:
     """Forward FLOPs for one token at the given attention context length."""
-    base = 2.0 * cfg.active_param_count()
+    _, active_params, _, n_full = _cfg_consts(cfg)
+    base = 2.0 * active_params
     if cfg.attn_free:
         # WKV state update+readout: ~4*D ops per channel per token
         return base + 4.0 * cfg.num_layers * cfg.d_model * cfg.head_dim
-    attn = 0.0
-    for layer in range(cfg.num_layers):
-        if cfg.sliding_window and cfg.full_attn_layers:
-            span = (context if layer in cfg.full_attn_layers
-                    else min(context, cfg.sliding_window))
-        else:
-            span = context
-        attn += 4.0 * cfg.num_heads * cfg.head_dim * span
+    attn = 4.0 * cfg.num_heads * cfg.head_dim * _span_sum(cfg, n_full,
+                                                          context)
     if cfg.ssm_state and not cfg.attn_free:  # hymba mamba heads
         attn += 6.0 * cfg.num_layers * cfg.q_dim * cfg.ssm_state
     return base + attn
@@ -65,22 +95,16 @@ def kv_bytes_per_seq(cfg: ArchConfig, context: int) -> float:
     if cfg.attn_free:
         return (cfg.num_layers * cfg.num_heads * cfg.head_dim ** 2 * 4
                 + 2 * cfg.num_layers * cfg.d_model * KV_BYTES)
+    _, _, _, n_full = _cfg_consts(cfg)
     per_layer = 2 * cfg.kv_dim * KV_BYTES
-    total = 0.0
-    for layer in range(cfg.num_layers):
-        if cfg.sliding_window and cfg.full_attn_layers:
-            span = (context if layer in cfg.full_attn_layers
-                    else min(context, cfg.sliding_window))
-        else:
-            span = context
-        total += per_layer * span
+    total = float(per_layer) * _span_sum(cfg, n_full, context)
     if cfg.ssm_state and not cfg.attn_free:
         total += cfg.num_layers * cfg.q_dim * cfg.ssm_state * 4
     return total
 
 
 def model_bytes(cfg: ArchConfig) -> float:
-    return cfg.param_count() * BYTES_PER_PARAM
+    return _cfg_consts(cfg)[2] * BYTES_PER_PARAM
 
 
 def tp_collective_time(cfg: ArchConfig, tokens: int, tp: int) -> float:

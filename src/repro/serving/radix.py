@@ -29,6 +29,8 @@ tie-breaks), and O(path length) per operation.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from heapq import heapify, heappop, heappush
+from itertools import count
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 Segment = Tuple[Hashable, int]  # (segment id, token length)
@@ -49,11 +51,52 @@ class _Node:
 
 
 class RadixCache:
+    """``head_listeners`` get called as ``cb(op, seg)`` whenever the set
+    of resident *head segments* (root children — every cached sequence
+    starts at one) changes: ``("add", seg)`` when a head becomes
+    resident, ``("del", seg)`` when eviction drops one, and
+    ``("reset", None)`` on :meth:`clear`.  Splitting a head node keeps
+    its ``(seg, 0)`` key, so no event fires.  Routers index replicas by
+    head segment with these hooks (see ``simulator._ReplicaIndex``)."""
+
     def __init__(self, capacity_tokens: int = 1 << 30):
         self.root = _Node()
         self.capacity_tokens = int(capacity_tokens)
         self.tokens = 0  # total cached tokens across all nodes
         self.clock = 0
+        self.head_listeners: List = []
+        # lazy LRU heap over evictable leaves: (stamp, tie, node)
+        # entries; an entry is fresh iff the node is still an attached
+        # childless node carrying that stamp (every leaf-stamp change
+        # and every become-a-leaf event pushes a fresh entry, so each
+        # current leaf always has one)
+        self._lru: List[Tuple[int, int, _Node]] = []
+        self._lru_seq = count()
+        self.n_nodes = 0
+        # measurement/parity knob: evict via the seed's full-tree DFS
+        # walk instead of the LRU heap (bench_scale's legacy baseline)
+        self.legacy_evict = False
+
+    def _offer(self, node: _Node) -> None:
+        if node is not self.root and not node.children:
+            heappush(self._lru, (node.stamp, next(self._lru_seq), node))
+
+    def _lru_compact(self) -> None:
+        """Drop stale heap entries (rebuild from the live leaves)."""
+        fresh = {}
+        for stamp, seq, node in self._lru:
+            if (node.parent is not None and not node.children
+                    and node.stamp == stamp
+                    and node.parent.children.get(node.key()) is node):
+                cur = fresh.get(id(node))
+                if cur is None or (stamp, seq) < cur[:2]:
+                    fresh[id(node)] = (stamp, seq, node)
+        self._lru = list(fresh.values())
+        heapify(self._lru)
+
+    def _head_event(self, op: str, seg) -> None:
+        for cb in self.head_listeners:
+            cb(op, seg)
 
     # -- queries -----------------------------------------------------------
     def match(self, seq: Sequence[Segment], touch: bool = True) -> int:
@@ -61,6 +104,8 @@ class RadixCache:
         if touch:
             self.clock += 1
         node, matched, _, _ = self._descend(seq, touch=touch)
+        if touch:
+            self._offer(node)  # its old heap entry is stale now
         return matched
 
     # -- updates -----------------------------------------------------------
@@ -79,7 +124,13 @@ class RadixCache:
                           stamp=self.clock)
             node.children[child.key()] = child
             self.tokens += child.length
+            self.n_nodes += 1
+            if node is self.root and self.head_listeners:
+                self._head_event("add", seg)
             node = child
+        self._offer(node)
+        if len(self._lru) > max(1024, 4 * self.n_nodes):
+            self._lru_compact()
         path = set()
         walk = node
         while walk is not None:
@@ -102,6 +153,10 @@ class RadixCache:
     def clear(self) -> None:
         self.root = _Node()
         self.tokens = 0
+        self.n_nodes = 0
+        self._lru = []
+        if self.head_listeners:
+            self._head_event("reset", None)
 
     # -- internals ---------------------------------------------------------
     def _descend(self, seq: Sequence[Segment], touch: bool,
@@ -162,11 +217,47 @@ class RadixCache:
         child.length -= take
         child.parent = upper
         upper.children[child.key()] = child
+        self.n_nodes += 1
         return upper
 
     def _evict_one(self, protect) -> bool:
         """Drop the least-recently-touched unpinned leaf not on the
-        protected path.  Returns False when nothing is evictable."""
+        protected path.  Returns False when nothing is evictable.
+
+        Served from the lazy LRU heap in O(log leaves) amortized (the
+        seed walked the whole tree per eviction); stale entries are
+        discarded on pop, pinned/protected candidates are deferred and
+        re-pushed so they stay eligible for later evictions.
+        """
+        if self.legacy_evict:
+            return self._evict_one_walk(protect)
+        heap, best, deferred = self._lru, None, []
+        while heap:
+            stamp, seq, node = heappop(heap)
+            parent = node.parent
+            if (parent is None or node.children or node.stamp != stamp
+                    or parent.children.get(node.key()) is not node):
+                continue  # stale: detached, re-touched, or grew children
+            if node.pins > 0 or id(node) in protect:
+                deferred.append((stamp, seq, node))
+                continue
+            best = node
+            break
+        for entry in deferred:
+            heappush(heap, entry)
+        if best is None:
+            return False
+        parent = best.parent
+        del parent.children[best.key()]
+        self.tokens -= best.length
+        self.n_nodes -= 1
+        if parent is self.root and self.head_listeners:
+            self._head_event("del", best.seg)
+        self._offer(parent)  # parent may have just become a leaf
+        return True
+
+    def _evict_one_walk(self, protect) -> bool:
+        """The seed's eviction: DFS the whole tree for the LRU leaf."""
         best = None
         stack = [self.root]
         while stack:
@@ -181,4 +272,7 @@ class RadixCache:
             return False
         del best.parent.children[best.key()]
         self.tokens -= best.length
+        self.n_nodes -= 1
+        if best.parent is self.root and self.head_listeners:
+            self._head_event("del", best.seg)
         return True

@@ -33,16 +33,20 @@ Fidelity notes (what is modeled):
 from __future__ import annotations
 
 import heapq
-import itertools
 import math
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from functools import partial
+from typing import Callable, Dict, Hashable, List, Optional, Set, Tuple
 
 from repro import hw
 from repro.configs.base import ArchConfig
 from repro.serving import costmodel as cm
+from repro.serving.eventloop import EventLoop
 from repro.serving.radix import RadixCache, Segment
+
+__all__ = ["EventLoop", "EngineRequest", "EngineSim", "Router",
+           "ReplicaSpec", "build_llm_service", "output_segment"]
 
 
 def output_segment(req_id: int, tokens: int) -> Segment:
@@ -50,25 +54,6 @@ def output_segment(req_id: int, tokens: int) -> Segment:
     driver and the engine must agree on it so a child call's prompt
     segments match what the engine registered at the parent's finish."""
     return (("o", req_id), tokens)
-
-
-class EventLoop:
-    def __init__(self):
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
-        self._counter = itertools.count()
-        self.now = 0.0
-
-    def schedule(self, t: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (max(t, self.now), next(self._counter), fn))
-
-    def run(self, until: float = math.inf) -> None:
-        while self._heap and self._heap[0][0] <= until:
-            t, _, fn = heapq.heappop(self._heap)
-            self.now = t
-            fn()
-
-    def empty(self) -> bool:
-        return not self._heap
 
 
 @dataclass
@@ -138,7 +123,8 @@ class EngineSim:
                  max_batch_override: Optional[int] = None,
                  policy: Optional[object] = None,
                  preemption: bool = False,
-                 kv_capacity_override: Optional[int] = None):
+                 kv_capacity_override: Optional[int] = None,
+                 keep_done: bool = True):
         self.cfg = cfg
         self.policy = policy
         self.loop = loop
@@ -162,7 +148,17 @@ class EngineSim:
         self.radix = RadixCache(self.kv_capacity_tokens)
         self.waiting: List[EngineRequest] = []
         self.running: List[EngineRequest] = []
+        # completed requests: ``keep_done=False`` keeps only the counter
+        # (million-request runs must not retain one object per request)
+        self.keep_done = keep_done
         self.done: List[EngineRequest] = []
+        self.n_done = 0
+        # incremental queue-load (see ``load``); listeners are notified
+        # once per state-changing event so routers can index replicas
+        # without O(queue) scans
+        self._load = 0
+        self._load_notified = 0
+        self._load_listeners: List[Callable[[int], None]] = []
         self.busy = False
         self.busy_time = 0.0
         self.prefill_tokens = 0  # prompt tokens actually computed
@@ -179,9 +175,25 @@ class EngineSim:
 
     # -- queue introspection (router) --
     @property
-    def load(self) -> float:
+    def load(self) -> int:
+        """Outstanding token work, maintained incrementally (O(1)):
+        waiting requests count ``remaining + prompt``, running requests
+        count ``remaining`` (see :meth:`recompute_load`)."""
+        return self._load
+
+    def recompute_load(self) -> int:
+        """O(queue) recomputation of :attr:`load` (test invariant)."""
         return (sum(r.remaining + r.prompt_tokens for r in self.waiting)
                 + sum(r.remaining for r in self.running))
+
+    def add_load_listener(self, cb: Callable[[int], None]) -> None:
+        self._load_listeners.append(cb)
+
+    def _notify_load(self) -> None:
+        if self._load_listeners and self._load != self._load_notified:
+            self._load_notified = self._load
+            for cb in self._load_listeners:
+                cb(self._load)
 
     def has_parent(self, parent_id: Optional[int]) -> bool:
         if parent_id is None or parent_id not in self._served:
@@ -210,6 +222,8 @@ class EngineSim:
             if self.prefix_caching else 0
         req.remaining = req.output_tokens - req.progress
         self.waiting.append(req)
+        self._load += req.remaining + req.prompt_tokens
+        self._notify_load()
         if not self.busy:
             self.busy = True
             self.loop.schedule(self.loop.now, self._iterate)
@@ -224,6 +238,8 @@ class EngineSim:
         self.failed = True
         orphans = self.waiting + self.running
         self.waiting, self.running = [], []
+        self._load = 0
+        self._notify_load()
         self._served.clear()
         self._served_tokens = 0
         self.radix.clear()
@@ -304,6 +320,7 @@ class EngineSim:
         victim.cached_prefix = self._measure_prefix(victim) \
             if self.prefix_caching else 0
         self.waiting.append(victim)
+        self._load += victim.prompt_tokens  # waiting counts the prompt again
         self.preempt_log.append((cw, _qos_weight(victim), t0))
         return True
 
@@ -341,6 +358,7 @@ class EngineSim:
             if new_tokens > budget and admitted:
                 break
             self.waiting.pop(idx)
+            self._load -= req.prompt_tokens  # running counts remaining only
             if self.policy:
                 self.policy.on_admit(req, new_tokens + req.remaining)
             admitted.append(req)
@@ -369,27 +387,117 @@ class EngineSim:
                 r.remaining -= q
                 if r.t_first_token < 0:
                     r.t_first_token = t0 + duration
+            self._load -= q * len(batch)
 
         t1 = t0 + max(duration, 1e-6)
         self.busy_time += t1 - t0
+        self._notify_load()
+        self.loop.schedule(t1, self._finish_batch, batch, t1)
 
-        def finish():
-            if self.failed:  # iteration died with the chip; work was
-                return       # already re-dispatched by fail()
-            still: List[EngineRequest] = []
-            for r in batch:
-                if r.remaining <= 0:
-                    r.t_done = t1
+    def _finish_batch(self, batch: List[EngineRequest], t1: float) -> None:
+        if self.failed:  # iteration died with the chip; work was
+            return       # already re-dispatched by fail()
+        still: List[EngineRequest] = []
+        for r in batch:
+            if r.remaining <= 0:
+                r.t_done = t1
+                self._load -= r.remaining
+                self.n_done += 1
+                if self.keep_done:
                     self.done.append(r)
-                    self._on_finished(r)
-                    if r.on_complete:
-                        r.on_complete(r)
-                else:
-                    still.append(r)
-            self.running = still
-            self._iterate()
+                self._on_finished(r)
+                if r.on_complete:
+                    r.on_complete(r)
+            else:
+                still.append(r)
+        self.running = still
+        self._notify_load()
+        self._iterate()
 
-        self.loop.schedule(t1, finish)
+
+class _ReplicaIndex:
+    """Incremental routing index over one replica list, shared by the
+    base :class:`Router` and all of its tenant views.
+
+    Two structures, both updated by callbacks (never rebuilt per call):
+
+    * ``owners`` — head-segment id → indices of replicas whose radix
+      cache holds KV for that segment.  Fed by the caches' head-listener
+      hooks (:attr:`RadixCache.head_listeners`): a replica owns a head
+      exactly while ``(seg, 0)`` is a root child, which is exactly when
+      ``match()`` can return > 0 for a prompt starting with that
+      segment — so probing only owners is *equivalent* to scanning all
+      replicas (non-owners would report 0).
+    * a lazy least-loaded min-heap of ``(load, idx)`` entries, pushed by
+      the engines' load listeners on every load change.  Entries are
+      validated on pop: an entry is fresh iff its recorded load equals
+      the engine's current load — every live engine always has one
+      fresh entry (each change pushes one), so after discarding stale
+      heads the top is the true ``(min load, min idx)``, matching the
+      legacy ``min()`` scan's lowest-index tie-break.
+
+    The heap orders by *raw* load, so it serves unweighted routers only
+    (weighted tenant views fall back to the O(R) scan — R is small in
+    pooled deployments and effective load is per-view).
+    """
+
+    def __init__(self, replicas: List["EngineSim"]):
+        self.replicas = replicas
+        self.owners: Dict[Hashable, Set[int]] = {}
+        self._heap: List[Tuple[float, int]] = []
+        self._max_heap = max(64, 16 * len(replicas))
+        for i, eng in enumerate(replicas):
+            radix = getattr(eng, "radix", None)
+            if radix is not None:
+                radix.head_listeners.append(partial(self._head_event, i))
+                for seg, _start in radix.root.children:
+                    self.owners.setdefault(seg, set()).add(i)
+            if hasattr(eng, "add_load_listener"):
+                eng.add_load_listener(partial(self._load_event, i))
+            self._heap.append((eng.load, i))
+        heapq.heapify(self._heap)
+
+    # radix head callback: op is "add" | "del" | "reset"
+    def _head_event(self, idx: int, op: str, seg: Hashable) -> None:
+        if op == "add":
+            self.owners.setdefault(seg, set()).add(idx)
+        elif op == "del":
+            s = self.owners.get(seg)
+            if s is not None:
+                s.discard(idx)
+                if not s:
+                    del self.owners[seg]
+        else:  # reset (cache cleared / replica failed)
+            dead = [k for k, s in self.owners.items() if idx in s]
+            for k in dead:
+                s = self.owners[k]
+                s.discard(idx)
+                if not s:
+                    del self.owners[k]
+
+    def _load_event(self, idx: int, load: float) -> None:
+        heapq.heappush(self._heap, (load, idx))
+        if len(self._heap) > self._max_heap:
+            self._compact()
+
+    def _compact(self) -> None:
+        self._heap = [(r.load, i) for i, r in enumerate(self.replicas)
+                      if not getattr(r, "failed", False)]
+        heapq.heapify(self._heap)
+
+    def least_loaded(self) -> Optional[int]:
+        """Live replica with minimal load (ties → lowest index)."""
+        for _attempt in range(2):
+            heap = self._heap
+            while heap:
+                load, idx = heap[0]
+                eng = self.replicas[idx]
+                if getattr(eng, "failed", False) or eng.load != load:
+                    heapq.heappop(heap)  # stale
+                    continue
+                return idx
+            self._compact()  # all entries consumed: rebuild once
+        return None
 
 
 class Router:
@@ -410,26 +518,92 @@ class Router:
     Several routers may *share* one replica list (one per tenant
     workflow — see :meth:`view`); queue state then reflects
     cross-workflow contention automatically.
+
+    ``indexed=True`` (default) serves the common case — unweighted
+    router, segment-carrying request — from a :class:`_ReplicaIndex` in
+    O(owners + log R) instead of O(R) scans per call, with selection
+    semantics identical to the scan (gated by a parity test);
+    ``indexed=False`` keeps the legacy full-scan path.
     """
 
     def __init__(self, replicas: List[EngineSim], *, affinity: bool = True,
-                 weights: Optional[Dict[int, float]] = None):
+                 weights: Optional[Dict[int, float]] = None,
+                 indexed: bool = True,
+                 index: Optional[_ReplicaIndex] = None,
+                 legacy_load: bool = False):
         assert replicas
         self.replicas = replicas
         self.affinity = affinity
         self.weights = weights
+        self.indexed = indexed
+        # measurement/parity knob: re-sum each candidate's queues per
+        # call (the seed's O(queue) hot path) instead of reading the
+        # incrementally-maintained load; bench_scale's legacy baseline
+        self.legacy_load = legacy_load
         self._sticky: Dict[int, int] = {}  # workflow instance -> replica
+        if index is None and indexed:
+            index = _ReplicaIndex(replicas)
+        self._index = index
 
     def view(self, weights: Dict[int, float]) -> "Router":
-        """A per-tenant view over the same physical replicas."""
-        return Router(self.replicas, affinity=self.affinity, weights=weights)
+        """A per-tenant view over the same physical replicas (shares the
+        base router's index rather than re-registering listeners)."""
+        return Router(self.replicas, affinity=self.affinity, weights=weights,
+                      indexed=self.indexed, index=self._index,
+                      legacy_load=self.legacy_load)
 
     def _weight(self, idx: int) -> float:
         if self.weights is None:
             return 1.0
         return self.weights.get(idx, 0.0)
 
+    def forget(self, workflow_request: int) -> None:
+        """Drop sticky state for a completed workflow instance (the
+        driver calls this from its done path so ``_sticky`` stays
+        bounded by in-flight instances)."""
+        self._sticky.pop(workflow_request, None)
+
     def submit(self, req: EngineRequest) -> None:
+        if self.indexed and self.weights is None:
+            self._submit_indexed(req)
+        else:
+            self._submit_scan(req)
+
+    def _submit_indexed(self, req: EngineRequest) -> None:
+        """Index-served fast path (unweighted router): probe prefix
+        owners only, then the load heap.  Sticky (tier 2) never fires
+        here — it is only consulted when ``weights`` is set."""
+        idx = self._index
+        replicas = self.replicas
+        choice = None
+        if self.affinity:
+            if req.prefix is not None:
+                head = None
+                for seg_id, length in req.prefix:
+                    if length > 0:
+                        head = seg_id
+                        break
+                owners = idx.owners.get(head)
+                cands = sorted(owners) if owners else ()
+            else:
+                # legacy parent-id heuristic carries no segment id to
+                # index on; rare (drivers always attach segments)
+                cands = range(len(replicas))
+            best_len = 0
+            for i in cands:
+                r = replicas[i]
+                if getattr(r, "failed", False):
+                    continue
+                pl = r.prefix_lookup(req)
+                if pl > best_len:
+                    best_len, choice = pl, i
+        if choice is None:
+            choice = idx.least_loaded()
+            if choice is None:
+                raise RuntimeError("no live replicas")
+        replicas[choice].submit(req)
+
+    def _submit_scan(self, req: EngineRequest) -> None:
         live = [(i, r) for i, r in enumerate(self.replicas)
                 if not getattr(r, "failed", False) and self._weight(i) > 0]
         if not live:
@@ -450,10 +624,14 @@ class Router:
                         choice = (i, r)
                         break
         if choice is None:
-            choice = min(live,
-                         key=lambda ir: ir[1].load / self._weight(ir[0]))
+            if self.legacy_load:
+                choice = min(live, key=lambda ir: ir[1].recompute_load()
+                             / self._weight(ir[0]))
+            else:
+                choice = min(live,
+                             key=lambda ir: ir[1].load / self._weight(ir[0]))
         idx, target = choice
-        if req.workflow_request is not None:
+        if self.weights is not None and req.workflow_request is not None:
             self._sticky[req.workflow_request] = idx
         target.submit(req)
 

@@ -19,6 +19,7 @@ import itertools
 import math
 import random
 from dataclasses import dataclass
+from functools import partial
 from typing import Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig
@@ -50,6 +51,33 @@ class CallResult:
 
 
 WorkflowProgram = Callable[[random.Random], Generator]
+
+
+class _GroupJoin:
+    """Fan-in for one yielded call group: collects each call's result
+    and resumes the workflow generator when the last one lands.  One
+    small object per group (plus a two-arg partial per call) instead of
+    one full closure per call — the driver's hot-path allocation."""
+
+    __slots__ = ("driver", "gen", "rec", "results", "pending")
+
+    def __init__(self, driver: "ClusterDriver", gen: Generator,
+                 rec: "RequestRecord", n: int):
+        self.driver = driver
+        self.gen = gen
+        self.rec = rec
+        self.results: List[Optional[CallResult]] = [None] * n
+        self.pending = n
+
+    def done(self, i: int, llm: str, req: "EngineRequest") -> None:
+        d = self.driver
+        self.results[i] = CallResult(req.req_id, req.t_start_service,
+                                     req.t_done)
+        if d.telemetry is not None:
+            d.telemetry.record_call(d.wf.name, llm, req)
+        self.pending -= 1
+        if self.pending == 0:
+            d._advance(self.gen, self.rec, self.results)
 
 
 @dataclass
@@ -173,6 +201,39 @@ class RequestRecord:
             and self.done <= self.deadline
 
 
+class ArrivalSource:
+    """Generator-driven lazy arrival stream: exactly ONE pending loop
+    event (the next arrival) at any time, so a million-request ramp
+    costs O(1) heap space instead of O(N) pre-materialized events.
+
+    The underlying generator yields ``(t, rid)`` pairs drawn from the
+    *same* RNG in the *same* order as the legacy eager schedulers, so
+    lazy and eager runs see identical arrival processes (gated by an
+    equivalence test).  ``scheduled`` counts arrivals fired so far.
+    """
+
+    def __init__(self, driver: "ClusterDriver", gen, seed: int):
+        self._driver = driver
+        self._gen = gen
+        self._seed = seed
+        self.scheduled = 0
+        self.exhausted = False
+        self._arm()
+
+    def _arm(self) -> None:
+        try:
+            t, rid = next(self._gen)
+        except StopIteration:
+            self.exhausted = True
+            return
+        self._driver.loop.schedule(t, self._fire, rid)
+
+    def _fire(self, rid: int) -> None:
+        self.scheduled += 1
+        self._arm()  # keep the stream primed before running the program
+        self._driver._start(rid, self._seed)
+
+
 class ClusterDriver:
     """Drives workflow requests through routed engine replicas.
 
@@ -194,6 +255,12 @@ class ClusterDriver:
     :class:`repro.qos.slo.RequestQoS` metadata — deadline, class weight
     and the work model's remaining-work estimate — which the engines'
     queue disciplines order by.
+
+    ``sink`` (a :class:`repro.core.telemetry.StatsSink`, duck-typed)
+    switches the driver to aggregate-only accounting: ``records`` stays
+    empty and every completion feeds the sink's counters/sketches
+    instead, so memory is O(in-flight) regardless of run length.  The
+    default (no sink) keeps the exact per-request record list.
     """
 
     # handles are unique process-wide: drivers can share pooled engine
@@ -203,59 +270,114 @@ class ClusterDriver:
     def __init__(self, wf: Workflow, routers: Dict[str, Router],
                  loop: EventLoop,
                  route_map: Optional[Dict[str, str]] = None,
-                 telemetry=None, qos=None):
+                 telemetry=None, qos=None, sink=None):
         self.wf = wf
         self.routers = routers
         self.loop = loop
         self.route_map = route_map or {}
         self.telemetry = telemetry
         self.qos = qos
+        self.sink = sink
         self.records: List[RequestRecord] = []
+        self.n_started = 0
+        self.n_completed = 0
         # call handle -> full segment sequence (prompt + output) of the
         # call, kept while its workflow request is in flight so children
         # can extend it; pruned at request completion
         self._seqs: Dict[int, Tuple[Segment, ...]] = {}
         self._rec_handles: Dict[int, List[int]] = {}
+        # distinct router objects, for sticky-state pruning on completion
+        # (baseline systems may pass duck-typed routers without forget)
+        self._router_objs = [r for r in
+                             {id(r): r for r in routers.values()}.values()
+                             if hasattr(r, "forget")]
 
     def router_for(self, llm: str) -> Router:
         """The router serving a workflow-local LLM name (tenancy-aware)."""
         return self.routers[self.route_map.get(llm, llm)]
 
+    def schedule_open_loop(self, arrival_rate: float, n_requests: int, *,
+                           seed: int = 0, start: float = 0.0,
+                           rid_start: int = 0,
+                           arrival_seed: Optional[int] = None,
+                           eager: bool = False):
+        """Constant-rate Poisson arrivals, lazily generated by default
+        (one pending event; see :class:`ArrivalSource`).  ``eager=True``
+        pre-schedules every arrival (legacy behavior, O(N) pending) and
+        returns the count; otherwise returns the source.  The arrival
+        process draws from ``arrival_seed`` (default: ``seed``); request
+        programs always seed from ``seed``.
+        """
+        aseed = seed if arrival_seed is None else arrival_seed
+        if eager:
+            rng = random.Random(aseed)
+            t = start
+            for rid in range(rid_start, rid_start + n_requests):
+                self.loop.schedule(t, self._start, rid, seed)
+                t += rng.expovariate(arrival_rate)
+            return n_requests
+
+        def gen():
+            rng = random.Random(aseed)
+            t = start
+            for rid in range(rid_start, rid_start + n_requests):
+                yield t, rid
+                t += rng.expovariate(arrival_rate)
+
+        return ArrivalSource(self, gen(), seed)
+
     def run_open_loop(self, arrival_rate: float, n_requests: int, *,
-                      seed: int = 0, until: float = math.inf
-                      ) -> List[RequestRecord]:
-        rng = random.Random(seed)
-        t = 0.0
-        for rid in range(n_requests):
-            self.loop.schedule(t, lambda rid=rid: self._start(rid, seed))
-            t += rng.expovariate(arrival_rate)
+                      seed: int = 0, until: float = math.inf,
+                      eager: bool = False) -> List[RequestRecord]:
+        self.schedule_open_loop(arrival_rate, n_requests, seed=seed,
+                                eager=eager)
         self.loop.run(until)
         return [r for r in self.records if r.done >= 0]
 
     def schedule_arrivals(self, segments: Sequence[tuple], *,
                           seed: int = 0, start: float = 0.0,
-                          rid_start: int = 0) -> int:
+                          rid_start: int = 0, eager: bool = False):
         """Schedule piecewise-constant Poisson arrivals.
 
         ``segments`` is a sequence of ``(rate, duration_s)`` pairs — the
         arrival-rate *ramp* used to reproduce rate drift without
-        hardware.  Returns the number of requests scheduled; request ids
-        continue from ``rid_start``.
+        hardware.  Request ids continue from ``rid_start``.  Lazy by
+        default: returns an :class:`ArrivalSource` whose ``scheduled``
+        counter is live; ``eager=True`` pre-schedules everything and
+        returns the request count (legacy behavior).
         """
-        rng = random.Random(seed)
-        rid = rid_start
-        t_seg = start
-        for rate, duration in segments:
-            t_end = t_seg + duration
-            t = t_seg
-            while rate > 0:
-                t += rng.expovariate(rate)
-                if t >= t_end:
-                    break
-                self.loop.schedule(t, lambda rid=rid: self._start(rid, seed))
-                rid += 1
-            t_seg = t_end
-        return rid - rid_start
+        if eager:
+            rng = random.Random(seed)
+            rid = rid_start
+            t_seg = start
+            for rate, duration in segments:
+                t_end = t_seg + duration
+                t = t_seg
+                while rate > 0:
+                    t += rng.expovariate(rate)
+                    if t >= t_end:
+                        break
+                    self.loop.schedule(t, self._start, rid, seed)
+                    rid += 1
+                t_seg = t_end
+            return rid - rid_start
+
+        def gen():
+            rng = random.Random(seed)
+            rid = rid_start
+            t_seg = start
+            for rate, duration in segments:
+                t_end = t_seg + duration
+                t = t_seg
+                while rate > 0:
+                    t += rng.expovariate(rate)
+                    if t >= t_end:
+                        break
+                    yield t, rid
+                    rid += 1
+                t_seg = t_end
+
+        return ArrivalSource(self, gen(), seed)
 
     def run_ramped(self, segments: Sequence[tuple], *, seed: int = 0,
                    until: float = math.inf) -> List[RequestRecord]:
@@ -272,7 +394,11 @@ class ClusterDriver:
 
     def _start(self, rid: int, seed: int) -> None:
         rec = RequestRecord(rid, self.loop.now)
-        self.records.append(rec)
+        self.n_started += 1
+        if self.sink is None:
+            self.records.append(rec)
+        else:
+            self.sink.observe_arrival(self.wf.name, self.loop.now)
         if self.telemetry is not None:
             self.telemetry.record_arrival(self.wf.name, self.loop.now)
         if self.qos is not None:
@@ -284,6 +410,8 @@ class ClusterDriver:
                     self.wf.name, self.loop.now)
                 if decision == "reject":
                     rec.rejected = True
+                    if self.sink is not None:
+                        self.sink.observe_reject(self.wf.name)
                     if self.telemetry is not None and \
                             hasattr(self.telemetry, "record_shed"):
                         self.telemetry.record_shed(
@@ -292,6 +420,8 @@ class ClusterDriver:
                 if decision == "degrade":
                     rec.degraded = True
                     rec.deadline = math.inf
+                    if self.sink is not None:
+                        self.sink.observe_degrade(self.wf.name)
                     if self.telemetry is not None and \
                             hasattr(self.telemetry, "record_shed"):
                         self.telemetry.record_shed(
@@ -305,30 +435,24 @@ class ClusterDriver:
             group = next(gen) if send_val is None else gen.send(send_val)
         except StopIteration:
             rec.done = self.loop.now
+            self.n_completed += 1
             for h in self._rec_handles.pop(rec.request_id, []):
                 self._seqs.pop(h, None)
+            for router in self._router_objs:
+                router.forget(rec.request_id)
+            if self.sink is not None:
+                self.sink.observe(self.wf.name, rec)
             if self.telemetry is not None:
                 self.telemetry.record_request_done(self.wf.name, rec)
             return
         if isinstance(group, Tool):
             self.loop.schedule(self.loop.now + group.seconds,
-                               lambda: self._advance(gen, rec, []))
+                               self._advance, gen, rec, [])
             return
         calls: Sequence[Call] = group
-        pending = [len(calls)]
-        results: List[Optional[CallResult]] = [None] * len(calls)
-
+        join = _GroupJoin(self, gen, rec, len(calls))
         for i, c in enumerate(calls):
             h = next(ClusterDriver._uid)
-
-            def on_done(req: EngineRequest, i=i, h=h, c=c):
-                results[i] = CallResult(h, req.t_start_service, req.t_done)
-                if self.telemetry is not None:
-                    self.telemetry.record_call(self.wf.name, c.llm, req)
-                pending[0] -= 1
-                if pending[0] == 0:
-                    self._advance(gen, rec, results)
-
             out_tokens = max(c.output_tokens, 1)
             prefix, truth = self._prefix_for(h, c)
             self._seqs[h] = prefix + (output_segment(h, out_tokens),)
@@ -336,7 +460,8 @@ class ClusterDriver:
             req = EngineRequest(
                 req_id=h, prompt_tokens=c.prompt_tokens,
                 output_tokens=out_tokens, arrival=self.loop.now,
-                on_complete=on_done, parent_id=c.parent,
+                on_complete=partial(join.done, i, c.llm),
+                parent_id=c.parent,
                 workflow_request=rec.request_id,
                 prefix=prefix, true_prefix=truth,
                 qos=self._request_qos(rec, c.llm))

@@ -381,8 +381,11 @@ def test_schedule_arrivals_segments_and_ramp():
     wf = Workflow("noop", prog, {})
     loop = EventLoop()
     drv = ClusterDriver(wf, {}, loop)
-    n = drv.schedule_arrivals([(5.0, 10.0), (10.0, 10.0)], seed=1)
+    src = drv.schedule_arrivals([(5.0, 10.0), (10.0, 10.0)], seed=1)
+    assert loop.pending == 1  # lazy: only the next arrival is queued
     loop.run(math.inf)
+    n = src.scheduled
+    assert src.exhausted
     assert n == len(drv.records) and n > 0
     arrivals = sorted(r.arrival for r in drv.records)
     assert arrivals[-1] < 20.0
@@ -390,6 +393,15 @@ def test_schedule_arrivals_segments_and_ramp():
     seg2 = n - seg1
     assert 20 <= seg1 <= 90
     assert seg2 > seg1  # the ramped segment is denser
+    # the eager path schedules the same process upfront
+    loop2 = EventLoop()
+    drv2 = ClusterDriver(wf, {}, loop2)
+    n2 = drv2.schedule_arrivals([(5.0, 10.0), (10.0, 10.0)], seed=1,
+                                eager=True)
+    assert n2 == n and loop2.pending == n
+    loop2.run(math.inf)
+    assert [r.arrival for r in drv2.records] \
+        == [r.arrival for r in drv.records]
 
 
 def test_cluster_driver_feeds_telemetry():

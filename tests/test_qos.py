@@ -139,7 +139,8 @@ def test_wfq_served_tokens_track_weights_under_overload():
     while eng.waiting and min(
             sum(1 for r in eng.waiting if r.qos.tenant == t)
             for t in ("a", "b")) > 4:
-        loop.run(until=loop._heap[0][0] if loop._heap else math.inf)
+        nxt = loop.peek_time()
+        loop.run(until=nxt if nxt is not None else math.inf)
     served = {"a": 0.0, "b": 0.0}
     for r in eng.done:
         served[r.qos.tenant] += request_cost(r)
