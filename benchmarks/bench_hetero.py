@@ -1,0 +1,489 @@
+"""Heterogeneous chip classes + just-in-time model substitution.
+
+Part A — **class-aware vs class-blind** on a mixed cluster (v5p +
+v5e + v4i host groups):
+
+* class-aware: each LLM is profiled per ``(chip_class, tp)``, the
+  scheduler assigns every allocation a chip class from per-class unit
+  budgets, and placement binds instances to compatible host groups —
+  the big-HBM chips end up holding the models that only fit there;
+* class-blind: the same chips flattened to ONE averaged class
+  (:func:`repro.hw.blend_classes`) — the scheduler plans against the
+  blend, allocations carry no bindings, and the packer drops replicas
+  wherever they land.  Replicas run at the class of the chip they
+  landed on, so a big model packed onto a small-HBM chip pays the real
+  penalty (KV capacity collapses to ~nothing).
+
+Both plans are driven on the SAME physical mixed cluster with the same
+arrival streams; ``fleet_welfare`` is the egalitarian min over
+workflows of goodput/target.
+
+Part B — **JIT substitution under an overload burst** (bench_qos-style
+pooled fleet): the batch-class workflows' rates multiply for a window;
+``shed`` runs plain admission control (reject/degrade), ``substitute``
+additionally re-prices over-deadline arrivals against the substitute
+tier's replicas (``ArchConfig.substitute``) and reroutes them there at
+their own SLO class.  The report carries per-workflow and per-SLO-class
+substitution rates, and feeds the observed rates back into
+:meth:`MergedPipeline.with_substitution` to show the share shift.
+
+``acceptance``: class-aware strictly beats class-blind on fleet
+welfare, and substitution recovers goodput vs plain shedding.  JSON
+schema is documented in benchmarks/README.md; ``--smoke`` is the tiny
+CI mode (schema-identical).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import statistics
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import cluster_for
+from repro import hw
+from repro.core.pipeline import merge_pipelines
+from repro.core.placement import PlacementError, place_fleet
+from repro.core.scepsy import (_resolve_qos, _spec_chip_classes,
+                               build_pipeline, deploy_multi)
+from repro.core.scheduler import SchedulerConfig, schedule_multi
+from repro.qos.admission import fleet_admission
+from repro.qos.slo import WorkflowQoS
+from repro.serving.deploy import (fleet_routers_from_placement,
+                                  pooled_fleet_routers, tenant_routers)
+from repro.serving.simulator import EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver
+
+
+def _settings(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return {
+            "mode": "smoke",
+            # Part A: mixed cluster
+            "groups": (("v5p", 1, 4), ("v5e", 2, 4), ("v4i", 2, 4)),
+            "hetero_lams": {"rag_reranker": 0.8, "react_agent": 5.5},
+            "t_run": 120.0,
+            "drain": 600.0,
+            "n_trace": 8,
+            "profile_groups": 6,
+            # Part B: substitution burst (uniform pooled fleet)
+            "sub_chips": 8,
+            "sub_lams": {"react_agent": 1.0, "map_reduce": 0.8,
+                         "debate": 1.6},
+            "burst": {"map_reduce": 10.0, "debate": 12.0},
+            "t_warm": 30.0,
+            "t_burst": 90.0,
+            "t_tail": 30.0,
+            "sub_drain": 600.0,
+        }
+    return {
+        "mode": "quick" if quick else "full",
+        "groups": (("v5p", 2, 4), ("v5e", 4, 4), ("v4i", 2, 4)),
+        "hetero_lams": {"rag_reranker": 1.3, "react_agent": 8.8},
+        "t_run": 200.0 if quick else 400.0,
+        "drain": 1200.0,
+        "n_trace": 12 if quick else 30,
+        "profile_groups": 10 if quick else 30,
+        "sub_chips": 16,
+        "sub_lams": {"react_agent": 1.5, "map_reduce": 1.2, "debate": 2.4},
+        "burst": {"map_reduce": 10.0, "debate": 12.0},
+        "t_warm": 40.0,
+        "t_burst": 150.0 if quick else 300.0,
+        "t_tail": 40.0,
+        "sub_drain": 1200.0,
+    }
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+
+def _workflow_metrics(drv: ClusterDriver, slo, horizon: float) -> dict:
+    recs = drv.records
+    done = [r for r in recs if r.done >= 0]
+    lats = [r.latency for r in done]
+    met = sum(1 for r in done if r.slo_met)
+    return {
+        "slo_class": slo.name if slo else "",
+        "arrived": len(recs),
+        "completed": len(done),
+        "rejected": sum(1 for r in recs if r.rejected),
+        "degraded": sum(1 for r in recs if r.degraded),
+        "substituted": sum(1 for r in recs if r.substituted),
+        "slo_met": met,
+        "goodput_rps": met / horizon,
+        "mean_latency_s": statistics.mean(lats) if lats else 0.0,
+        "p50_latency_s": _percentile(lats, 0.50),
+        "p99_latency_s": _percentile(lats, 0.99),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Part A: class-aware vs class-blind on a mixed cluster
+# ---------------------------------------------------------------------------
+
+
+def _hetero_spec(s) -> hw.ClusterSpec:
+    return hw.hetero_cluster([
+        hw.HostGroup(num_hosts=n, chips_per_host=c, chip_class=cls)
+        for cls, n, c in s["groups"]
+    ])
+
+
+def _blend_spec(s) -> hw.ClusterSpec:
+    """The same chips flattened to one averaged class."""
+    parts = [(hw.chip_class(cls), n * c) for cls, n, c in s["groups"]]
+    blend = hw.blend_classes(parts, name="hetero-blend")
+    hw.register_chip_class(blend)
+    cph = max(c for _, _, c in s["groups"])
+    hosts = sum(n for _, n, _ in s["groups"])
+    return hw.hetero_cluster(
+        [hw.HostGroup(num_hosts=hosts, chips_per_host=cph,
+                      chip_class=blend.name)])
+
+
+def _plan_fleet(wfs, lams, plan_spec, s, seed):
+    """Profile per plan_spec's chip classes + partitioned schedule."""
+    # placement-aware split search: on a mixed cluster the per-workflow
+    # sub-cluster slices all start at group 0, so class-bound plans can
+    # jointly overcommit a scarce class — the placement probe rejects
+    # those splits and steers the search to ones that really deploy
+    cfg = SchedulerConfig(max_tp=plan_spec.hb_domain_size,
+                          placement_aware=True)
+    pipelines, stats = {}, {}
+    for name, wf in wfs.items():
+        pipe, st, _ = build_pipeline(
+            wf, n_trace_requests=s["n_trace"],
+            max_profile_groups=s["profile_groups"], seed=seed,
+            chip_classes=_spec_chip_classes(plan_spec))
+        pipelines[name] = pipe
+        stats[name] = st
+    multi = schedule_multi(pipelines, plan_spec, lams, cfg,
+                           mode="partitioned")
+    qos = {}
+    for name, wf in wfs.items():
+        q = _resolve_qos(wf, pipelines[name], stats[name])
+        if q is not None:
+            qos[name] = q
+    return pipelines, multi, qos
+
+
+def _drive_hetero(wfs, placement, qos_by, lams, s, seed) -> dict:
+    loop = EventLoop()
+    per_wf = fleet_routers_from_placement(wfs, placement, loop)
+    run_qos = {n: WorkflowQoS(slo=q.slo, work=q.work)
+               for n, q in qos_by.items()}
+    drivers: Dict[str, ClusterDriver] = {}
+    for k, name in enumerate(sorted(wfs)):
+        drv = ClusterDriver(wfs[name], per_wf[name], loop,
+                            qos=run_qos.get(name))
+        drv.schedule_arrivals([(lams[name], s["t_run"])],
+                              seed=seed * 1000 + k)
+        drivers[name] = drv
+    loop.run(s["t_run"] + s["drain"])
+    per = {name: _workflow_metrics(
+        drv, qos_by[name].slo if name in qos_by else None, s["t_run"])
+        for name, drv in drivers.items()}
+    # egalitarian welfare over per-workflow SLO attainment (met/arrived):
+    # normalizing by observed arrivals, not the nominal rate, keeps
+    # Poisson undersampling of a light workflow out of the comparison
+    welfare = min(m["slo_met"] / max(m["arrived"], 1)
+                  for m in per.values())
+    return {"per_workflow": per, "fleet_welfare": welfare}
+
+
+def _alloc_row(a) -> dict:
+    return {"replicas": a.replicas, "tp": a.tp, "fraction": a.fraction,
+            "chip_class": a.chip_class}
+
+
+def run_hetero_part(s, seed: int) -> dict:
+    wfs = {n: get_workflow(n) for n in s["hetero_lams"]}
+    lams = s["hetero_lams"]
+    spec = _hetero_spec(s)
+    blind_spec = _blend_spec(s)
+
+    t0 = time.perf_counter()
+    _, multi_a, qos_a = _plan_fleet(wfs, lams, spec, s, seed)
+    aware_plan_s = time.perf_counter() - t0
+    allocs_a = {n: r.allocations for n, r in multi_a.per_workflow.items()}
+    placement_a = place_fleet(allocs_a, spec)
+    aware = _drive_hetero(wfs, placement_a, qos_a, lams, s, seed)
+
+    t0 = time.perf_counter()
+    _, multi_b, qos_b = _plan_fleet(wfs, lams, blind_spec, s, seed)
+    blind_plan_s = time.perf_counter() - t0
+    # strip the blend bindings: the blind plan places class-free on the
+    # REAL mixed cluster and runs at whatever class each chip really is
+    allocs_b = {
+        n: {m: dataclasses.replace(a, chip_class=None)
+            for m, a in r.allocations.items()}
+        for n, r in multi_b.per_workflow.items()
+    }
+    blind_placement_error: Optional[str] = None
+    try:
+        placement_b = place_fleet(allocs_b, spec)
+        blind = _drive_hetero(wfs, placement_b, qos_b, lams, s, seed)
+    except PlacementError as e:
+        blind_placement_error = str(e)
+        blind = {"per_workflow": {}, "fleet_welfare": 0.0}
+
+    table = spec.chip_table()
+
+    def _landed(placement) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for inst in placement.instances:
+            cls = table[inst.chips[0]][2]
+            out[cls] = out.get(cls, 0) + 1
+        return out
+
+    return {
+        "cluster": {
+            "host_groups": [{"chip_class": cls, "num_hosts": n,
+                             "chips_per_host": c}
+                            for cls, n, c in s["groups"]],
+            "num_chips": spec.num_chips,
+            "classes": list(spec.classes()),
+        },
+        "lam_targets": lams,
+        "class_aware": {
+            "plan_time_s": aware_plan_s,
+            "planned_welfare": multi_a.welfare,
+            "allocations": {
+                n: {m: _alloc_row(a) for m, a in allocs.items()}
+                for n, allocs in allocs_a.items()},
+            "instances_by_class": _landed(placement_a),
+            **aware,
+        },
+        "class_blind": {
+            "plan_time_s": blind_plan_s,
+            "planned_welfare": multi_b.welfare,
+            "blend_class": {
+                "hbm_gib": hw.chip_class("hetero-blend").hbm_bytes / 2**30,
+                "peak_tflops": hw.chip_class(
+                    "hetero-blend").peak_flops_bf16 / 1e12,
+            },
+            "allocations": {
+                n: {m: _alloc_row(a) for m, a in allocs.items()}
+                for n, allocs in allocs_b.items()},
+            "instances_by_class": (_landed(placement_b)
+                                   if blind_placement_error is None else {}),
+            "placement_error": blind_placement_error,
+            **blind,
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Part B: JIT substitution under an overload burst
+# ---------------------------------------------------------------------------
+
+_SUB_KEY = "~sub:{}"  # router-dict key for a substitute tenant route
+
+
+def _substitute_maps(wfs, tenants) -> Dict[str, Dict[str, str]]:
+    """workflow -> local llm name -> substitute tenant's canonical id
+    (only for substitutes that actually have deployed replicas)."""
+    out: Dict[str, Dict[str, str]] = {}
+    for name, wf in wfs.items():
+        m = {}
+        for local, cfg in wf.llms.items():
+            sub = cfg.substitute
+            if sub and sub != cfg.name and sub in tenants:
+                m[local] = sub
+        if m:
+            out[name] = m
+    return out
+
+
+def _drive_sub(wfs, qos_by, pooled, s, seed: int, *,
+               substitution: bool) -> dict:
+    loop = EventLoop()
+    tenants = tenant_routers(pooled.allocations, pooled.cfgs, loop,
+                             discipline="priority",
+                             members=pooled.members, routing=pooled.routing)
+    per_wf = pooled_fleet_routers(tenants, pooled.members, pooled.routing)
+    sub_maps: Dict[str, Dict[str, str]] = {}
+    sub_routers: Dict[str, Dict[str, object]] = {}
+    if substitution:
+        for name, m in _substitute_maps(wfs, tenants).items():
+            keyed = {}
+            for local, sub in m.items():
+                key = _SUB_KEY.format(sub)
+                per_wf[name][key] = tenants[sub]
+                keyed[local] = key
+                sub_routers.setdefault(name, {})[local] = tenants[sub]
+            sub_maps[name] = keyed
+    run_qos = {n: WorkflowQoS(slo=q.slo, work=q.work)
+               for n, q in qos_by.items()}
+    ctrl = fleet_admission(run_qos, per_wf,
+                           substitutes=sub_routers if substitution else None)
+    drivers: Dict[str, ClusterDriver] = {}
+    for k, name in enumerate(sorted(wfs)):
+        drv = ClusterDriver(wfs[name], per_wf[name], loop,
+                            qos=run_qos.get(name),
+                            substitute_map=sub_maps.get(name))
+        lam = s["sub_lams"][name]
+        factor = s["burst"].get(name, 1.0)
+        drv.schedule_arrivals(
+            [(lam, s["t_warm"]), (lam * factor, s["t_burst"]),
+             (lam, s["t_tail"])],
+            seed=seed * 1000 + k)
+        drivers[name] = drv
+    horizon = s["t_warm"] + s["t_burst"] + s["t_tail"]
+    loop.run(horizon + s["sub_drain"])
+    per = {name: _workflow_metrics(
+        drv, qos_by[name].slo if name in qos_by else None, horizon)
+        for name, drv in drivers.items()}
+    return {
+        "per_workflow": per,
+        "total_goodput_rps": sum(m["goodput_rps"] for m in per.values()),
+        "controller": ctrl.stats(),
+        "substitution_rates": ctrl.substitution_rates(),
+        "sub_maps": sub_maps,
+    }
+
+
+def run_substitution_part(s, seed: int) -> dict:
+    lams = s["sub_lams"]
+    wfs = {n: get_workflow(n) for n in lams}
+    spec = cluster_for(s["sub_chips"])
+
+    dep = deploy_multi(list(wfs.values()), spec, lams,
+                       scheduler_config=SchedulerConfig(max_tp=2),
+                       mode="pooled", n_trace_requests=s["n_trace"],
+                       max_profile_groups=s["profile_groups"], seed=seed)
+    pooled = dep.schedule.pooled
+    qos_by = dep.qos
+
+    shed = _drive_sub(wfs, qos_by, pooled, s, seed, substitution=False)
+    sub = _drive_sub(wfs, qos_by, pooled, s, seed, substitution=True)
+
+    # per-SLO-class substitution rates
+    by_class: Dict[str, dict] = {}
+    for name, m in sub["per_workflow"].items():
+        cls = m["slo_class"] or "unclassified"
+        row = by_class.setdefault(cls, {"arrived": 0, "substituted": 0})
+        row["arrived"] += m["arrived"]
+        row["substituted"] += m["substituted"]
+    for row in by_class.values():
+        row["substitution_rate"] = (row["substituted"] / row["arrived"]
+                                    if row["arrived"] else 0.0)
+
+    # feed observed rates back into the merged pipeline's attribution:
+    # per-tenant rate = substituted/arrived over the workflows whose
+    # substitute map moves calls off that tenant
+    tenant_rates: Dict[str, float] = {}
+    for cid in pooled.allocations:
+        arrived = substituted = 0
+        for name, m in sub["sub_maps"].items():
+            moved = {wfs[name].llms[local].name for local in m}
+            if cid in moved:
+                arrived += sub["per_workflow"][name]["arrived"]
+                substituted += sub["per_workflow"][name]["substituted"]
+        if arrived:
+            tenant_rates[cid] = substituted / arrived
+    merged = merge_pipelines(
+        {n: dep.deployments[n].pipeline for n in wfs}, lams)
+    resub = merged.with_substitution(tenant_rates)
+    share_shift = {
+        cid: {
+            "before_n": merged.stages[cid].n if cid in merged.stages else 0.0,
+            "after_n": resub.stages[cid].n if cid in resub.stages else 0.0,
+        }
+        for cid in sorted(set(merged.stages) | set(resub.stages))
+    }
+
+    return {
+        "cluster_chips": spec.num_chips,
+        "lam_targets": lams,
+        "burst": s["burst"],
+        "phases_s": {"warm": s["t_warm"], "burst": s["t_burst"],
+                     "tail": s["t_tail"]},
+        "tenants": {cid: _alloc_row(a)
+                    for cid, a in pooled.allocations.items()},
+        "substitute_tiers": {
+            name: {local: wfs[name].llms[local].substitute
+                   for local in m}
+            for name, m in _substitute_maps(
+                wfs, pooled.allocations).items()},
+        "shed_only": {k: v for k, v in shed.items() if k != "sub_maps"},
+        "substitution": {k: v for k, v in sub.items() if k != "sub_maps"},
+        "per_class_substitution": by_class,
+        "goodput_recovered_rps": (sub["total_goodput_rps"]
+                                  - shed["total_goodput_rps"]),
+        "attribution_share_shift": share_shift,
+    }
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    s = _settings(quick, smoke)
+
+    hetero = run_hetero_part(s, seed)
+    substitution = run_substitution_part(s, seed)
+
+    acceptance = {
+        "class_aware_beats_class_blind": (
+            hetero["class_aware"]["fleet_welfare"]
+            > hetero["class_blind"]["fleet_welfare"]),
+        "substitution_recovers_goodput": (
+            substitution["goodput_recovered_rps"] > 0.0),
+        "substitution_observed": any(
+            m["substituted"] > 0
+            for m in substitution["substitution"]["per_workflow"].values()),
+        "substitution_never_upgrades_class": all(
+            m["slo_class"] == substitution["shed_only"]
+            ["per_workflow"][n]["slo_class"]
+            for n, m in substitution["substitution"]
+            ["per_workflow"].items()),
+    }
+
+    doc = {
+        "benchmark": "hetero_serving",
+        "mode": s["mode"],
+        "seed": seed,
+        "config": {
+            "hetero_groups": [list(g) for g in s["groups"]],
+            "hetero_lams": s["hetero_lams"],
+            "sub_chips": s["sub_chips"],
+            "sub_lams": s["sub_lams"],
+            "burst": s["burst"],
+        },
+        "hetero": hetero,
+        "substitution": substitution,
+        "acceptance": acceptance,
+    }
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true", help="full-size sweeps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (schema-identical)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for all phases")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report here")
+    args = ap.parse_args()
+    run(quick=not args.full, smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,11 +16,12 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_ablation, bench_combined, bench_drift,
-                            bench_e2e, bench_kernels, bench_multi_workflow,
-                            bench_multiplexing, bench_pipeline_accuracy,
-                            bench_placement, bench_prefix, bench_qos,
-                            bench_roofline, bench_scale, bench_scheduler,
-                            bench_stability, bench_workflow_aware)
+                            bench_e2e, bench_hetero, bench_kernels,
+                            bench_multi_workflow, bench_multiplexing,
+                            bench_pipeline_accuracy, bench_placement,
+                            bench_prefix, bench_qos, bench_roofline,
+                            bench_scale, bench_scheduler, bench_stability,
+                            bench_workflow_aware)
 
     sections = [
         ("fig3_stability", bench_stability),
@@ -34,6 +35,7 @@ def main() -> None:
         ("drift_rescheduling", bench_drift),
         ("qos_scheduling", bench_qos),
         ("prefix_serving", bench_prefix),
+        ("hetero_serving", bench_hetero),
         ("placement_aware", bench_placement),
         ("scale_event_core", bench_scale),
         ("pipeline_accuracy", bench_pipeline_accuracy),

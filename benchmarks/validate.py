@@ -43,6 +43,12 @@ REQUIRED = {
         "summary",
         "acceptance",
     ),
+    "hetero_serving": (
+        "config",
+        "hetero",
+        "substitution",
+        "acceptance",
+    ),
     "prefix_serving": (
         "config",
         "savings",

@@ -91,6 +91,11 @@ class ArchConfig:
     sliding_window: int = 0  # 0 = full attention
     full_attn_layers: Tuple[int, ...] = ()  # hybrid: layers w/ global attention
 
+    # --- quality tiers (just-in-time model substitution) ---
+    # name of the next-smaller zoo tier admission may substitute this
+    # model with under overload (e.g. 9B -> 7B -> 3B); None = no tier
+    substitute: Optional[str] = None
+
     # --- provenance ---
     source: str = ""
 

@@ -12,5 +12,6 @@ CONFIG = ArchConfig(
     vocab_size=151_552,
     activation="swiglu",
     rope_theta=10_000.0,
+    substitute="qwen2-7b",  # quality tier below (JIT substitution)
     source="hf:THUDM/glm-4-9b; hf",
 )

@@ -38,6 +38,7 @@ LLAMA_3_1_8B = ArchConfig(
     vocab_size=128_256,
     activation="swiglu",
     rope_theta=500_000.0,
+    substitute="qwen2.5-3b-agent",  # quality tier below (JIT substitution)
     source="hf:meta-llama/Llama-3.1-8B",
 )
 
@@ -99,6 +100,7 @@ QWEN_2_5_3B_AGENT = ArchConfig(
     activation="swiglu",
     rope_theta=1_000_000.0,
     tie_embeddings=True,
+    substitute="llama-3.2-1b",  # quality tier below (JIT substitution)
     source="hf:Qwen/Qwen2.5-3B-Instruct",
 )
 

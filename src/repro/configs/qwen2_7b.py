@@ -13,5 +13,6 @@ CONFIG = ArchConfig(
     activation="swiglu",
     qkv_bias=True,
     rope_theta=1_000_000.0,
+    substitute="qwen2.5-3b",  # quality tier below (JIT substitution)
     source="arXiv:2407.10671; hf",
 )

@@ -21,9 +21,10 @@ latency/throughput is attributed back out of the shared allocation
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.configs.base import ArchConfig
 from repro.core.aggregate import WorkflowStats
@@ -42,11 +43,18 @@ def canonical_llm_id(cfg: ArchConfig) -> str:
 
 @dataclass(frozen=True)
 class Allocation:
-    """Scheduler decision for one LLM."""
+    """Scheduler decision for one LLM.
+
+    ``chip_class`` binds the replicas to one chip class on a
+    heterogeneous cluster (``None`` = any / the uniform default class);
+    placement refuses to put a class-bound instance on another class's
+    chips.
+    """
 
     replicas: int = 1
     tp: int = 1
     fraction: float = 1.0  # per-replica chip share (tp chips x fraction)
+    chip_class: Optional[str] = None
 
     @property
     def chip_units(self) -> float:
@@ -108,12 +116,13 @@ class AggregateLLMPipeline:
             per_replica_rate = lam_w * st.n / max(a.replicas, 1)
             lm = st.profile.latency(per_replica_rate, a.tp,
                                     fraction=a.fraction,
-                                    percentile=percentile)
+                                    percentile=percentile,
+                                    chip_class=a.chip_class)
             contrib = lm * st.n / max(st.p, 1.0)
             per_llm[m] = contrib
             total_latency += contrib
-            tm = (a.replicas * st.profile.max_throughput(a.tp,
-                                                         fraction=a.fraction)
+            tm = (a.replicas * st.profile.max_throughput(
+                      a.tp, fraction=a.fraction, chip_class=a.chip_class)
                   / st.n)
             if tm < t_w:
                 t_w, bottleneck = tm, m
@@ -193,13 +202,21 @@ class MergedLLMProfile:
                 f"{llm}: member profiles share no TP degree")
         self.by_tp = {tp: tp for tp in sorted(common)}
 
-    def tps(self) -> List[int]:
+    def tps(self, chip_class: Optional[str] = None) -> List[int]:
         return sorted(self.by_tp)
 
-    def max_throughput(self, tp: int, *, fraction: float = 1.0) -> float:
+    def classes(self) -> List[str]:
+        """Chip classes every member profiled (intersection)."""
+        common = set(self.members[0].profile.classes())
+        for m in self.members[1:]:
+            common &= set(m.profile.classes())
+        return sorted(common)
+
+    def max_throughput(self, tp: int, *, fraction: float = 1.0,
+                       chip_class: Optional[str] = None) -> float:
         inv = 0.0
         for phi, m in zip(self.phi, self.members):
-            t = m.profile.max_throughput(tp)
+            t = m.profile.max_throughput(tp, chip_class=chip_class)
             if t <= 0:
                 return 0.0
             inv += phi / t
@@ -207,24 +224,28 @@ class MergedLLMProfile:
 
     def member_latency(self, idx: int, rate: float, tp: int, *,
                        fraction: float = 1.0,
-                       percentile: str = "mean") -> float:
+                       percentile: str = "mean",
+                       chip_class: Optional[str] = None) -> float:
         """Latency of member ``idx``'s calls on a shared replica serving
         the whole mix at per-replica call rate ``rate``."""
         if fraction <= 0:
             return math.inf
-        t_mix = self.max_throughput(tp)
+        t_mix = self.max_throughput(tp, chip_class=chip_class)
         if not math.isfinite(t_mix) or t_mix <= 0:
             return math.inf
         rho = (rate / fraction) / t_mix
         m = self.members[idx]
-        equiv = rho * m.profile.max_throughput(tp)
+        equiv = rho * m.profile.max_throughput(tp, chip_class=chip_class)
         return m.profile.latency(equiv * fraction, tp, fraction=fraction,
-                                 percentile=percentile)
+                                 percentile=percentile,
+                                 chip_class=chip_class)
 
     def latency(self, rate: float, tp: int, *, fraction: float = 1.0,
-                percentile: str = "mean") -> float:
+                percentile: str = "mean",
+                chip_class: Optional[str] = None) -> float:
         return sum(phi * self.member_latency(i, rate, tp, fraction=fraction,
-                                             percentile=percentile)
+                                             percentile=percentile,
+                                             chip_class=chip_class)
                    for i, phi in enumerate(self.phi))
 
 
@@ -287,7 +308,8 @@ class MergedPipeline(AggregateLLMPipeline):
             prof: MergedLLMProfile = self.stages[cid].profile
             r = sum(t.call_rate for t in mem) / max(a.replicas, 1)
             rate[cid] = r
-            cap = prof.max_throughput(a.tp, fraction=a.fraction)
+            cap = prof.max_throughput(a.tp, fraction=a.fraction,
+                                      chip_class=a.chip_class)
             rho[cid] = math.inf if cap <= 0 else r / cap
         for w in self.workflows():
             lam_w = self.lam_targets[w]
@@ -302,7 +324,8 @@ class MergedPipeline(AggregateLLMPipeline):
                     idx = prof.members.index(t)
                     lm = prof.member_latency(idx, rate[cid], a.tp,
                                              fraction=a.fraction,
-                                             percentile=percentile)
+                                             percentile=percentile,
+                                             chip_class=a.chip_class)
                     contrib = lm * t.n / max(t.p, 1.0)
                     per_llm[t.llm] = contrib
                     total_lat += contrib
@@ -310,7 +333,8 @@ class MergedPipeline(AggregateLLMPipeline):
                         dom_lat, dominant = contrib, t.llm
                     # scaling headroom: κ = 1 + spare / own share of load
                     own = t.call_rate / max(a.replicas, 1)
-                    cap = prof.max_throughput(a.tp, fraction=a.fraction)
+                    cap = prof.max_throughput(a.tp, fraction=a.fraction,
+                                              chip_class=a.chip_class)
                     spare = cap - rate[cid]
                     if own <= 0:
                         cap_w = math.inf
@@ -325,6 +349,66 @@ class MergedPipeline(AggregateLLMPipeline):
                                 latency_dominant_llm=dominant,
                                 per_llm_latency=per_llm)
         return out
+
+    # -- substitution feedback ---------------------------------------
+
+    def with_substitution(self, rates: Dict[str, float]) -> "MergedPipeline":
+        """Re-merge with observed just-in-time substitution rates.
+
+        ``rates`` maps a canonical model id to the observed fraction of
+        its calls the admission layer rerouted to the model's
+        ``ArchConfig.substitute``.  Each affected tenant member's call
+        volume is split: ``(1 - r)`` stays on the original tenant and
+        ``r`` moves to the substitute tenant (labelled ``<stage>~sub``),
+        so share attribution, pooled re-planning and routing-weight
+        rebalances all see the real serving mix rather than the planned
+        one.  Substitution only targets models already served in the
+        fleet; rates for tenants whose substitute has no replicas (no
+        stage in this pipeline) are ignored, mirroring the admission
+        controller, which never substitutes toward a model with no
+        routable replicas.
+        """
+        tenants: Dict[str, List[TenantMember]] = {
+            cid: list(mem) for cid, mem in self.tenants.items()}
+        cfgs = {cid: self.stages[cid].cfg for cid in self.stages}
+        shares = {cid: self.stages[cid].mean_share for cid in self.stages}
+        for cid in sorted(rates):
+            r = min(max(rates[cid], 0.0), 1.0)
+            if r <= 0 or cid not in self.tenants:
+                continue
+            sub = cfgs[cid].substitute
+            if not sub or sub not in self.stages:
+                continue
+            sub_prof = self.stages[sub].profile
+            moved: List[TenantMember] = []
+            kept: List[TenantMember] = []
+            for t in self.tenants[cid]:
+                kept.append(dataclasses.replace(t, n=t.n * (1.0 - r)))
+                moved.append(TenantMember(
+                    workflow=t.workflow, llm=t.llm + "~sub",
+                    n=t.n * r, p=t.p, profile=sub_prof, lam=t.lam))
+            tenants[cid] = kept
+            tenants[sub] = tenants.get(sub, []) + moved
+        stages: List[PipelineStage] = []
+        out_tenants: Dict[str, List[TenantMember]] = {}
+        for cid in sorted(tenants):
+            mem = sorted([t for t in tenants[cid] if t.n > 0],
+                         key=lambda t: (t.workflow, t.llm))
+            if not mem:
+                continue
+            prof = MergedLLMProfile(cid, mem)
+            total_rate = sum(t.call_rate for t in mem)
+            n_eff = (total_rate / self.lam_total if self.lam_total > 0
+                     else sum(t.n for t in mem))
+            np_eff = sum((t.lam / self.lam_total if self.lam_total > 0
+                          else 1.0 / len(mem))
+                         * t.n / max(t.p, 1.0) for t in mem)
+            p_eff = n_eff / np_eff if np_eff > 0 else 1.0
+            stages.append(PipelineStage(
+                llm=cid, cfg=cfgs[cid], n=n_eff, p=p_eff, profile=prof,
+                mean_share=shares[cid]))
+            out_tenants[cid] = mem
+        return MergedPipeline(stages, out_tenants, self.lam_targets)
 
     def routing_weights(self, alloc: Dict[str, Allocation], *,
                         policy: str = "uniform"

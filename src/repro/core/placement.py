@@ -97,6 +97,7 @@ class Chip:
     index: int  # global chip id
     free_units: int
     owner: Optional[str] = None  # workflow owning this chip (fleet packs)
+    chip_class: str = ""  # hw.ChipClass name (heterogeneous clusters)
 
     def used(self, total: int) -> int:
         return total - self.free_units
@@ -111,6 +112,8 @@ class PlacedInstance:
     units_per_chip: int
     host: int
     domain: int
+    # the Allocation's requested chip class; None = any (uniform cluster)
+    chip_class: Optional[str] = None
 
 
 @dataclass
@@ -124,19 +127,32 @@ class Placement:
 
     def validate(self) -> None:
         F = self.spec.fractions_per_chip
+        table = self.spec.chip_table()
         used: Dict[int, int] = {}
         for inst in self.instances:
             if inst.tp > self.spec.hb_domain_size:
                 raise PlacementError(
                     f"{inst.llm}: TP {inst.tp} exceeds hb domain "
                     f"{self.spec.hb_domain_size}")
-            domains = set()
+            domains, classes = set(), set()
             for c in inst.chips:
                 used[c] = used.get(c, 0) + inst.units_per_chip
-                domains.add(c // self.spec.hb_domain_size)
+                if c < len(table):
+                    domains.add(table[c][1])
+                    classes.add(table[c][2])
+                else:  # chip id beyond spec (externally built placement)
+                    domains.add(c // self.spec.hb_domain_size)
             if inst.tp > 1 and len(domains) != 1:
                 raise PlacementError(
                     f"{inst.llm}: TP instance spans domains {domains}")
+            if len(classes) > 1:
+                raise PlacementError(
+                    f"{inst.llm}: instance spans chip classes {classes}")
+            if inst.chip_class is not None and classes and \
+                    classes != {inst.chip_class}:
+                raise PlacementError(
+                    f"{inst.llm}: bound to class {inst.chip_class!r} but "
+                    f"placed on {classes}")
         for c, u in used.items():
             if u > F:
                 raise PlacementError(f"chip {c} oversubscribed: {u}/{F}")
@@ -192,10 +208,19 @@ class Placement:
                     / self.spec.fractions_per_chip,
                     "host": i.host,
                     "hb_domain": i.domain,
+                    **({"chip_class": i.chip_class}
+                       if i.chip_class is not None else {}),
                 }
                 for i in self.instances
             ],
         }
+        if self.spec.host_groups:
+            doc["cluster"]["host_groups"] = [
+                {"num_hosts": g.num_hosts,
+                 "chips_per_host": g.chips_per_host,
+                 "chip_class": g.chip_class}
+                for g in self.spec.host_groups
+            ]
         if routing is not None:
             doc["routing"] = routing
         return doc
@@ -218,10 +243,13 @@ class _Cluster:
     def fresh(cls, spec: hw.ClusterSpec) -> "_Cluster":
         chips = []
         domain_map: Dict[int, List[Chip]] = {}
-        for i in range(spec.num_chips):
-            host = i // spec.chips_per_host
-            domain = i // spec.hb_domain_size
-            chip = Chip(host, domain, i, spec.fractions_per_chip)
+        # chip_table() materializes hosts, hb domains and chip classes for
+        # every chip — including tail chips and heterogeneous host groups;
+        # domains never span hosts, host groups or the tail boundary, so a
+        # TP group can never be packed across either
+        for i, (host, domain, cname) in enumerate(spec.chip_table()):
+            chip = Chip(host, domain, i, spec.fractions_per_chip,
+                        chip_class=cname)
             chips.append(chip)
             domain_map.setdefault(domain, []).append(chip)
         return cls(spec, chips, domain_map,
@@ -282,19 +310,21 @@ class FeasibilityResult:
 
 def _instances_from_alloc(allocations: Dict[str, Allocation],
                           spec: hw.ClusterSpec, owner: Optional[str] = None):
-    """Expand allocations into placeable (owner, llm, replica, tp, units)
-    instance descriptors; ``owner`` prefixes the instance key for fleet
-    packs."""
+    """Expand allocations into placeable (owner, llm, replica, tp, units,
+    chip_class) instance descriptors; ``owner`` prefixes the instance key
+    for fleet packs.  ``chip_class`` is the Allocation's binding (None =
+    any chip)."""
     F = spec.fractions_per_chip
     key = (lambda m: f"{owner}/{m}") if owner is not None else (lambda m: m)
     out = []
     for llm, a in allocations.items():
+        cc = getattr(a, "chip_class", None)
         for r in range(a.replicas):
             if a.tp > 1 or a.fraction >= 1.0:
-                out.append((owner, key(llm), r, a.tp, F))  # whole chips
+                out.append((owner, key(llm), r, a.tp, F, cc))  # whole chips
             else:
                 units = max(int(round(a.fraction * F)), 1)
-                out.append((owner, key(llm), r, 1, units))
+                out.append((owner, key(llm), r, 1, units, cc))
     return out
 
 
@@ -319,19 +349,22 @@ def _pack(groups: Dict[Optional[str], Dict[str, Allocation]],
     insts: list = []
     for owner, allocations in groups.items():
         insts.extend(_instances_from_alloc(allocations, spec, owner))
-    # most-constrained-first across ALL owners: TP desc, then whole-chip,
-    # then fraction desc; owner/llm tail keys make the order total
-    insts.sort(key=lambda t: (-(t[3] > 1), -t[3], -t[4], t[1], t[2]))
+    # most-constrained-first across ALL owners: class-bound before
+    # class-free (a bound shape has fewer candidate domains), TP desc,
+    # then whole-chip, then fraction desc; owner/llm tail keys make the
+    # order total
+    insts.sort(key=lambda t: (-(t[5] is not None), -(t[3] > 1), -t[3],
+                              -t[4], t[1], t[2]))
 
     placed: Optional[List[PlacedInstance]] = [] if record else None
-    for owner, llm, replica, tp, units in insts:
+    for owner, llm, replica, tp, units, cc in insts:
         if tp >= 1 and units == F:
-            chips = _place_whole(cluster, tp)
+            chips = _place_whole(cluster, tp, cc)
         else:
-            chips = _place_fraction(cluster, units, owner)
+            chips = _place_fraction(cluster, units, owner, cc)
         if chips is None:
             return None, {"llm": llm, "replica": replica, "tp": tp,
-                          "units_per_chip": units}, cluster
+                          "units_per_chip": units, "chip_class": cc}, cluster
         per_chip = units if (tp == 1 and units < F) else F
         for c in chips:
             cluster.claim(c, per_chip, owner)
@@ -339,7 +372,8 @@ def _pack(groups: Dict[Optional[str], Dict[str, Allocation]],
             placed.append(PlacedInstance(
                 llm=llm, replica=replica, tp=tp,
                 chips=[c.index for c in chips], units_per_chip=per_chip,
-                host=chips[0].host, domain=chips[0].domain))
+                host=chips[0].host, domain=chips[0].domain,
+                chip_class=cc))
     return placed, None, cluster
 
 
@@ -355,6 +389,10 @@ def _fail(failed: dict, cluster: _Cluster) -> PlacementError:
         hint = (f"needs {units}/{F} free units on one chip owned by the "
                 "same workflow; sub-chip replicas never span chips — "
                 "use smaller fractions or more chips")
+    if shape.get("chip_class"):
+        hint += (f"; instance is bound to chip class "
+                 f"{shape['chip_class']!r} — only hosts of that class "
+                 "are candidates")
     return PlacementError("cannot place instance", shape=shape,
                           domain_capacity=cluster.domain_capacity(),
                           hint=hint)
@@ -414,17 +452,22 @@ def feasibility(allocations: Dict[str, Allocation],
     return fleet_feasibility({None: allocations}, spec)  # type: ignore[dict-item]
 
 
-def _place_whole(cluster: _Cluster, tp: int) -> Optional[List[Chip]]:
+def _place_whole(cluster: _Cluster, tp: int,
+                 chip_class: Optional[str] = None) -> Optional[List[Chip]]:
     """Place a tp-chip instance inside one hb domain (fully-free chips).
 
     Candidate domains are ranked fill-before-spill (hosts already in use
     first), then best-fit (tightest free-chip count), then least
     remaining capacity, then domain id.  Runs off the cluster's
     incrementally-maintained per-domain counters: O(domains) per call
-    plus one scan of the winning domain."""
+    plus one scan of the winning domain.  ``chip_class`` restricts
+    candidates to domains of that class (a domain never spans classes,
+    so the first chip's class speaks for the domain)."""
     F = cluster.spec.fractions_per_chip
     best = None
     for dom, chips in cluster.domain_map.items():
+        if chip_class is not None and chips[0].chip_class != chip_class:
+            continue
         n_free = cluster.dom_free_chips[dom]
         if n_free < tp:
             continue
@@ -439,20 +482,26 @@ def _place_whole(cluster: _Cluster, tp: int) -> Optional[List[Chip]]:
 
 
 def _place_fraction(cluster: _Cluster, units: int,
-                    owner: Optional[str] = None) -> Optional[List[Chip]]:
+                    owner: Optional[str] = None,
+                    chip_class: Optional[str] = None
+                    ) -> Optional[List[Chip]]:
     """Best-fit a sub-chip fraction; prefer already-occupied chips of
     the same owner (exclusive chip ownership keeps partitioned fleets'
-    chip sets disjoint)."""
+    chip sets disjoint).  ``chip_class`` restricts candidates to chips
+    of that class."""
     F = cluster.spec.fractions_per_chip
     partial = [c for c in cluster.chips
                if 0 < c.free_units < F and c.free_units >= units
-               and c.owner == owner]
+               and c.owner == owner
+               and (chip_class is None or c.chip_class == chip_class)]
     if partial:
         partial.sort(key=lambda c: (c.free_units, c.index))  # tightest fit
         return [partial[0]]
     # open a fresh chip: fill-before-spill, then least-capacity domain
     best = None
     for dom, chips in cluster.domain_map.items():
+        if chip_class is not None and chips[0].chip_class != chip_class:
+            continue
         if cluster.dom_free_chips[dom] == 0:
             continue
         spill = 0 if chips[0].host in cluster.busy_hosts else 1

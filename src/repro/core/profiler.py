@@ -10,17 +10,30 @@ Replica counts are NOT swept (paper: replicas don't change latency;
 throughput scales linearly).  Fractional shares are NOT swept either: a
 fraction ``f`` scales the engine's service rate, which maps a profile
 exactly as  L(rate; f) = (1/f) · L(rate/f; 1)  and  T(f) = f · T(1).
+
+On heterogeneous clusters each LLM is profiled once per
+``(chip_class, tp)``: the replay engine's roofline costs (and the
+Pallas block plan the autotuner picks) depend on the class, so a
+profile on v5p-class chips is a different curve from the same model on
+v4i-class chips.  ``LLMProfile.by_class`` holds the per-class curves;
+``by_tp`` stays the default-class view so every uniform-cluster caller
+is untouched.  (chip_class, tp) sweeps are memoized process-wide —
+re-profiling the same architecture on the same class and trace shape is
+a cache hit.
 """
 from __future__ import annotations
 
 import math
 import random
 from bisect import bisect_left
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import hw
 from repro.configs.base import ArchConfig
 from repro.core.trace import TraceStore
+from repro.kernels.autotune import BlockPlan, autotune_attention_blocks
+from repro.serving import costmodel as cm
 from repro.serving.simulator import EngineRequest, EngineSim, EventLoop
 
 DEP_EPS = 1e-9
@@ -66,11 +79,13 @@ def extract_groups(store: TraceStore, llm: str) -> List[ReplayGroup]:
 def _run_replay(cfg: ArchConfig, groups: Sequence[ReplayGroup], *,
                 tp: int, group_rate: float, seed: int = 0,
                 prefix_caching: bool = True,
-                avg_context: int = 1024) -> List[EngineRequest]:
+                avg_context: int = 1024,
+                chip: Optional[hw.ChipClass] = None) -> List[EngineRequest]:
     """Replay groups at Poisson ``group_rate`` through one engine replica."""
     loop = EventLoop()
     engine = EngineSim(cfg, loop, tp=tp, fraction=1.0,
-                       prefix_caching=prefix_caching, avg_context=avg_context)
+                       prefix_caching=prefix_caching, avg_context=avg_context,
+                       chip=chip)
     rng = random.Random(seed)
     completed: List[EngineRequest] = []
     next_id = [0]
@@ -131,6 +146,8 @@ class TPProfile:
     rates: List[float]  # call arrival rates (calls/s)
     latency: Dict[str, List[float]]  # percentile -> latencies
     max_throughput: float  # calls/s
+    chip_class: str = ""  # chip class the sweep ran on ("" = default)
+    block_plan: Optional[BlockPlan] = None  # autotuned Pallas tiling
 
     def lookup(self, rate: float, percentile: str = "mean") -> float:
         if rate >= self.max_throughput:
@@ -156,25 +173,119 @@ class LLMProfile:
     arch: str
     calls_per_group: float
     by_tp: Dict[int, TPProfile]
+    # chip-class name -> tp -> profile; ``by_tp`` aliases the default
+    # class's entry, so uniform-cluster callers never look in here
+    by_class: Dict[str, Dict[int, TPProfile]] = field(default_factory=dict)
 
-    def tps(self) -> List[int]:
-        return sorted(self.by_tp)
+    def __post_init__(self) -> None:
+        if not self.by_class:
+            self.by_class = {hw.DEFAULT_CHIP_CLASS.name: self.by_tp}
+
+    def classes(self) -> List[str]:
+        return sorted(self.by_class)
+
+    def tps(self, chip_class: Optional[str] = None) -> List[int]:
+        return sorted(self._table(chip_class))
+
+    def _table(self, chip_class: Optional[str]) -> Dict[int, TPProfile]:
+        if chip_class is None:
+            return self.by_tp
+        try:
+            return self.by_class[chip_class]
+        except KeyError:
+            raise KeyError(
+                f"{self.llm}: no profile for chip class {chip_class!r} "
+                f"(profiled: {self.classes()})") from None
 
     def latency(self, rate: float, tp: int, *, fraction: float = 1.0,
-                percentile: str = "mean") -> float:
-        prof = self.by_tp[tp]
+                percentile: str = "mean",
+                chip_class: Optional[str] = None) -> float:
+        prof = self._table(chip_class)[tp]
         if fraction <= 0:
             return math.inf
         return prof.lookup(rate / fraction, percentile) / fraction
 
-    def max_throughput(self, tp: int, *, fraction: float = 1.0) -> float:
-        return self.by_tp[tp].max_throughput * fraction
+    def max_throughput(self, tp: int, *, fraction: float = 1.0,
+                       chip_class: Optional[str] = None) -> float:
+        return self._table(chip_class)[tp].max_throughput * fraction
+
+
+# Per-(arch, chip_class, tp) sweep memo.  Keyed by the replayed trace
+# shape as well (group/call counts + context), so two workflows with
+# different traces never share an entry, but re-profiling the same
+# architecture on another host group of the same class is a hit.
+_sweep_cache: Dict[tuple, TPProfile] = {}
+_sweep_stats = {"hits": 0, "misses": 0}
+
+
+def profile_cache_stats() -> Tuple[int, int]:
+    """(hits, misses) of the per-(chip_class, tp) sweep memo."""
+    return _sweep_stats["hits"], _sweep_stats["misses"]
+
+
+def clear_profile_cache() -> None:
+    _sweep_cache.clear()
+    _sweep_stats["hits"] = _sweep_stats["misses"] = 0
+
+
+def _sweep_tp(cfg: ArchConfig, groups: Sequence[ReplayGroup],
+              calls_per_group: float, *, tp: int, chip: hw.ChipClass,
+              avg_context: int, prefix_caching: bool, seed: int,
+              trace_key: tuple) -> TPProfile:
+    key = (cfg.name, chip.name, tp, prefix_caching, seed) + trace_key
+    hit = _sweep_cache.get(key)
+    if hit is not None:
+        _sweep_stats["hits"] += 1
+        return hit
+    _sweep_stats["misses"] += 1
+
+    # --- capacity run: all groups at t=0 ---
+    done = _run_replay(cfg, groups, tp=tp, group_rate=math.inf,
+                       prefix_caching=prefix_caching,
+                       avg_context=avg_context, seed=seed, chip=chip)
+    makespan = max(r.t_done for r in done)
+    t_max = len(done) / max(makespan, 1e-9)
+
+    # --- latency sweep at fractions of capacity ---
+    rates, lat = [], {"mean": [], "p50": [], "p90": [], "p99": []}
+    for fr in RATE_GRID:
+        call_rate = fr * t_max
+        group_rate = call_rate / calls_per_group
+        done = _run_replay(cfg, groups, tp=tp, group_rate=group_rate,
+                           prefix_caching=prefix_caching,
+                           avg_context=avg_context, seed=seed + 1,
+                           chip=chip)
+        ls = [r.latency for r in done]
+        rates.append(call_rate)
+        lat["mean"].append(sum(ls) / len(ls))
+        lat["p50"].append(_percentile(ls, 0.50))
+        lat["p90"].append(_percentile(ls, 0.90))
+        lat["p99"].append(_percentile(ls, 0.99))
+    # the Pallas tiling this (chip_class, tp) point would deploy with:
+    # batch = the engine's KV-bound batch at the traced context length
+    batch = max(cm.max_batch_size(cfg, avg_context, tp=tp, chip=chip), 1)
+    plan = autotune_attention_blocks(
+        chip, tp=tp, batch=min(batch, 256), seq_len=max(avg_context, 1),
+        head_dim=cfg.head_dim or 128, num_heads=max(cfg.num_heads, 1))
+    prof = TPProfile(tp=tp, rates=rates, latency=lat, max_throughput=t_max,
+                     chip_class=chip.name, block_plan=plan)
+    _sweep_cache[key] = prof
+    return prof
 
 
 def profile_llm(cfg: ArchConfig, store: TraceStore, llm: str, *,
                 tp_degrees: Sequence[int] = (1, 2, 4),
                 max_groups: int = 120, prefix_caching: bool = True,
-                seed: int = 0) -> LLMProfile:
+                seed: int = 0,
+                chip_classes: Sequence[hw.ChipClass] = ()) -> LLMProfile:
+    """Profile one LLM per (chip_class, tp).
+
+    ``chip_classes`` defaults to the default (v5e) class only — the
+    uniform-cluster path.  A (class, tp) point is skipped when the model
+    does not fit the class's HBM at that TP degree; a class where no TP
+    degree fits is omitted from ``by_class`` entirely (the scheduler
+    then never binds this LLM to that class).
+    """
     groups = extract_groups(store, llm)[:max_groups]
     if not groups:
         raise ValueError(f"no traced calls for LLM {llm!r}")
@@ -183,31 +294,35 @@ def profile_llm(cfg: ArchConfig, store: TraceStore, llm: str, *,
     prompts = [c.prompt_tokens for g in groups for c in g.calls]
     outs = [c.output_tokens for g in groups for c in g.calls]
     avg_context = int(sum(prompts) / len(prompts) + sum(outs) / len(outs))
+    trace_key = (llm, len(groups), n_calls, avg_context, max_groups)
 
-    by_tp: Dict[int, TPProfile] = {}
-    for tp in tp_degrees:
-        # --- capacity run: all groups at t=0 ---
-        done = _run_replay(cfg, groups, tp=tp, group_rate=math.inf,
-                           prefix_caching=prefix_caching,
-                           avg_context=avg_context, seed=seed)
-        makespan = max(r.t_done for r in done)
-        t_max = len(done) / max(makespan, 1e-9)
-
-        # --- latency sweep at fractions of capacity ---
-        rates, lat = [], {"mean": [], "p50": [], "p90": [], "p99": []}
-        for fr in RATE_GRID:
-            call_rate = fr * t_max
-            group_rate = call_rate / calls_per_group
-            done = _run_replay(cfg, groups, tp=tp, group_rate=group_rate,
-                               prefix_caching=prefix_caching,
-                               avg_context=avg_context, seed=seed + 1)
-            ls = [r.latency for r in done]
-            rates.append(call_rate)
-            lat["mean"].append(sum(ls) / len(ls))
-            lat["p50"].append(_percentile(ls, 0.50))
-            lat["p90"].append(_percentile(ls, 0.90))
-            lat["p99"].append(_percentile(ls, 0.99))
-        by_tp[tp] = TPProfile(tp=tp, rates=rates, latency=lat,
-                              max_throughput=t_max)
+    classes = tuple(chip_classes) or (hw.DEFAULT_CHIP_CLASS,)
+    by_class: Dict[str, Dict[int, TPProfile]] = {}
+    for chip in classes:
+        table: Dict[int, TPProfile] = {}
+        for tp in tp_degrees:
+            # legacy behavior on the default class: always sweep (the
+            # engine clamps to batch 1); other classes skip infeasible
+            # points so the scheduler never binds a model to a class it
+            # cannot load on
+            if (chip.name != hw.DEFAULT_CHIP_CLASS.name
+                    and not cm.fits_on_class(cfg, chip, max_tp=tp,
+                                             avg_context=avg_context)):
+                continue
+            table[tp] = _sweep_tp(cfg, groups, calls_per_group, tp=tp,
+                                  chip=chip, avg_context=avg_context,
+                                  prefix_caching=prefix_caching, seed=seed,
+                                  trace_key=trace_key)
+        if table:
+            by_class[chip.name] = table
+    if not by_class:
+        raise ValueError(
+            f"{llm}: model fits no profiled chip class "
+            f"({[c.name for c in classes]}) at TP degrees {tuple(tp_degrees)}")
+    by_tp = by_class.get(hw.DEFAULT_CHIP_CLASS.name)
+    if by_tp is None:  # default class absent: alias the first profiled one
+        first = next(c.name for c in classes if c.name in by_class)
+        by_tp = by_class[first]
     return LLMProfile(llm=llm, arch=cfg.name,
-                      calls_per_group=calls_per_group, by_tp=by_tp)
+                      calls_per_group=calls_per_group, by_tp=by_tp,
+                      by_class=by_class)

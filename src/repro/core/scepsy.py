@@ -60,9 +60,15 @@ def _resolve_qos(wf: Workflow, pipeline: AggregateLLMPipeline,
 def build_pipeline(wf: Workflow, *, n_trace_requests: int = 60,
                    tp_degrees: Sequence[int] = (1, 2, 4), seed: int = 0,
                    max_profile_groups: int = 60,
-                   store: Optional[TraceStore] = None
+                   store: Optional[TraceStore] = None,
+                   chip_classes: Sequence[hw.ChipClass] = ()
                    ) -> Tuple[AggregateLLMPipeline, WorkflowStats, TraceStore]:
-    """Steps 1-4: trace the workflow, aggregate, profile, synthesize."""
+    """Steps 1-4: trace the workflow, aggregate, profile, synthesize.
+
+    ``chip_classes`` lists every chip class the serving cluster exposes;
+    each LLM is profiled per ``(chip_class, tp)`` so the scheduler can
+    price allocations on each class.  Empty = default class only.
+    """
     if store is None:
         store = trace_workflow(wf, n_trace_requests, seed=seed)
     stats = aggregate(store)
@@ -71,7 +77,8 @@ def build_pipeline(wf: Workflow, *, n_trace_requests: int = 60,
         cfg = wf.llms[m]
         tps = [t for t in tp_degrees]
         profiles[m] = profile_llm(cfg, store, m, tp_degrees=tps,
-                                  max_groups=max_profile_groups, seed=seed)
+                                  max_groups=max_profile_groups, seed=seed,
+                                  chip_classes=chip_classes)
     pipeline = AggregateLLMPipeline.synthesize(stats, profiles, wf.llms)
     return pipeline, stats, store
 
@@ -80,6 +87,15 @@ def _default_tp_degrees(spec: hw.ClusterSpec) -> list:
     """TP degrees to profile: 1/2/4 capped by the hb domain, plus the
     domain size itself (one grid for single-workflow and fleet deploys)."""
     return sorted({1, 2, min(4, spec.hb_domain_size), spec.hb_domain_size})
+
+
+def _spec_chip_classes(spec: hw.ClusterSpec) -> Tuple[hw.ChipClass, ...]:
+    """Chip classes to profile for ``spec`` (empty = default only)."""
+    if spec.is_uniform and (
+            not spec.classes()
+            or spec.classes()[0] == hw.DEFAULT_CHIP_CLASS.name):
+        return ()
+    return tuple(hw.chip_class(c) for c in spec.classes())
 
 
 def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
@@ -97,7 +113,8 @@ def deploy(wf: Workflow, spec: hw.ClusterSpec, lam_target: float, *,
     if pipeline is None:
         pipeline, stats, _ = build_pipeline(
             wf, n_trace_requests=n_trace_requests,
-            tp_degrees=_default_tp_degrees(spec), seed=seed)
+            tp_degrees=_default_tp_degrees(spec), seed=seed,
+            chip_classes=_spec_chip_classes(spec))
     else:
         stats = None
     result = schedule(pipeline, spec, lam_target, cfg)
@@ -155,12 +172,14 @@ class ScepsyFleetDeployment:
             # co-placed views already hold global chip ids (offset 0);
             # the translation is kept for placements built externally
             off = self.chip_offsets[name]
+            table = self.spec.chip_table()
             for inst in dep.placement.instances:
                 chips = [c + off for c in inst.chips]
-                out.append(dc.replace(
-                    inst, chips=chips,
-                    host=chips[0] // self.spec.chips_per_host,
-                    domain=chips[0] // self.spec.hb_domain_size))
+                host, domain = (table[chips[0]][:2] if chips[0] < len(table)
+                                else (chips[0] // self.spec.chips_per_host,
+                                      chips[0] // self.spec.hb_domain_size))
+                out.append(dc.replace(inst, chips=chips, host=host,
+                                      domain=domain))
         return out
 
     def to_deployment(self) -> dict:
@@ -229,7 +248,8 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
             pipeline, stats, _ = build_pipeline(
                 wf, n_trace_requests=n_trace_requests,
                 tp_degrees=_default_tp_degrees(spec), seed=seed,
-                max_profile_groups=max_profile_groups)
+                max_profile_groups=max_profile_groups,
+                chip_classes=_spec_chip_classes(spec))
             pipelines[wf.name] = pipeline
             stats_by_name[wf.name] = stats
     else:

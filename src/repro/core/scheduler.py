@@ -33,6 +33,7 @@ consumed by :mod:`repro.core.placement` and :mod:`repro.core.scepsy`.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from dataclasses import dataclass, field
@@ -131,6 +132,22 @@ def _parallelism_options(cfg: ArchConfig, units: int, spec: hw.ClusterSpec,
     return opts
 
 
+def _prof_table(prof, cname: Optional[str]) -> Dict:
+    """The TP table of ``prof`` on chip class ``cname`` (None = default).
+
+    Works for both :class:`~repro.core.profiler.LLMProfile` (per-class
+    tables in ``by_class``) and
+    :class:`~repro.core.pipeline.MergedLLMProfile` (one table, valid on
+    the intersection of member classes).
+    """
+    if cname is None:
+        return prof.by_tp
+    by_class = getattr(prof, "by_class", None)
+    if by_class is not None:
+        return by_class.get(cname) or {}
+    return prof.by_tp if cname in prof.classes() else {}
+
+
 def _candidate_units(lo: int, hi: int, grid: int, chip_units: int) -> List[int]:
     if hi <= lo:
         return [lo]
@@ -158,7 +175,17 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
     first; together with the admissible unloaded-latency floor bound it
     turns the enumeration into branch-and-bound with an immediate
     incumbent, without changing the optimal latency found.
+
+    Heterogeneous clusters (more than one chip class in the spec) are
+    routed to the class-aware search, which additionally assigns each
+    LLM to a chip class and draws units from per-class budgets.  A
+    uniform non-default-class cluster runs this search with that class's
+    cost constants and profile curves; the default class reproduces the
+    legacy behavior exactly.
     """
+    if not spec.is_uniform:
+        return _schedule_hetero(pipeline, spec, lam_target, config,
+                                option_cache=option_cache)
     t0 = time.perf_counter()
     max_tp = config.max_tp or spec.hb_domain_size
     if not config.allow_parallelism:
@@ -166,9 +193,15 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
     F = spec.fractions_per_chip
     U = spec.total_units
 
+    cls_names = spec.classes()
+    chip = hw.chip_class(cls_names[0]) if cls_names else hw.DEFAULT_CHIP_CLASS
+    # None on the default class => allocations and profile lookups are
+    # byte-identical to the pre-ChipClass scheduler
+    cname = None if chip.name == hw.DEFAULT_CHIP_CLASS.name else chip.name
+
     ratios = pipeline.latency_ratios(config.percentile)
     order = sorted(ratios, key=lambda m: -ratios[m])
-    lo = {m: cm.min_fraction_units(pipeline.stages[m].cfg, spec)
+    lo = {m: cm.min_fraction_units(pipeline.stages[m].cfg, spec, chip=chip)
           for m in order}
     if sum(lo.values()) > U:
         raise ValueError(
@@ -209,19 +242,22 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
                                     config.allow_fractional)
         if not opts:
             return None
+        table = _prof_table(st.profile, cname)
         lam_m = lam_target * st.n
         best_feas: Optional[Tuple[float, Allocation, float]] = None
         best_tput: Optional[Tuple[float, Allocation, float]] = None
         for o in opts:
             a = o.alloc
-            tp = a.tp if a.tp in st.profile.by_tp else st.profile.tps()[0]
-            if tp != a.tp:
+            if a.tp not in table:
                 continue  # unprofiled TP degree
+            if cname is not None:
+                a = dataclasses.replace(a, chip_class=cname)
             tput = a.replicas * st.profile.max_throughput(
-                a.tp, fraction=a.fraction)
+                a.tp, fraction=a.fraction, chip_class=cname)
             lmt = st.profile.latency(lam_m / a.replicas, a.tp,
                                      fraction=a.fraction,
-                                     percentile=config.percentile)
+                                     percentile=config.percentile,
+                                     chip_class=cname)
             contrib = lmt * st.n / max(st.p, 1.0)
             if tput >= lam_m and math.isfinite(contrib):
                 if best_feas is None or contrib < best_feas[0]:
@@ -267,8 +303,9 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
     floor = {}
     for m in order:
         st = pipeline.stages[m]
-        f = min(st.profile.latency(0.0, tp, percentile=config.percentile)
-                for tp in st.profile.tps())
+        f = min(st.profile.latency(0.0, tp, percentile=config.percentile,
+                                   chip_class=cname)
+                for tp in _prof_table(st.profile, cname))
         floor[m] = 0.9 * f * st.n / max(st.p, 1.0)
     tail_floor = {len(order): 0.0}
     for i in range(len(order) - 1, -1, -1):
@@ -360,6 +397,225 @@ def schedule(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
         _, allocs, pred, units = best_infeasible
         return ScheduleResult(allocs, pred, units, evaluated, elapsed, False)
     raise RuntimeError("scheduler found no viable allocation")
+
+
+def _schedule_hetero(pipeline: AggregateLLMPipeline, spec: hw.ClusterSpec,
+                     lam_target: float,
+                     config: SchedulerConfig = SchedulerConfig(), *,
+                     option_cache: Optional[Dict] = None) -> ScheduleResult:
+    """Class-aware allocation search for heterogeneous clusters.
+
+    Extends the paper's search with one more decision per LLM: which
+    chip class its replicas live on.  Units are drawn from per-class
+    budgets (``spec.units_of_class``); an LLM is only assignable to
+    classes it was profiled on AND whose HBM fits it
+    (:func:`profile_llm` already drops unfittable classes), and every
+    chosen :class:`Allocation` carries its ``chip_class`` so placement
+    binds the instances to compatible host groups.  Latency and
+    throughput come from the per-``(chip_class, tp)`` profile curves, so
+    a 9B on big-HBM chips and the same 9B on mid-tier chips are scored
+    as the different machines they are.
+    """
+    t0 = time.perf_counter()
+    max_tp = config.max_tp or spec.hb_domain_size
+    if not config.allow_parallelism:
+        max_tp = 1
+    F = spec.fractions_per_chip
+    budgets = {c: spec.units_of_class(c) for c in spec.classes()}
+
+    ratios = pipeline.latency_ratios(config.percentile)
+    order = sorted(ratios, key=lambda m: -ratios[m])
+
+    # feasible classes + per-class memory floors per LLM
+    lo: Dict[str, Dict[str, int]] = {}
+    for m in order:
+        st = pipeline.stages[m]
+        prof_classes = set(st.profile.classes())
+        lo[m] = {}
+        for c in spec.classes():
+            if c not in prof_classes or not _prof_table(st.profile, c):
+                continue
+            u = cm.min_fraction_units(st.cfg, spec, chip=hw.chip_class(c))
+            if u <= budgets[c]:
+                lo[m][c] = u
+        if not lo[m]:
+            raise ValueError(
+                f"{m}: no chip class on this cluster both fits the model "
+                f"and has a profile (cluster classes: {spec.classes()})")
+    lo_min = {m: min(lo[m].values()) for m in order}
+    if sum(lo_min.values()) > spec.total_units:
+        raise ValueError(
+            f"cluster too small: need {sum(lo_min.values())} units, "
+            f"have {spec.total_units}")
+
+    if option_cache is None:
+        option_cache = {}
+    evaluated = 0
+    best: Optional[Tuple[float, Dict[str, Allocation], Prediction,
+                         Dict[str, int]]] = None
+    best_infeasible: Optional[Tuple[float, Dict[str, Allocation], Prediction,
+                                    Dict[str, int]]] = None
+
+    def best_option_for(m: str, units: int, c: str
+                        ) -> Optional[Tuple[Allocation, float, float]]:
+        if not config.memoize:
+            return _best_option_uncached(m, units, c)
+        key = (m, units, c)
+        if key not in option_cache:
+            option_cache[key] = _best_option_uncached(m, units, c)
+        return option_cache[key]
+
+    def _best_option_uncached(m: str, units: int, c: str
+                              ) -> Optional[Tuple[Allocation, float, float]]:
+        if c not in lo[m]:
+            return None
+        st = pipeline.stages[m]
+        table = _prof_table(st.profile, c)
+        opts = _parallelism_options(st.cfg, units, spec, lo[m][c], max_tp,
+                                    config.allow_fractional)
+        lam_m = lam_target * st.n
+        best_feas: Optional[Tuple[float, Allocation, float]] = None
+        best_tput: Optional[Tuple[float, Allocation, float]] = None
+        for o in opts:
+            a = o.alloc
+            if a.tp not in table:
+                continue
+            a = dataclasses.replace(a, chip_class=c)
+            tput = a.replicas * st.profile.max_throughput(
+                a.tp, fraction=a.fraction, chip_class=c)
+            lmt = st.profile.latency(lam_m / a.replicas, a.tp,
+                                     fraction=a.fraction,
+                                     percentile=config.percentile,
+                                     chip_class=c)
+            contrib = lmt * st.n / max(st.p, 1.0)
+            if tput >= lam_m and math.isfinite(contrib):
+                if best_feas is None or contrib < best_feas[0]:
+                    best_feas = (contrib, a, tput)
+            if best_tput is None or tput > best_tput[0]:
+                best_tput = (tput, a, tput)
+        if best_feas:
+            return best_feas[1], best_feas[0], best_feas[2]
+        if best_tput:
+            return best_tput[1], math.inf, best_tput[2]
+        return None
+
+    def evaluate(units: Dict[str, int], picks: Dict[str, str]) -> None:
+        nonlocal evaluated, best, best_infeasible
+        evaluated += 1
+        allocs: Dict[str, Allocation] = {}
+        for m in order:
+            r = best_option_for(m, units[m], picks[m])
+            if r is None:
+                return
+            allocs[m] = r[0]
+        pred = pipeline.predict(allocs, lam_target, config.percentile)
+        key_units = dict(units)
+        if pred.feasible:
+            if best is None or pred.latency < best[0]:
+                best = (pred.latency, allocs, pred, key_units)
+        else:
+            score = -pred.max_throughput
+            if best_infeasible is None or score < best_infeasible[0]:
+                best_infeasible = (score, allocs, pred, key_units)
+
+    # admissible unloaded-latency floor: min over (class, tp) points
+    floor = {}
+    for m in order:
+        st = pipeline.stages[m]
+        vals = [st.profile.latency(0.0, tp, percentile=config.percentile,
+                                   chip_class=c)
+                for c in lo[m] for tp in _prof_table(st.profile, c)]
+        floor[m] = 0.9 * min(vals) * st.n / max(st.p, 1.0)
+    tail_floor = {len(order): 0.0}
+    for i in range(len(order) - 1, -1, -1):
+        tail_floor[i] = tail_floor[i + 1] + floor[order[i]]
+
+    def recurse(i: int, remaining: Dict[str, int], units: Dict[str, int],
+                picks: Dict[str, str], partial: float) -> None:
+        if evaluated >= config.max_assignments:
+            return
+        if i == len(order):
+            evaluate(units, picks)
+            return
+        m = order[i]
+        # roomiest feasible class first: a good incumbent early makes
+        # the floor bound prune the rest
+        for c in sorted(lo[m], key=lambda c: -remaining[c]):
+            if remaining[c] < lo[m][c]:
+                continue
+            for u in _candidate_units(lo[m][c], remaining[c],
+                                      config.units_grid, F):
+                r = best_option_for(m, u, c)
+                if r is None:
+                    continue
+                new_partial = partial + r[1]
+                if (best is not None
+                        and new_partial + tail_floor[i + 1] >= best[0]):
+                    continue
+                units[m], picks[m] = u, c
+                remaining[c] -= u
+                recurse(i + 1, remaining, units, picks, new_partial)
+                remaining[c] += u
+        units.pop(m, None)
+        picks.pop(m, None)
+
+    recurse(0, dict(budgets), {}, {}, 0.0)
+
+    def used_units_in(allocs: Dict[str, Allocation], c: str) -> int:
+        total = 0
+        for a in allocs.values():
+            if a.chip_class != c:
+                continue
+            if a.tp > 1 or a.fraction >= 1.0:
+                total += a.replicas * a.tp * F
+            else:
+                total += a.replicas * int(round(a.fraction * F))
+        return total
+
+    def improve_with_slack(allocs: Dict[str, Allocation],
+                           units: Dict[str, int]):
+        nonlocal evaluated
+        allocs, units = dict(allocs), dict(units)
+        best_pred = pipeline.predict(allocs, lam_target, config.percentile)
+        for _ in range(8):
+            improved = False
+            for c in budgets:
+                leftover = budgets[c] - used_units_in(allocs, c)
+                if leftover <= 0:
+                    continue
+                for m in order:
+                    if allocs[m].chip_class != c:
+                        continue
+                    r = best_option_for(m, units[m] + leftover, c)
+                    if r is None:
+                        continue
+                    cand = dict(allocs)
+                    cand[m] = r[0]
+                    pred = pipeline.predict(cand, lam_target,
+                                            config.percentile)
+                    evaluated += 1
+                    if (pred.feasible
+                            and pred.latency < best_pred.latency - 1e-12):
+                        allocs, best_pred = cand, pred
+                        units[m] = units[m] + leftover
+                        improved = True
+                        break
+                if improved:
+                    break
+            if not improved:
+                break
+        return allocs, best_pred, units
+
+    elapsed = time.perf_counter() - t0
+    if best is not None:
+        _, allocs, pred, units = best
+        allocs, pred, units = improve_with_slack(allocs, units)
+        elapsed = time.perf_counter() - t0
+        return ScheduleResult(allocs, pred, units, evaluated, elapsed, True)
+    if best_infeasible is not None:
+        _, allocs, pred, units = best_infeasible
+        return ScheduleResult(allocs, pred, units, evaluated, elapsed, False)
+    raise RuntimeError("scheduler found no viable class-aware allocation")
 
 
 # ---------------------------------------------------------------------------
@@ -557,9 +813,12 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
     G = spec.num_chips
     welfare_of = _welfare_fn(config, names)
 
+    chips_avail = [hw.chip_class(c) for c in spec.classes()] or \
+        [hw.DEFAULT_CHIP_CLASS]
     lo_chips = {
         n: _min_chips_for_units(
-            sum(cm.min_fraction_units(pipelines[n].stages[m].cfg, spec)
+            sum(min(cm.min_fraction_units(pipelines[n].stages[m].cfg, spec,
+                                          chip=ch) for ch in chips_avail)
                 for m in pipelines[n].stages), spec)
         for n in names
     }
@@ -583,10 +842,14 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
     warm: Dict[str, Dict] = {n: ws.option_tables.setdefault(n, {})
                              for n in names}
 
-    def sched(n: str, chips: int) -> Optional[ScheduleResult]:
+    def sched(n: str, chips: int,
+              offset: int = 0) -> Optional[ScheduleResult]:
         if chips < lo_chips[n]:
             return None
-        key = (n, chips)
+        # a k-chip slice of a uniform cluster is the same spec at any
+        # offset, so the cache key (and slice) only carries the offset
+        # on heterogeneous specs — uniform search behavior is unchanged
+        key = (n, chips, offset) if spec.host_groups else (n, chips)
         if key not in sched_cache:
             stats["schedule_calls"] += 1
             cache = warm[n] if (config.warm_start and config.memoize) \
@@ -596,11 +859,13 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
                 # seed from the nearest chip count already scheduled:
                 # its unit split is an immediate feasible incumbent for
                 # the branch-and-bound at this size
-                near = [(abs(c - chips), c)
-                        for (nn, c), r in sched_cache.items()
-                        if nn == n and r is not None and r.feasible]
+                near = [(abs(k[1] - chips), k)
+                        for k, r in sched_cache.items()
+                        if k[0] == n
+                        and (len(k) == 2 or k[2] == offset)
+                        and r is not None and r.feasible]
                 if near:
-                    seed = sched_cache[(n, min(near)[1])].units
+                    seed = sched_cache[min(near)[1]].units
                 elif n in ws.last_units:
                     # drifted workflow on a warm re-plan: its cached
                     # schedules were invalidated, but the previous
@@ -608,7 +873,7 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
                     seed = ws.last_units[n]
             try:
                 sched_cache[key] = schedule(
-                    pipelines[n], _subcluster(spec, chips),
+                    pipelines[n], _subcluster(spec, chips, offset),
                     lam_targets[n], config, option_cache=cache,
                     warm_seed=seed)
             except (ValueError, RuntimeError):
@@ -638,11 +903,16 @@ def schedule_multi(pipelines: Dict[str, AggregateLLMPipeline],
             schedule call failed outright for this split."""
             stats["evaluated_splits"] += 1
             per: Dict[str, ScheduleResult] = {}
+            # heterogeneous clusters: slices at cumulative offsets (in
+            # canonical name order) are disjoint, so class-bound plans
+            # of different workflows can never claim the same chips
+            off = 0
             for n in names:
-                r = sched(n, split[n])
+                r = sched(n, split[n], off if spec.host_groups else 0)
                 if r is None:
                     return None
                 per[n] = r
+                off += split[n]
             utils = {n: utility(n, per[n]) for n in names}
             return welfare_of(utils), utils, per
 
@@ -947,15 +1217,51 @@ def _greedy_splits(names: Sequence[str], lo: Dict[str, int], G: int,
             break
 
 
-def _subcluster(spec: hw.ClusterSpec, chips: int) -> hw.ClusterSpec:
+def _subcluster(spec: hw.ClusterSpec, chips: int,
+                offset: int = 0) -> hw.ClusterSpec:
     """A contiguous sub-cluster of ``chips`` chips (contiguity prune ii).
 
     Partial-host remainders are modeled explicitly as ``tail_chips``
     rather than truncated, so a 9-chip slice of a 4-chip/host cluster
     really provides 9 chips — no chips are silently dropped from the
     split search's pool.
+
+    On a heterogeneous spec the slice walks the host groups in order
+    starting ``offset`` chips in, taking whole (or partial, via a
+    reduced-host-count group) prefixes so each sliced chip keeps its
+    chip class.  Offsets make the split search's per-workflow slices
+    DISJOINT: on a mixed cluster a scarce class is granted to exactly
+    one workflow's slice instead of every slice claiming it.  Uniform
+    specs ignore ``offset`` — every k-chip slice is the same cluster.
     """
     import dataclasses as dc
+
+    if spec.host_groups:
+        left, skip = chips, offset
+        taken = []
+        for g in spec.groups():
+            if left <= 0:
+                break
+            used = min(skip, g.num_chips)
+            skip -= used
+            avail = g.num_chips - used
+            if avail <= 0:
+                continue
+            want = min(left, avail)
+            left -= want
+            # a mid-host start leaves a partial host at the slice head
+            head = min(want, -used % g.chips_per_host)
+            if head:
+                taken.append(dc.replace(g, num_hosts=1,
+                                        chips_per_host=head))
+                want -= head
+            take_hosts, rem = divmod(want, g.chips_per_host)
+            if take_hosts:
+                taken.append(dc.replace(g, num_hosts=take_hosts))
+            if rem:
+                taken.append(dc.replace(g, num_hosts=1, chips_per_host=rem))
+        return dc.replace(spec, num_hosts=0, tail_chips=0,
+                          host_groups=tuple(taken))
 
     full_hosts, tail = divmod(chips, spec.chips_per_host)
     if full_hosts >= 1:

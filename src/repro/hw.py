@@ -1,41 +1,190 @@
-"""TPU v5e hardware constants — single source of truth.
+"""Hardware model — chip classes and cluster topology.
 
-Used by the analytical cost model (serving simulator / profiler), the
-roofline analysis, and the scheduler's memory feasibility checks.
+Single source of truth for the analytical cost model (serving
+simulator / profiler), the roofline analysis, and the scheduler's
+memory feasibility checks.
+
+A :class:`ChipClass` bundles one accelerator generation's roofline
+constants (peak flops, HBM bytes/bandwidth, interconnect bandwidth)
+with the empirical efficiency knobs the cost model applies on top.
+``DEFAULT_CHIP_CLASS`` is the TPU v5e-class part the paper's uniform
+cluster assumed; the module-level constants below remain as aliases of
+its fields so legacy call sites keep reading the same numbers.
+
+Heterogeneous clusters are expressed by giving :class:`ClusterSpec` a
+tuple of :class:`HostGroup`s — contiguous runs of identical hosts, each
+bound to one chip class.  ``chip_table()`` flattens the groups into
+per-chip ``(host, domain, class)`` rows; high-bandwidth domains are
+numbered per host, so a domain can never span two hosts, two groups, or
+the tail boundary (TP groups therefore never span chip classes by
+construction).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
 
-PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
-HBM_BW = 819e9  # bytes/s per chip
-HBM_BYTES = 16 * 1024**3  # 16 GiB per chip
-ICI_LINK_BW = 50e9  # bytes/s per link
-ICI_LINKS_PER_CHIP = 4  # 2D torus
-DCI_BW = 25e9  # bytes/s per chip cross-pod (data-center interconnect)
 
-# empirical efficiency knobs for the *cost model* (not the roofline —
-# the roofline uses raw peaks).
-MXU_EFFICIENCY = 0.6  # sustained matmul fraction of peak in serving
-HBM_EFFICIENCY = 0.8  # sustained HBM stream fraction
-COLLECTIVE_LATENCY = 5e-6  # per-collective latency floor (s)
-HOST_TO_HBM_BW = 30e9  # weight-loading path (model swap cost)
+@dataclass(frozen=True)
+class ChipClass:
+    """One accelerator generation's constants for the cost model.
+
+    The first block is the raw roofline (peaks — used as-is by the
+    roofline analysis); the second block is the empirical efficiency
+    knobs the *cost model* multiplies in (sustained fractions, latency
+    floors, the weight-loading path for model swaps).
+    """
+
+    name: str
+    peak_flops_bf16: float  # FLOP/s per chip
+    hbm_bw: float  # bytes/s per chip
+    hbm_bytes: int  # HBM capacity per chip
+    ici_link_bw: float = 50e9  # bytes/s per ICI link
+    ici_links_per_chip: int = 4  # torus degree
+    dci_bw: float = 25e9  # bytes/s per chip cross-pod
+    vmem_bytes: int = 16 * 2**20  # on-core scratch (Pallas tile budget)
+
+    # empirical efficiency knobs for the *cost model* (not the roofline)
+    mxu_efficiency: float = 0.6  # sustained matmul fraction of peak
+    hbm_efficiency: float = 0.8  # sustained HBM stream fraction
+    collective_latency: float = 5e-6  # per-collective latency floor (s)
+    host_to_hbm_bw: float = 30e9  # weight-loading path (model swap cost)
+
+
+# The v5e-class default: exactly the constants the uniform-cluster code
+# has always used.  V5P is the bigger-HBM class (a 9B-at-TP=1 home);
+# V4I is the small-memory inference part that cannot hold a 9B at all.
+V5E = ChipClass(
+    name="v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * 1024**3,
+)
+V5P = ChipClass(
+    name="v5p",
+    peak_flops_bf16=459e12,
+    hbm_bw=2765e9,
+    hbm_bytes=95 * 1024**3,
+    ici_link_bw=90e9,
+    ici_links_per_chip=6,  # 3D torus
+    vmem_bytes=32 * 2**20,
+    mxu_efficiency=0.55,  # bigger MXUs sustain a slightly lower fraction
+    host_to_hbm_bw=60e9,
+)
+V4I = ChipClass(
+    name="v4i",
+    peak_flops_bf16=138e12,
+    hbm_bw=614e9,
+    hbm_bytes=8 * 1024**3,
+    ici_link_bw=25e9,
+    ici_links_per_chip=2,
+    hbm_efficiency=0.75,
+)
+
+DEFAULT_CHIP_CLASS = V5E
+
+CHIP_CLASSES: Dict[str, ChipClass] = {c.name: c for c in (V5E, V5P, V4I)}
+
+
+def register_chip_class(cls: ChipClass) -> ChipClass:
+    """Register a (possibly synthetic) chip class for name lookup.
+
+    Benchmarks use this for the class-blind baseline: one averaged
+    "blend" class standing in for a mixed cluster.
+    """
+    CHIP_CLASSES[cls.name] = cls
+    return cls
+
+
+def chip_class(name: str) -> ChipClass:
+    try:
+        return CHIP_CLASSES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown chip class {name!r}; known: {sorted(CHIP_CLASSES)}"
+        ) from None
+
+
+def blend_classes(parts: List[Tuple[ChipClass, int]], name: str = "blend") -> ChipClass:
+    """Chip-count-weighted average of several classes (class-blind view)."""
+    total = sum(n for _, n in parts)
+    if total <= 0:
+        raise ValueError("blend_classes needs at least one chip")
+
+    def avg(attr: str) -> float:
+        return sum(getattr(c, attr) * n for c, n in parts) / total
+
+    return ChipClass(
+        name=name,
+        peak_flops_bf16=avg("peak_flops_bf16"),
+        hbm_bw=avg("hbm_bw"),
+        hbm_bytes=int(avg("hbm_bytes")),
+        ici_link_bw=avg("ici_link_bw"),
+        ici_links_per_chip=max(1, round(avg("ici_links_per_chip"))),
+        dci_bw=avg("dci_bw"),
+        vmem_bytes=int(avg("vmem_bytes")),
+        mxu_efficiency=avg("mxu_efficiency"),
+        hbm_efficiency=avg("hbm_efficiency"),
+        collective_latency=avg("collective_latency"),
+        host_to_hbm_bw=avg("host_to_hbm_bw"),
+    )
+
+
+# Module-level aliases (v5e-class values).  Legacy call sites — and any
+# code that has not been made chip-class-aware — read these; they are
+# byte-identical to the pre-ChipClass constants.
+PEAK_FLOPS_BF16 = V5E.peak_flops_bf16  # FLOP/s per chip
+HBM_BW = V5E.hbm_bw  # bytes/s per chip
+HBM_BYTES = V5E.hbm_bytes  # 16 GiB per chip
+ICI_LINK_BW = V5E.ici_link_bw  # bytes/s per link
+ICI_LINKS_PER_CHIP = V5E.ici_links_per_chip  # 2D torus
+DCI_BW = V5E.dci_bw  # bytes/s per chip cross-pod
+
+MXU_EFFICIENCY = V5E.mxu_efficiency  # sustained matmul fraction of peak
+HBM_EFFICIENCY = V5E.hbm_efficiency  # sustained HBM stream fraction
+COLLECTIVE_LATENCY = V5E.collective_latency  # per-collective floor (s)
+HOST_TO_HBM_BW = V5E.host_to_hbm_bw  # weight-loading path
+
+
+@dataclass(frozen=True)
+class HostGroup:
+    """A contiguous run of identical hosts bound to one chip class.
+
+    ``num_hosts`` may be a partial tail: a group with ``chips_per_host``
+    smaller than its neighbours models a partially-populated host
+    explicitly, so packing can never stretch an hb domain (and hence a
+    TP group) across the tail boundary.
+    """
+
+    num_hosts: int
+    chips_per_host: int
+    chip_class: str = DEFAULT_CHIP_CLASS.name
+
+    @property
+    def num_chips(self) -> int:
+        return self.num_hosts * self.chips_per_host
+
+    def cls(self) -> ChipClass:
+        return chip_class(self.chip_class)
 
 
 @dataclass(frozen=True)
 class ClusterSpec:
     """Serving-cluster topology (paper's placement problem, TPU terms).
 
-    A *host* groups ``chips_per_host`` chips; ``hb_domain_size`` chips share
-    a high-bandwidth ICI domain (the NVLink-domain analogue) — TP groups
-    must stay inside one domain.  Each chip is divisible into
-    ``fractions_per_chip`` units (enforced by the engine's slot scheduler +
-    static HBM budgeting; the MPS analogue).
+    A *host* groups ``chips_per_host`` chips; ``hb_domain_size`` chips
+    share a high-bandwidth ICI domain (the NVLink-domain analogue) — TP
+    groups must stay inside one domain.  Each chip is divisible into
+    ``fractions_per_chip`` units (enforced by the engine's slot
+    scheduler + static HBM budgeting; the MPS analogue).
 
-    ``tail_chips`` models a partially-populated final host: a sub-cluster
-    of 9 chips on a 4-chip/host topology is 2 full hosts plus one tail
-    chip.  Tail chips hold TP=1 replicas only when they cannot complete an
-    hb domain, which placement enforces via the usual domain check.
+    Uniform clusters use the scalar fields; ``host_groups`` (when
+    non-empty) overrides them with an explicit heterogeneous layout.
+    ``tail_chips`` models a partially-populated final host; internally
+    it is materialised as an explicit partial :class:`HostGroup`, so
+    domains (and hence TP groups) cannot span the tail boundary —
+    that is enforced structurally by ``chip_table()``, not by a
+    docstring promise.
     """
 
     num_hosts: int = 4
@@ -43,10 +192,33 @@ class ClusterSpec:
     hb_domain_size: int = 2  # paper cluster: NVLink pairs
     fractions_per_chip: int = 10
     tail_chips: int = 0  # chips on one extra, partially-filled host
+    host_groups: Tuple[HostGroup, ...] = field(default=())
+
+    def __post_init__(self) -> None:
+        if self.host_groups and self.tail_chips:
+            raise ValueError(
+                "host_groups and tail_chips are mutually exclusive: "
+                "model the tail as an explicit partial HostGroup"
+            )
+
+    def groups(self) -> Tuple[HostGroup, ...]:
+        """The host groups, with scalar fields (and tail) materialised."""
+        if self.host_groups:
+            return self.host_groups
+        groups: Tuple[HostGroup, ...] = ()
+        if self.num_hosts:
+            groups += (HostGroup(self.num_hosts, self.chips_per_host),)
+        if self.tail_chips:
+            groups += (HostGroup(1, self.tail_chips),)
+        return groups
 
     @property
     def num_chips(self) -> int:
-        return self.num_hosts * self.chips_per_host + self.tail_chips
+        return sum(g.num_chips for g in self.groups())
+
+    @property
+    def total_hosts(self) -> int:
+        return sum(g.num_hosts for g in self.groups())
 
     @property
     def total_units(self) -> int:
@@ -54,6 +226,68 @@ class ClusterSpec:
 
     def domains_per_host(self) -> int:
         return self.chips_per_host // self.hb_domain_size
+
+    # -- chip classes ----------------------------------------------------
+
+    def classes(self) -> Tuple[str, ...]:
+        """Distinct chip-class names, in group order."""
+        seen: List[str] = []
+        for g in self.groups():
+            if g.chip_class not in seen:
+                seen.append(g.chip_class)
+        return tuple(seen)
+
+    @property
+    def is_uniform(self) -> bool:
+        return len(self.classes()) <= 1
+
+    def chips_of_class(self, name: str) -> int:
+        return sum(g.num_chips for g in self.groups() if g.chip_class == name)
+
+    def units_of_class(self, name: str) -> int:
+        return self.chips_of_class(name) * self.fractions_per_chip
+
+    def chip_table(self) -> Tuple[Tuple[int, int, str], ...]:
+        """Per-chip ``(host, domain, chip_class)`` rows.
+
+        Domains are numbered per host — the domain counter advances by
+        ``ceil(chips_in_host / hb_domain_size)`` after each host — so a
+        domain never spans two hosts, two groups, or the tail boundary.
+        For uniform specs whose ``chips_per_host`` is a multiple of
+        ``hb_domain_size`` this reproduces the legacy global
+        ``chip_index // hb_domain_size`` numbering exactly.
+        """
+        hb = self.hb_domain_size
+        rows: List[Tuple[int, int, str]] = []
+        host = 0
+        next_domain = 0
+        for g in self.groups():
+            for _ in range(g.num_hosts):
+                for j in range(g.chips_per_host):
+                    rows.append((host, next_domain + j // hb, g.chip_class))
+                next_domain += -(-g.chips_per_host // hb)  # ceil div
+                host += 1
+        return tuple(rows)
+
+
+def hetero_cluster(
+    groups: Tuple[HostGroup, ...],
+    *,
+    hb_domain_size: int = 2,
+    fractions_per_chip: int = 10,
+) -> ClusterSpec:
+    """A heterogeneous cluster from explicit host groups.
+
+    The scalar ``num_hosts``/``chips_per_host`` fields are zeroed so the
+    layout comes from ``host_groups`` alone.
+    """
+    return ClusterSpec(
+        num_hosts=0,
+        chips_per_host=max((g.chips_per_host for g in groups), default=0),
+        hb_domain_size=hb_domain_size,
+        fractions_per_chip=fractions_per_chip,
+        host_groups=tuple(groups),
+    )
 
 
 # paper-equivalent cluster sizes used across benchmarks (16 chips =

@@ -1,0 +1,141 @@
+"""Analytical Pallas block-size autotuning per (chip class, TP, batch).
+
+The flash-attention kernels hardcoded ``block_q = block_kv = 128``; on a
+heterogeneous fleet the right tile depends on the chip class (peak/BW
+ratio, VMEM capacity).  Running real sweeps per class inside the
+CPU-only profiler is not possible, so this module searches the block
+space *analytically* with the same roofline physics the cost model
+uses:
+
+    t(bq, bkv) = max(flops / (peak·mxu_eff), bytes(bq) / (bw·hbm_eff))
+                 + n_tiles(bq, bkv) · t_tile_overhead
+
+where K/V traffic is re-streamed once per query tile
+(``bytes`` shrinks as ``block_q`` grows) and the candidate is feasible
+only if its working set fits the class's VMEM budget.  Candidates
+respect the TPU tiling rules (see the Pallas guide): the lane dimension
+is a multiple of 128 and bf16 sublanes come in multiples of 16, so all
+candidate blocks are multiples of 128 clamped to the (padded) sequence.
+
+Results are memoized per ``(chip_class, tp, batch, seq, head_dim)`` —
+the per-class profile pass calls this once per TP degree, and the
+engine replicas reuse the cached plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional, Tuple
+
+from repro import hw
+
+LANE = 128  # MXU/VPU lane width: last-dim tile multiple
+BF16_SUBLANE = 16  # min second-to-last-dim tile for bf16
+TILE_OVERHEAD_S = 1e-6  # per-grid-step launch/prologue cost
+VMEM_HEADROOM = 0.8  # leave room for double-buffering + compiler spill
+
+_CANDIDATES = (128, 256, 512, 1024, 2048)
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    """One autotuned attention tiling."""
+
+    block_q: int
+    block_kv: int
+    est_time_s: float  # modeled per-(batch·head) kernel time
+    vmem_bytes: int  # modeled working set
+
+
+def _pad_up(n: int, multiple: int) -> int:
+    return -(-n // multiple) * multiple
+
+
+def _vmem_working_set(bq: int, bkv: int, head_dim: int,
+                      dtype_bytes: int) -> int:
+    """Q/K/V tiles + f32 score tile + f32 output accumulator."""
+    q = bq * head_dim * dtype_bytes
+    kv = 2 * bkv * head_dim * dtype_bytes
+    scores = bq * bkv * 4
+    acc = bq * head_dim * 4
+    return q + kv + scores + acc
+
+
+def _estimate(chip: hw.ChipClass, bq: int, bkv: int, *, seq: int,
+              head_dim: int, batch_heads: int, tp: int,
+              dtype_bytes: int) -> float:
+    """Modeled wall time of one full attention pass over the grid."""
+    n_q = -(-seq // bq)
+    n_kv = -(-seq // bkv)
+    # QK^T + PV: 4·S²·D flops per (batch, head), split over TP cores
+    flops = 4.0 * seq * seq * head_dim * batch_heads / tp
+    compute = flops / (chip.peak_flops_bf16 * chip.mxu_efficiency)
+    # Q and O stream once; K/V re-stream once per query tile
+    qo = 2.0 * seq * head_dim * dtype_bytes
+    kv = 2.0 * seq * head_dim * dtype_bytes * n_q
+    memory = ((qo + kv) * batch_heads / tp
+              / (chip.hbm_bw * chip.hbm_efficiency))
+    overhead = n_q * n_kv * batch_heads / tp * TILE_OVERHEAD_S
+    return max(compute, memory) + overhead
+
+
+@lru_cache(maxsize=4096)
+def _autotune_cached(chip_name: str, tp: int, batch: int, seq: int,
+                     head_dim: int, num_heads: int,
+                     dtype_bytes: int) -> BlockPlan:
+    chip = hw.chip_class(chip_name)
+    seq_p = _pad_up(max(seq, 1), LANE)
+    head_dim_p = _pad_up(max(head_dim, 1), LANE)
+    batch_heads = max(batch, 1) * max(num_heads, 1)
+    budget = int(chip.vmem_bytes * VMEM_HEADROOM)
+    best: Optional[BlockPlan] = None
+    for bq in _CANDIDATES:
+        if bq > seq_p and bq != _CANDIDATES[0]:
+            continue
+        for bkv in _CANDIDATES:
+            if bkv > seq_p and bkv != _CANDIDATES[0]:
+                continue
+            use = _vmem_working_set(min(bq, seq_p), min(bkv, seq_p),
+                                    head_dim_p, dtype_bytes)
+            if use > budget:
+                continue
+            t = _estimate(chip, min(bq, seq_p), min(bkv, seq_p),
+                          seq=seq_p, head_dim=head_dim_p,
+                          batch_heads=batch_heads, tp=max(tp, 1),
+                          dtype_bytes=dtype_bytes)
+            if best is None or t < best.est_time_s - 1e-15:
+                best = BlockPlan(block_q=min(bq, seq_p),
+                                 block_kv=min(bkv, seq_p),
+                                 est_time_s=t, vmem_bytes=use)
+    if best is None:  # pathological VMEM budget: fall back to min tile
+        best = BlockPlan(block_q=LANE, block_kv=LANE,
+                         est_time_s=float("inf"),
+                         vmem_bytes=_vmem_working_set(
+                             LANE, LANE, head_dim_p, dtype_bytes))
+    return best
+
+
+def autotune_attention_blocks(chip: Optional[hw.ChipClass] = None, *,
+                              tp: int = 1, batch: int = 1,
+                              seq_len: int = 2048, head_dim: int = 128,
+                              num_heads: int = 8,
+                              dtype_bytes: int = 2) -> BlockPlan:
+    """Best (block_q, block_kv) for flash attention on ``chip``.
+
+    Pure analytical search (roofline + VMEM feasibility), memoized per
+    ``(chip_class, tp, batch, seq, head_dim, num_heads)`` — the profiler
+    calls this once per ``(chip_class, tp)`` sweep point.
+    """
+    chip = chip or hw.DEFAULT_CHIP_CLASS
+    return _autotune_cached(chip.name, int(tp), int(batch), int(seq_len),
+                            int(head_dim), int(num_heads), int(dtype_bytes))
+
+
+def autotune_cache_info() -> Tuple[int, int]:
+    """(hits, misses) of the memo cache — test/telemetry hook."""
+    info = _autotune_cached.cache_info()
+    return info.hits, info.misses
+
+
+def clear_autotune_cache() -> None:
+    _autotune_cached.cache_clear()

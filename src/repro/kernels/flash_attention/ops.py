@@ -1,20 +1,32 @@
 """Jit'd public wrapper: layout adaptation + interpret fallback."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from repro.kernels.autotune import autotune_attention_blocks
 from repro.kernels.common import use_interpret
 from repro.kernels.flash_attention.kernel import flash_attention
 
 
 def flash_attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                       window: int = 0, block_q: int = 128,
-                       block_kv: int = 128) -> jax.Array:
+                       window: int = 0, block_q: Optional[int] = None,
+                       block_kv: Optional[int] = None,
+                       chip=None) -> jax.Array:
     """Model-layout entry point.
 
     q: (B, S, H, D); k/v: (B, S, KV, D) — as produced by attention_qkv.
-    Returns (B, S, H, D).
+    Returns (B, S, H, D).  Block sizes default to the analytical
+    autotuner's pick for ``chip`` (the default chip class when None);
+    pass explicit ``block_q``/``block_kv`` to override.
     """
+    if block_q is None or block_kv is None:
+        B, S, H, D = q.shape
+        plan = autotune_attention_blocks(chip, batch=B, seq_len=S,
+                                         head_dim=D, num_heads=H)
+        block_q = block_q or plan.block_q
+        block_kv = block_kv or plan.block_kv
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)

@@ -18,6 +18,18 @@ When the combined estimate blows the workflow's SLO target (times
 ``headroom``), the request is shed per its class's policy: ``reject``
 drops it at the door, ``degrade`` admits it as best-effort (it runs but
 yields to every deadline class), ``never`` always admits.
+
+Just-in-time model substitution sits between "admit" and "shed": a
+workflow registered with ``substitutes`` (workflow-local LLM name ->
+the substitute tier's Router, per ``ArchConfig.substitute``) re-prices
+an over-deadline arrival against the substitute replicas' live backlog
+and — when the cheaper tier still makes the deadline — admits it as
+``SUBSTITUTE`` instead of shedding.  A substituted request keeps its
+own SLO class and deadline (substitution never upgrades a request);
+the driver reroutes its calls to the substitute's replicas.  Observed
+per-workflow substitution rates (:meth:`substitution_rates`) feed back
+into :meth:`repro.core.pipeline.MergedPipeline.with_substitution` so
+the pooled share attribution follows the traffic that actually moved.
 """
 
 from __future__ import annotations
@@ -31,6 +43,7 @@ from repro.qos.slo import SLOClass, WorkModel, WorkflowQoS
 ADMIT = "admit"
 REJECT = "reject"
 DEGRADE = "degrade"
+SUBSTITUTE = "substitute"
 
 
 @dataclass
@@ -39,6 +52,7 @@ class AdmissionStats:
     admitted: int = 0
     rejected: int = 0
     degraded: int = 0
+    substituted: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -46,6 +60,7 @@ class AdmissionStats:
             "admitted": self.admitted,
             "rejected": self.rejected,
             "degraded": self.degraded,
+            "substituted": self.substituted,
         }
 
 
@@ -56,6 +71,9 @@ class _Entry:
     routers: Dict[str, object] = field(default_factory=dict)
     predictor: Optional[Callable[[float], float]] = None
     stats: AdmissionStats = field(default_factory=AdmissionStats)
+    # JIT substitution: workflow-local llm name -> the substitute tier's
+    # Router (empty = this workflow never substitutes)
+    substitutes: Dict[str, object] = field(default_factory=dict)
     # observed-rate EWMA state
     last_arrival: Optional[float] = None
     ia_ewma: Optional[float] = None
@@ -82,13 +100,22 @@ class AdmissionController:
 
     def register(self, workflow: str, slo: SLOClass, work: WorkModel, *,
                  routers: Optional[Dict[str, object]] = None,
-                 predictor: Optional[Callable[[float], float]] = None) -> None:
+                 predictor: Optional[Callable[[float], float]] = None,
+                 substitutes: Optional[Dict[str, object]] = None) -> None:
         self._entries[workflow] = _Entry(
             slo=slo, work=work, routers=dict(routers or {}),
-            predictor=predictor)
+            predictor=predictor, substitutes=dict(substitutes or {}))
 
     def stats(self) -> Dict[str, dict]:
         return {w: e.stats.as_dict() for w, e in self._entries.items()}
+
+    def substitution_rates(self) -> Dict[str, float]:
+        """Observed substituted/arrived fraction per workflow — the rates
+        :meth:`MergedPipeline.with_substitution` re-attributes shares
+        with."""
+        return {w: (e.stats.substituted / e.stats.arrived
+                    if e.stats.arrived else 0.0)
+                for w, e in self._entries.items()}
 
     # -- delay estimation --------------------------------------------------
 
@@ -107,14 +134,17 @@ class AdmissionController:
         return 1.0 / e.ia_ewma
 
     @staticmethod
-    def _queue_delay(e: _Entry, llm: str) -> float:
+    def _queue_delay(e: _Entry, llm: str,
+                     router: Optional[object] = None) -> float:
         """Queued-work seconds ahead of a new call to ``llm``: the least
         backlog across that stage's live replicas, in tokens, priced at
         the work model's per-token service time.  Only replicas the
         workflow can actually route to count — a weighted Router view
         never submits to zero-weight replicas, so an idle replica in
-        another tenant's block must not mask this workflow's backlog."""
-        router = e.routers.get(llm)
+        another tenant's block must not mask this workflow's backlog.
+        ``router`` overrides the registered one (the substitution path
+        prices the substitute tier's replicas instead)."""
+        router = router if router is not None else e.routers.get(llm)
         if router is None:
             return 0.0
         replicas = getattr(router, "replicas", None)
@@ -153,10 +183,22 @@ class AdmissionController:
         )
         return max(model_est, live_est)
 
+    def _substituted_delay(self, e: _Entry) -> float:
+        """Live delay estimate with substitutable stages re-priced
+        against their substitute tier's replicas.  Model (rate-EWMA)
+        pricing is skipped: the pipeline predictor knows nothing about
+        the substitute's capacity, and substitution exists precisely for
+        bursts where the substitute tier has live headroom."""
+        return e.work.serial_s + sum(
+            self._queue_delay(e, m, router=e.substitutes.get(m))
+            for m in e.work.per_call_s
+        )
+
     # -- the front door ----------------------------------------------------
 
     def admit(self, workflow: str, now: float) -> str:
-        """Decide one arrival: ``admit`` | ``reject`` | ``degrade``."""
+        """Decide one arrival:
+        ``admit`` | ``substitute`` | ``reject`` | ``degrade``."""
         e = self._entries.get(workflow)
         if e is None:
             return ADMIT
@@ -167,6 +209,13 @@ class AdmissionController:
                 or predicted <= target * self.headroom):
             e.stats.admitted += 1
             return ADMIT
+        # JIT substitution: before shedding, re-price against the
+        # substitute tier — admit there when it still makes the deadline
+        # (at the request's OWN class; substitution never upgrades it)
+        if e.substitutes and \
+                self._substituted_delay(e) <= target * self.headroom:
+            e.stats.substituted += 1
+            return SUBSTITUTE
         if e.slo.shed_policy == "reject":
             e.stats.rejected += 1
             return REJECT
@@ -177,6 +226,7 @@ class AdmissionController:
 def fleet_admission(qos: Dict[str, WorkflowQoS],
                     routers: Dict[str, Dict[str, object]], *,
                     predictors: Optional[Dict[str, Callable[[float], float]]] = None,
+                    substitutes: Optional[Dict[str, Dict[str, object]]] = None,
                     headroom: float = 1.0) -> AdmissionController:
     """One controller for a deployed fleet.
 
@@ -184,7 +234,10 @@ def fleet_admission(qos: Dict[str, WorkflowQoS],
     workflow's router dict (workflow -> local llm name -> Router, the
     same object handed to its ClusterDriver), ``predictors`` optionally
     maps a workflow to a rate -> predicted-latency callable (e.g.
-    ``lambda lam: pipeline.predict(alloc, lam).latency``).  The
+    ``lambda lam: pipeline.predict(alloc, lam).latency``).
+    ``substitutes`` maps workflow -> local llm name -> the substitute
+    tier's Router (mirror the driver's ``substitute_map``); workflows
+    with an entry get the JIT-substitution degrade path.  The
     controller is also installed on each ``WorkflowQoS.admission``.
     """
     ctrl = AdmissionController(headroom=headroom)
@@ -192,6 +245,7 @@ def fleet_admission(qos: Dict[str, WorkflowQoS],
         ctrl.register(
             w, q.slo, q.work,
             routers=routers.get(w, {}),
-            predictor=(predictors or {}).get(w))
+            predictor=(predictors or {}).get(w),
+            substitutes=(substitutes or {}).get(w))
         q.admission = ctrl
     return ctrl

@@ -1,4 +1,4 @@
-"""Analytical step-cost model for LLM serving on TPU v5e.
+"""Analytical step-cost model for LLM serving on TPU-class chips.
 
 One implementation shared by (a) the discrete-event cluster simulator that
 the Scepsy profiler replays traces through, and (b) the §Roofline report —
@@ -11,14 +11,22 @@ Every step time is the classic three-term roofline:
 
 with TP collectives modeled explicitly (2 all-reduces per layer, ring
 over the `model` axis inside one ICI domain).
+
+Every public cost function takes a keyword-only ``chip`` — a
+:class:`repro.hw.ChipClass` supplying the roofline constants and
+efficiency knobs.  ``chip=None`` means ``hw.DEFAULT_CHIP_CLASS`` (the
+v5e-class part), which reproduces the legacy uniform-cluster numbers
+bit-for-bit.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 from repro import hw
 from repro.configs.base import ArchConfig
+from repro.hw import ChipClass
 
 BYTES_PER_PARAM = 2  # bf16 weights
 KV_BYTES = 2  # bf16 cache
@@ -107,49 +115,59 @@ def model_bytes(cfg: ArchConfig) -> float:
     return _cfg_consts(cfg)[2] * BYTES_PER_PARAM
 
 
-def tp_collective_time(cfg: ArchConfig, tokens: int, tp: int) -> float:
+def tp_collective_time(cfg: ArchConfig, tokens: int, tp: int, *,
+                       chip: Optional[ChipClass] = None) -> float:
     """2 ring all-reduces of (tokens, d_model) bf16 per layer over TP."""
     if tp <= 1:
         return 0.0
+    chip = chip or hw.DEFAULT_CHIP_CLASS
     payload = tokens * cfg.d_model * BYTES_PER_PARAM
-    ring = 2.0 * (tp - 1) / tp * payload / hw.ICI_LINK_BW
+    ring = 2.0 * (tp - 1) / tp * payload / chip.ici_link_bw
     n_coll = 2 * (cfg.num_layers + cfg.encoder_layers)
-    return n_coll * (ring + hw.COLLECTIVE_LATENCY)
+    return n_coll * (ring + chip.collective_latency)
 
 
 def prefill_cost(cfg: ArchConfig, prompt_tokens: int, *, tp: int = 1,
-                 fraction: float = 1.0, cached_tokens: int = 0) -> StepCost:
+                 fraction: float = 1.0, cached_tokens: int = 0,
+                 chip: Optional[ChipClass] = None) -> StepCost:
     """Cost of prefilling one sequence (processed as one chunked pass)."""
+    chip = chip or hw.DEFAULT_CHIP_CLASS
     new = max(prompt_tokens - cached_tokens, 1)
     # attention span grows with position; integrate: avg span ~ prompt/2
     flops = 0.0
     avg_ctx = cached_tokens + new / 2
     flops = new * flops_per_token(cfg, int(avg_ctx))
-    compute = flops / (tp * fraction * hw.PEAK_FLOPS_BF16 * hw.MXU_EFFICIENCY)
+    compute = flops / (tp * fraction * chip.peak_flops_bf16
+                       * chip.mxu_efficiency)
     # prefill is compute-bound; weight reads amortize over tokens
     bytes_ = model_bytes(cfg) / max(new / 256.0, 1.0)
-    memory = bytes_ / (tp * fraction * hw.HBM_BW * hw.HBM_EFFICIENCY)
-    coll = tp_collective_time(cfg, new, tp)
+    memory = bytes_ / (tp * fraction * chip.hbm_bw * chip.hbm_efficiency)
+    coll = tp_collective_time(cfg, new, tp, chip=chip)
     return StepCost(compute, memory, coll)
 
 
 def decode_step_cost(cfg: ArchConfig, batch: int, avg_context: int, *,
-                     tp: int = 1, fraction: float = 1.0) -> StepCost:
+                     tp: int = 1, fraction: float = 1.0,
+                     chip: Optional[ChipClass] = None) -> StepCost:
     """Cost of one engine iteration decoding ``batch`` sequences."""
+    chip = chip or hw.DEFAULT_CHIP_CLASS
     batch = max(batch, 1)
     flops = batch * flops_per_token(cfg, avg_context)
-    compute = flops / (tp * fraction * hw.PEAK_FLOPS_BF16 * hw.MXU_EFFICIENCY)
+    compute = flops / (tp * fraction * chip.peak_flops_bf16
+                       * chip.mxu_efficiency)
     bytes_ = (model_bytes(cfg)
               + batch * kv_bytes_per_seq(cfg, avg_context))
-    memory = bytes_ / (tp * fraction * hw.HBM_BW * hw.HBM_EFFICIENCY)
-    coll = tp_collective_time(cfg, batch, tp)
+    memory = bytes_ / (tp * fraction * chip.hbm_bw * chip.hbm_efficiency)
+    coll = tp_collective_time(cfg, batch, tp, chip=chip)
     return StepCost(compute, memory, coll)
 
 
 def max_batch_size(cfg: ArchConfig, avg_context: int, *, tp: int = 1,
-                   fraction: float = 1.0, headroom: float = 0.9) -> int:
+                   fraction: float = 1.0, headroom: float = 0.9,
+                   chip: Optional[ChipClass] = None) -> int:
     """KV-capacity-limited max concurrent sequences per replica."""
-    budget = tp * fraction * hw.HBM_BYTES * headroom - model_bytes(cfg)
+    chip = chip or hw.DEFAULT_CHIP_CLASS
+    budget = tp * fraction * chip.hbm_bytes * headroom - model_bytes(cfg)
     if budget <= 0:
         return 0
     per_seq = kv_bytes_per_seq(cfg, avg_context)
@@ -157,15 +175,26 @@ def max_batch_size(cfg: ArchConfig, avg_context: int, *, tp: int = 1,
 
 
 def min_fraction_units(cfg: ArchConfig, spec, avg_context: int = 2048,
-                       min_seqs: int = 1) -> int:
+                       min_seqs: int = 1,
+                       chip: Optional[ChipClass] = None) -> int:
     """Minimum GPU-fraction units to load params + a minimal KV cache
     (the scheduler's per-LLM lower bound, paper §5)."""
+    chip = chip or hw.DEFAULT_CHIP_CLASS
     need = (model_bytes(cfg)
             + min_seqs * kv_bytes_per_seq(cfg, avg_context)) / 0.9
-    units = math.ceil(need / hw.HBM_BYTES * spec.fractions_per_chip)
+    units = math.ceil(need / chip.hbm_bytes * spec.fractions_per_chip)
     return max(units, 1)
 
 
-def swap_cost(cfg: ArchConfig) -> float:
+def fits_on_class(cfg: ArchConfig, chip: ChipClass, *, max_tp: int = 1,
+                  avg_context: int = 2048) -> bool:
+    """Whether the model fits (params + one sequence's KV) on ``chip``
+    at some TP degree up to ``max_tp``."""
+    need = (model_bytes(cfg) + kv_bytes_per_seq(cfg, avg_context)) / 0.9
+    return need <= max_tp * chip.hbm_bytes
+
+
+def swap_cost(cfg: ArchConfig, *, chip: Optional[ChipClass] = None) -> float:
     """Model-swap (weight reload) time — Aegaeon baseline overhead."""
-    return model_bytes(cfg) / hw.HOST_TO_HBM_BW
+    chip = chip or hw.DEFAULT_CHIP_CLASS
+    return model_bytes(cfg) / chip.host_to_hbm_bw

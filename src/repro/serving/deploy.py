@@ -15,11 +15,18 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+from repro import hw
 from repro.configs.base import ArchConfig
 from repro.core.pipeline import Allocation
 from repro.qos.policy import make_policy
 from repro.serving.simulator import EngineSim, EventLoop, Router
 from repro.workflows.runtime import Workflow
+
+
+def _alloc_chip(alloc: Allocation):
+    """The hw.ChipClass an allocation is bound to (None = default)."""
+    cc = getattr(alloc, "chip_class", None)
+    return hw.chip_class(cc) if cc else None
 
 
 def routers_from_allocations(wf: Workflow, allocations: Dict[str, Allocation],
@@ -35,7 +42,7 @@ def routers_from_allocations(wf: Workflow, allocations: Dict[str, Allocation],
                       name=f"{llm}/{r}", prefix_caching=prefix_caching,
                       avg_context=avg_context,
                       policy=make_policy(discipline),
-                      preemption=preemption)
+                      preemption=preemption, chip=_alloc_chip(alloc))
             for r in range(alloc.replicas)
         ]
         routers[llm] = Router(engines)
@@ -60,10 +67,18 @@ def fleet_routers_from_placement(
     Router, directly usable as a ClusterDriver's ``routers``.
     """
     F = placement.spec.fractions_per_chip
+    table = placement.spec.chip_table()
     groups: Dict[Tuple[str, str], List[EngineSim]] = {}
     for inst in placement.instances:
         wf_name, _, llm = inst.llm.partition("/")
         cfg = wfs[wf_name].llms[llm]
+        # each replica runs at the class of the chip it actually landed
+        # on — for class-bound instances that is the binding; for
+        # unbound instances on a heterogeneous cluster it is whatever
+        # the packer picked (the class-blind penalty is real)
+        cc = getattr(inst, "chip_class", None)
+        if cc is None and inst.chips and inst.chips[0] < len(table):
+            cc = table[inst.chips[0]][2]
         groups.setdefault((wf_name, llm), []).append(
             EngineSim(cfg, loop, tp=inst.tp,
                       fraction=inst.units_per_chip / F,
@@ -71,7 +86,8 @@ def fleet_routers_from_placement(
                       prefix_caching=prefix_caching,
                       avg_context=avg_context,
                       policy=make_policy(discipline),
-                      preemption=preemption))
+                      preemption=preemption,
+                      chip=hw.chip_class(cc) if cc else None))
     out: Dict[str, Dict[str, Router]] = {}
     for (wf_name, llm), engines in groups.items():
         out.setdefault(wf_name, {})[llm] = Router(engines)
@@ -125,7 +141,7 @@ def tenant_routers(allocations: Dict[str, Allocation],
                       policy=make_policy(
                           discipline,
                           weights=wfq_weights.get(cid, {}).get(r)),
-                      preemption=preemption)
+                      preemption=preemption, chip=_alloc_chip(alloc))
             for r in range(alloc.replicas)
         ]
         routers[cid] = Router(engines)

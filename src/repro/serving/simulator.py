@@ -124,25 +124,29 @@ class EngineSim:
                  policy: Optional[object] = None,
                  preemption: bool = False,
                  kv_capacity_override: Optional[int] = None,
-                 keep_done: bool = True):
+                 keep_done: bool = True,
+                 chip: Optional[hw.ChipClass] = None):
         self.cfg = cfg
         self.policy = policy
         self.loop = loop
         self.tp = tp
         self.fraction = fraction
+        self.chip = chip or hw.DEFAULT_CHIP_CLASS
         self.name = name or cfg.name
         self.prefix_caching = prefix_caching
         self.preemption = preemption
         self.prefill_chunk = prefill_chunk
         self.decode_quantum = decode_quantum
-        mb = cm.max_batch_size(cfg, avg_context, tp=tp, fraction=fraction)
+        mb = cm.max_batch_size(cfg, avg_context, tp=tp, fraction=fraction,
+                               chip=self.chip)
         self.max_batch = max_batch_override or max(min(mb, 256), 1)
         # modeled KV residency budget in tokens: the replica's HBM share
         # minus weights, divided by per-token KV bytes
         if kv_capacity_override is not None:
             self.kv_capacity_tokens = int(kv_capacity_override)
         else:
-            budget = tp * fraction * hw.HBM_BYTES * 0.9 - cm.model_bytes(cfg)
+            budget = (tp * fraction * self.chip.hbm_bytes * 0.9
+                      - cm.model_bytes(cfg))
             per_tok = max(cm.kv_bytes_per_seq(cfg, 1), 1.0)
             self.kv_capacity_tokens = max(int(budget / per_tok), 1)
         self.radix = RadixCache(self.kv_capacity_tokens)
@@ -368,7 +372,8 @@ class EngineSim:
             self.cached_tokens += req.cached_prefix
             cost = cm.prefill_cost(self.cfg, eff_prompt, tp=self.tp,
                                    fraction=self.fraction,
-                                   cached_tokens=req.cached_prefix)
+                                   cached_tokens=req.cached_prefix,
+                                   chip=self.chip)
             duration += cost.total
             req.t_start_service = t0
 
@@ -381,7 +386,8 @@ class EngineSim:
             ctx = sum(r.prompt_tokens + (r.output_tokens - r.remaining)
                       for r in batch) / len(batch)
             step = cm.decode_step_cost(self.cfg, len(batch), int(ctx),
-                                       tp=self.tp, fraction=self.fraction)
+                                       tp=self.tp, fraction=self.fraction,
+                                       chip=self.chip)
             duration += q * step.total
             for r in batch:
                 r.remaining -= q

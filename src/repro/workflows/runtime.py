@@ -187,6 +187,9 @@ class RequestRecord:
     deadline: float = math.inf  # absolute; inf = best-effort
     rejected: bool = False  # shed at the front door, never dispatched
     degraded: bool = False  # admitted, but demoted to best-effort
+    # admitted via JIT model substitution: calls to substitutable stages
+    # route to the substitute tier's replicas; SLO class/deadline kept
+    substituted: bool = False
     issued_s: float = 0.0  # expected work already dispatched (WorkModel)
 
     @property
@@ -270,11 +273,16 @@ class ClusterDriver:
     def __init__(self, wf: Workflow, routers: Dict[str, Router],
                  loop: EventLoop,
                  route_map: Optional[Dict[str, str]] = None,
-                 telemetry=None, qos=None, sink=None):
+                 telemetry=None, qos=None, sink=None,
+                 substitute_map: Optional[Dict[str, str]] = None):
         self.wf = wf
         self.routers = routers
         self.loop = loop
         self.route_map = route_map or {}
+        # JIT substitution routes: workflow-local llm name -> router key
+        # of the substitute tier's replicas (used only for requests the
+        # admission controller decided to substitute)
+        self.substitute_map = substitute_map or {}
         self.telemetry = telemetry
         self.qos = qos
         self.sink = sink
@@ -292,8 +300,16 @@ class ClusterDriver:
                              {id(r): r for r in routers.values()}.values()
                              if hasattr(r, "forget")]
 
-    def router_for(self, llm: str) -> Router:
-        """The router serving a workflow-local LLM name (tenancy-aware)."""
+    def router_for(self, llm: str, rec: Optional["RequestRecord"] = None
+                   ) -> Router:
+        """The router serving a workflow-local LLM name (tenancy-aware).
+
+        When ``rec`` was admitted via substitution, stages with a
+        substitute route go to the substitute tier's replicas instead.
+        """
+        if rec is not None and rec.substituted \
+                and llm in self.substitute_map:
+            return self.routers[self.substitute_map[llm]]
         return self.routers[self.route_map.get(llm, llm)]
 
     def schedule_open_loop(self, arrival_rate: float, n_requests: int, *,
@@ -417,6 +433,18 @@ class ClusterDriver:
                         self.telemetry.record_shed(
                             self.wf.name, slo.name, "reject", self.loop.now)
                     return
+                if decision == "substitute":
+                    # rerouted to the substitute tier; class and
+                    # deadline are KEPT (substitution never upgrades)
+                    rec.substituted = True
+                    if self.sink is not None and \
+                            hasattr(self.sink, "observe_substitute"):
+                        self.sink.observe_substitute(self.wf.name)
+                    if self.telemetry is not None and \
+                            hasattr(self.telemetry, "record_shed"):
+                        self.telemetry.record_shed(
+                            self.wf.name, slo.name, "substitute",
+                            self.loop.now)
                 if decision == "degrade":
                     rec.degraded = True
                     rec.deadline = math.inf
@@ -465,7 +493,7 @@ class ClusterDriver:
                 workflow_request=rec.request_id,
                 prefix=prefix, true_prefix=truth,
                 qos=self._request_qos(rec, c.llm))
-            self.router_for(c.llm).submit(req)
+            self.router_for(c.llm, rec).submit(req)
 
     def _prefix_for(self, h: int, c: Call
                     ) -> Tuple[Tuple[Segment, ...], int]:

@@ -1,0 +1,327 @@
+"""Heterogeneous chip classes + just-in-time model substitution.
+
+Covers the hetero tentpole's load-bearing invariants: a uniform
+cluster written as an explicit default-class host group schedules and
+places bit-for-bit like the legacy spec (the ChipClass refactor is a
+pure extension); TP groups never span chip classes or hb domains
+(hypothesis property over random mixed clusters); the admission
+layer's SUBSTITUTE decision conserves served calls and never upgrades
+a request's SLO class or deadline; and the per-(chip_class, tp)
+profiler sweep memo makes re-profiling across classes free.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro import hw
+from repro.core import profiler
+from repro.core.pipeline import Allocation
+from repro.core.placement import PlacementError, place_fleet
+from repro.core.scepsy import build_pipeline, deploy_multi
+from repro.core.scheduler import SchedulerConfig, schedule
+from repro.qos.admission import (ADMIT, SUBSTITUTE, AdmissionController,
+                                 fleet_admission)
+from repro.qos.slo import SLOClass, WorkModel, WorkflowQoS
+from repro.serving.deploy import pooled_fleet_routers, tenant_routers
+from repro.serving.simulator import EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+LEGACY = hw.ClusterSpec(num_hosts=2, chips_per_host=4, hb_domain_size=2)
+EXPLICIT = hw.hetero_cluster(
+    [hw.HostGroup(num_hosts=2, chips_per_host=4,
+                  chip_class=hw.DEFAULT_CHIP_CLASS.name)],
+    hb_domain_size=2)
+
+
+@pytest.fixture(scope="module")
+def react_pipeline():
+    pipe, stats, _ = build_pipeline(get_workflow("react_agent"),
+                                    n_trace_requests=6,
+                                    max_profile_groups=4, seed=0)
+    return pipe, stats
+
+
+# ---------------------------------------------------------------------------
+# uniform-cluster parity: explicit default class == legacy spec
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_default_class_schedule_parity(react_pipeline):
+    pipe, _ = react_pipeline
+    cfg = SchedulerConfig(max_tp=2)
+    r_legacy = schedule(pipe, LEGACY, 1.0, cfg)
+    r_explicit = schedule(pipe, EXPLICIT, 1.0, cfg)
+    assert r_legacy.allocations == r_explicit.allocations
+    assert all(a.chip_class is None
+               for a in r_explicit.allocations.values())
+    assert r_legacy.units == r_explicit.units
+    assert r_legacy.prediction.latency == r_explicit.prediction.latency
+    assert r_legacy.prediction.max_throughput == \
+        r_explicit.prediction.max_throughput
+
+
+def test_uniform_default_class_placement_parity(react_pipeline):
+    pipe, _ = react_pipeline
+    cfg = SchedulerConfig(max_tp=2)
+    allocs = schedule(pipe, LEGACY, 1.0, cfg).allocations
+    p_legacy = place_fleet({"react_agent": dict(allocs)}, LEGACY)
+    p_explicit = place_fleet({"react_agent": dict(allocs)}, EXPLICIT)
+    m_legacy = p_legacy.to_deployment()
+    m_explicit = p_explicit.to_deployment()
+    # instance-for-instance identical chips; the explicit spec's
+    # manifest additionally records its host groups
+    assert m_legacy["instances"] == m_explicit["instances"]
+    assert "host_groups" not in m_legacy["cluster"]
+    assert m_explicit["cluster"]["host_groups"] == [
+        {"chip_class": hw.DEFAULT_CHIP_CLASS.name,
+         "num_hosts": 2, "chips_per_host": 4}]
+
+
+def test_uniform_chip_table_matches_legacy_domains():
+    table = EXPLICIT.chip_table()
+    assert len(table) == LEGACY.num_chips
+    for i, (host, domain, cls) in enumerate(table):
+        assert host == i // LEGACY.chips_per_host
+        assert domain == i // LEGACY.hb_domain_size
+        assert cls == hw.DEFAULT_CHIP_CLASS.name
+
+
+# ---------------------------------------------------------------------------
+# property: TP groups never span chip classes (or hb domains)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _group = st.tuples(st.sampled_from(["v5e", "v5p", "v4i"]),
+                       st.integers(1, 2), st.sampled_from([2, 4]))
+    _alloc = st.tuples(st.integers(1, 2),          # replicas
+                       st.sampled_from([1, 2]),    # tp
+                       st.booleans())               # bind to a class?
+
+    @given(groups=st.lists(_group, min_size=1, max_size=3, unique=True),
+           allocs=st.lists(_alloc, min_size=1, max_size=3),
+           bind_idx=st.integers(0, 5))
+    @settings(max_examples=30, deadline=None)
+    def test_tp_groups_never_span_classes(groups, allocs, bind_idx):
+        spec = hw.hetero_cluster(
+            [hw.HostGroup(num_hosts=n, chips_per_host=c, chip_class=cls)
+             for cls, n, c in groups],
+            hb_domain_size=2)
+        classes = spec.classes()
+        table = spec.chip_table()
+        fleet = {"wf": {
+            f"m{i}": Allocation(
+                replicas=r, tp=tp,
+                chip_class=(classes[bind_idx % len(classes)]
+                            if bind else None))
+            for i, (r, tp, bind) in enumerate(allocs)}}
+        try:
+            placement = place_fleet(fleet, spec)
+        except PlacementError:
+            return  # infeasible shapes are fine; only placed ones matter
+        placement.validate()  # raises on any span/binding violation
+        for inst in placement.instances:
+            rows = [table[c] for c in inst.chips]
+            assert len({cls for _, _, cls in rows}) == 1
+            assert len({dom for _, dom, _ in rows}) == 1
+            bound = fleet["wf"][inst.llm.split("/", 1)[1]].chip_class
+            if bound is not None:
+                assert all(cls == bound for _, _, cls in rows)
+
+
+# ---------------------------------------------------------------------------
+# substitution: decision logic, conservation, never-upgrade
+# ---------------------------------------------------------------------------
+
+
+class _FakeReplica:
+    def __init__(self, load):
+        self.load = load
+        self.failed = False
+
+
+class _FakeRouter:
+    def __init__(self, *loads):
+        self.replicas = [_FakeReplica(x) for x in loads]
+
+
+def _silver_entry(ctrl, busy, sub=None):
+    slo = SLOClass("silver", latency_target_s=1.0, shed_policy="degrade")
+    work = WorkModel(per_call_s={"m": 0.1}, total_s=0.1, serial_s=0.1,
+                     sec_per_token={"m": 0.001})
+    ctrl.register("wf", slo, work, routers={"m": busy},
+                  substitutes={"m": sub} if sub else None)
+
+
+def test_admission_substitutes_before_shedding():
+    ctrl = AdmissionController(min_rate_samples=10 ** 9)
+    # primary backlog prices the request over its 1s deadline; the idle
+    # substitute tier brings it back under
+    _silver_entry(ctrl, _FakeRouter(5000.0), sub=_FakeRouter(0.0))
+    assert ctrl.admit("wf", now=0.0) == SUBSTITUTE
+    stats = ctrl.stats()["wf"]
+    assert stats == {"arrived": 1, "admitted": 0, "rejected": 0,
+                     "degraded": 0, "substituted": 1}
+    assert ctrl.substitution_rates()["wf"] == 1.0
+
+
+def test_admission_without_substitute_sheds():
+    ctrl = AdmissionController(min_rate_samples=10 ** 9)
+    _silver_entry(ctrl, _FakeRouter(5000.0))
+    assert ctrl.admit("wf", now=0.0) == "degrade"
+    assert ctrl.stats()["wf"]["substituted"] == 0
+
+
+def test_admission_backlogged_substitute_is_no_escape():
+    ctrl = AdmissionController(min_rate_samples=10 ** 9)
+    _silver_entry(ctrl, _FakeRouter(5000.0), sub=_FakeRouter(9000.0))
+    assert ctrl.admit("wf", now=0.0) == "degrade"
+
+
+def test_admission_idle_primary_admits_normally():
+    ctrl = AdmissionController(min_rate_samples=10 ** 9)
+    _silver_entry(ctrl, _FakeRouter(0.0), sub=_FakeRouter(0.0))
+    assert ctrl.admit("wf", now=0.0) == ADMIT
+
+
+@pytest.fixture(scope="module")
+def substitution_run():
+    """A pooled two-workflow burst where debate's judge (8B, bronze)
+    substitutes to react's qwen tier — the bench_hetero Part B flow at
+    test scale."""
+    lams = {"react_agent": 1.0, "debate": 1.6}
+    wfs = {n: get_workflow(n) for n in lams}
+    spec = hw.ClusterSpec(num_hosts=2, chips_per_host=4)
+    dep = deploy_multi(list(wfs.values()), spec, lams,
+                       scheduler_config=SchedulerConfig(max_tp=2),
+                       mode="pooled", n_trace_requests=6,
+                       max_profile_groups=4, seed=0)
+    pooled = dep.schedule.pooled
+    loop = EventLoop()
+    tenants = tenant_routers(pooled.allocations, pooled.cfgs, loop,
+                             discipline="priority",
+                             members=pooled.members, routing=pooled.routing)
+    per_wf = pooled_fleet_routers(tenants, pooled.members, pooled.routing)
+    sub_maps, sub_routers = {}, {}
+    for name, wf in wfs.items():
+        for local, cfg in wf.llms.items():
+            target = cfg.substitute
+            if target and target in tenants:
+                key = f"~sub:{target}"
+                per_wf[name][key] = tenants[target]
+                sub_maps.setdefault(name, {})[local] = key
+                sub_routers.setdefault(name, {})[local] = tenants[target]
+    qos = {n: WorkflowQoS(slo=q.slo, work=q.work)
+           for n, q in dep.qos.items()}
+    ctrl = fleet_admission(qos, per_wf, substitutes=sub_routers)
+    drivers = {}
+    for k, name in enumerate(sorted(wfs)):
+        drv = ClusterDriver(wfs[name], per_wf[name], loop,
+                            qos=qos.get(name),
+                            substitute_map=sub_maps.get(name))
+        lam = lams[name]
+        drv.schedule_arrivals([(lam, 20.0), (lam * 12.0, 60.0),
+                               (lam, 20.0)], seed=k)
+        drivers[name] = drv
+    loop.run(100.0 + 400.0)
+    return wfs, qos, ctrl, drivers
+
+
+def test_substitution_conserves_served_calls(substitution_run):
+    _, _, ctrl, drivers = substitution_run
+    total_sub = 0
+    for name, drv in drivers.items():
+        recs = drv.records
+        # after the drain every admitted request completed: nothing is
+        # lost in the reroute, substituted or not
+        assert all(r.done >= 0 or r.rejected for r in recs)
+        assert len(recs) == sum(1 for r in recs if r.done >= 0) \
+            + sum(1 for r in recs if r.rejected)
+        total_sub += sum(1 for r in recs if r.substituted)
+        # controller and driver agree on what was substituted
+        assert ctrl.stats()[name]["substituted"] == \
+            sum(1 for r in recs if r.substituted)
+    assert total_sub > 0  # the burst actually exercised the path
+
+
+def test_substitution_never_upgrades_slo(substitution_run):
+    wfs, qos, _, drivers = substitution_run
+    for name, drv in drivers.items():
+        slo = qos[name].slo
+        for r in drv.records:
+            if not r.substituted:
+                continue
+            # a substituted request keeps its own class's deadline and
+            # is never silently demoted to best-effort
+            assert not r.rejected and not r.degraded
+            assert r.deadline == pytest.approx(
+                r.arrival + slo.deadline_s)
+
+
+def test_substitution_rates_feed_share_attribution(substitution_run):
+    from repro.core.pipeline import merge_pipelines
+    wfs, _, ctrl, _ = substitution_run
+    rates = ctrl.substitution_rates()
+    assert 0.0 < rates["debate"] <= 1.0
+    pipes = {n: build_pipeline(wf, n_trace_requests=6,
+                               max_profile_groups=4, seed=0)[0]
+             for n, wf in wfs.items()}
+    merged = merge_pipelines(pipes, {"react_agent": 1.0, "debate": 1.6})
+    judge = wfs["debate"].llms["judge"]
+    cid, sub = judge.name, judge.substitute
+    resub = merged.with_substitution({cid: rates["debate"]})
+    # call volume moves off the substituted tenant onto its substitute
+    assert resub.stages[cid].n < merged.stages[cid].n
+    assert resub.stages[sub].n > merged.stages[sub].n
+    moved = merged.stages[cid].n - resub.stages[cid].n
+    gained = resub.stages[sub].n - merged.stages[sub].n
+    assert moved == pytest.approx(gained)
+
+
+# ---------------------------------------------------------------------------
+# per-(chip_class, tp) profile memoization
+# ---------------------------------------------------------------------------
+
+
+def test_profile_sweep_memoized_per_class():
+    profiler.clear_profile_cache()
+    classes = (hw.chip_class("v5e"), hw.chip_class("v5p"))
+    build_pipeline(get_workflow("map_reduce"), n_trace_requests=6,
+                   max_profile_groups=4, seed=0, chip_classes=classes)
+    hits0, misses0 = profiler.profile_cache_stats()
+    assert misses0 > 0
+    # identical re-profile: every (class, tp) sweep is a cache hit
+    build_pipeline(get_workflow("map_reduce"), n_trace_requests=6,
+                   max_profile_groups=4, seed=0, chip_classes=classes)
+    hits1, misses1 = profiler.profile_cache_stats()
+    assert misses1 == misses0
+    assert hits1 > hits0
+    # a subset of the classes adds no new sweeps either
+    build_pipeline(get_workflow("map_reduce"), n_trace_requests=6,
+                   max_profile_groups=4, seed=0,
+                   chip_classes=(hw.chip_class("v5p"),))
+    assert profiler.profile_cache_stats()[1] == misses0
+
+
+def test_blend_class_is_chip_weighted():
+    v5e, v5p = hw.chip_class("v5e"), hw.chip_class("v5p")
+    blend = hw.blend_classes([(v5e, 3), (v5p, 1)], name="blend-test")
+    expect = (3 * v5e.hbm_bytes + 1 * v5p.hbm_bytes) / 4
+    assert blend.hbm_bytes == pytest.approx(expect, rel=0.01)
+    assert math.isfinite(blend.peak_flops_bf16)
+
+
+def test_class_bound_allocation_survives_replace():
+    a = Allocation(replicas=2, tp=2, chip_class="v5p")
+    stripped = dataclasses.replace(a, chip_class=None)
+    assert stripped.chip_class is None
+    assert (stripped.replicas, stripped.tp) == (a.replicas, a.tp)

@@ -9,11 +9,17 @@ Scans the repo's user-facing markdown — ``README.md``, everything under
   relative targets are resolved against the linking file's directory,
   then against the repo root);
 * backtick references to nonexistent code: `` `repro.foo.bar` `` dotted
-  module paths that resolve to no module under ``src/`` (attribute
-  tails like ``repro.core.placement.place_fleet`` are fine — the
-  longest importable prefix is what must exist), and `` `*.py` `` file
-  mentions (``benchmarks/bench_placement.py`` or a bare
-  ``bench_placement.py``) naming files that exist nowhere in the repo.
+  module paths that resolve to no module under ``src/``, and
+  `` `*.py` `` file mentions (``benchmarks/bench_placement.py`` or a
+  bare ``bench_placement.py``) naming files that exist nowhere in the
+  repo;
+* attribute tails past a module file (``repro.hw.ChipClass``,
+  ``repro.core.placement.place_fleet``) that name no symbol in that
+  module.  Verification imports the module when it can and checks the
+  full attribute chain; when the import fails (the CI ``docs`` job
+  installs no dependencies, so ``import jax`` raises) it falls back to
+  an AST scan of the module file's top-level names and checks the
+  first tail segment only.
 
 Usage::
 
@@ -23,6 +29,8 @@ Exit code 0 = clean, 1 = problems (each printed as ``FAIL path: ...``).
 """
 from __future__ import annotations
 
+import ast
+import importlib
 import re
 import sys
 from pathlib import Path
@@ -56,9 +64,84 @@ def strip_code_blocks(text: str) -> str:
     return re.sub(r"```.*?```", "", text, flags=re.S)
 
 
+# memoized module state for attribute-tail checks:
+# dotted module -> imported module object, or None when unimportable
+_IMPORTED: dict = {}
+# module file -> set of top-level names (AST fallback)
+_TOPLEVEL: dict = {}
+
+
+def _toplevel_names(pyfile: Path) -> set:
+    """Top-level names a module defines, from its AST — functions,
+    classes, assignments and imports, including those nested in
+    module-level ``if``/``try`` blocks (version/feature gates)."""
+    cached = _TOPLEVEL.get(pyfile)
+    if cached is not None:
+        return cached
+    names: set = set()
+
+    def collect(body) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                names.add(node.name)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+                    elif isinstance(t, (ast.Tuple, ast.List)):
+                        for e in t.elts:
+                            if isinstance(e, ast.Name):
+                                names.add(e.id)
+            elif isinstance(node, ast.AnnAssign):
+                if isinstance(node.target, ast.Name):
+                    names.add(node.target.id)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for a in node.names:
+                    names.add(a.asname or a.name.split(".")[0])
+            elif isinstance(node, (ast.If, ast.Try)):
+                collect(node.body)
+                collect(node.orelse)
+                for h in getattr(node, "handlers", []):
+                    collect(h.body)
+                collect(getattr(node, "finalbody", []))
+
+    try:
+        collect(ast.parse(pyfile.read_text()).body)
+    except SyntaxError:
+        pass  # unparseable module: don't fail the docs for it
+    _TOPLEVEL[pyfile] = names
+    return names
+
+
+def _symbols_exist(dotted_module: str, pyfile: Path, tail: list) -> bool:
+    """Verify an attribute tail against a module.  Prefer a real import
+    (full-chain ``hasattr`` walk); fall back to the AST top-level-name
+    scan — first segment only — when the import raises (the docs CI job
+    has no third-party deps installed, so ``repro.*`` modules that
+    import jax are unimportable there)."""
+    if dotted_module not in _IMPORTED:
+        for p in (str(REPO / "src"), str(REPO)):
+            if p not in sys.path:
+                sys.path.append(p)
+        try:
+            _IMPORTED[dotted_module] = importlib.import_module(dotted_module)
+        except Exception:
+            _IMPORTED[dotted_module] = None
+    mod = _IMPORTED[dotted_module]
+    if mod is not None:
+        obj = mod
+        for seg in tail:
+            if not hasattr(obj, seg):
+                return False
+            obj = getattr(obj, seg)
+        return True
+    return tail[0] in _toplevel_names(pyfile)
+
+
 def module_exists(dotted: str) -> bool:
     """A dotted reference resolves iff its longest existing prefix is a
-    module *file* (the rest is then an attribute tail, e.g.
+    module *file* whose attribute tail names a real symbol (e.g.
     ``repro.core.placement.place_fleet``) or the FULL path is a
     package/module.  A prefix that is merely a package does NOT excuse
     a nonexistent next segment — ``repro.core.plcement`` (typo) must
@@ -69,8 +152,11 @@ def module_exists(dotted: str) -> bool:
     base = roots[parts[0]]
     for k in range(len(parts), 1, -1):
         head = base / Path(*parts[:k])
-        if head.with_suffix(".py").exists():
-            return True  # module file: trailing segments are attributes
+        pyfile = head.with_suffix(".py")
+        if pyfile.exists():
+            if k == len(parts):
+                return True  # the reference IS the module
+            return _symbols_exist(".".join(parts[:k]), pyfile, parts[k:])
         if (head / "__init__.py").exists():
             # a package only resolves the reference when it IS the
             # reference; otherwise the next segment is a missing module
@@ -105,7 +191,8 @@ def check_file(path: Path) -> list:
     for m in CODE_RE.finditer(body):
         tok = m.group(1).strip().rstrip("()")
         if MODULE_RE.match(tok) and not module_exists(tok):
-            errors.append(f"{rel}: reference to nonexistent module `{tok}`")
+            errors.append(
+                f"{rel}: reference to nonexistent module or symbol `{tok}`")
         elif PYFILE_RE.match(tok) and not pyfile_exists(tok):
             errors.append(f"{rel}: reference to nonexistent file `{tok}`")
     return errors
