@@ -28,7 +28,7 @@ import argparse
 import json
 import time
 
-from benchmarks.common import cluster_for, drive_fleet, joint_run
+from benchmarks.common import cluster_for, drive_fleet, joint_run, run_metadata
 from repro.core.drift import DriftConfig, DriftMonitor, RateDrift, expectation_from
 from repro.core.replan import recommend_rung
 from repro.core.scepsy import build_pipeline, deploy_multi
@@ -177,6 +177,7 @@ def _scenario_row(measured, ref) -> dict:
 
 
 def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    t_run0 = time.perf_counter()
     s = _settings(quick, smoke)
     lams = s["lam_targets"]
     pipes, wfs = {}, {}
@@ -311,6 +312,9 @@ def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
             "rung2_speedup_ge_5x": speedup2 >= 5.0,
         },
     }
+    doc["meta"] = run_metadata(
+        seed=seed, config={"quick": quick, "smoke": smoke}, started=t_run0
+    )
     text = json.dumps(doc, indent=2)
     print(text)
     if out:

@@ -42,7 +42,7 @@ import statistics
 import time
 from typing import Dict, List, Optional
 
-from benchmarks.common import cluster_for
+from benchmarks.common import cluster_for, run_metadata
 from repro import hw
 from repro.core.pipeline import merge_pipelines
 from repro.core.placement import PlacementError, place_fleet
@@ -428,6 +428,7 @@ def run_substitution_part(s, seed: int) -> dict:
 
 
 def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    t_run0 = time.perf_counter()
     s = _settings(quick, smoke)
 
     hetero = run_hetero_part(s, seed)
@@ -464,6 +465,9 @@ def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
         "substitution": substitution,
         "acceptance": acceptance,
     }
+    doc["meta"] = run_metadata(seed=seed,
+                               config={"quick": quick, "smoke": smoke},
+                               started=t_run0)
     text = json.dumps(doc, indent=2)
     print(text)
     if out:

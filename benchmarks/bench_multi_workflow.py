@@ -19,7 +19,8 @@ import argparse
 import json
 import time
 
-from benchmarks.common import cluster_for, joint_run, joint_run_pooled
+from benchmarks.common import (cluster_for, joint_run, joint_run_pooled,
+                               run_metadata)
 from repro import hw
 from repro.core.scepsy import build_pipeline
 from repro.core.scheduler import SchedulerConfig, schedule_multi
@@ -156,9 +157,13 @@ def _pooled_section(quick: bool, smoke: bool, seed: int):
 
 
 def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    t_run0 = time.perf_counter()
     doc = _fleet_section(quick, smoke, seed)
     doc["seed"] = seed
     doc["pooled_vs_partitioned"] = _pooled_section(quick, smoke, seed)
+    doc["meta"] = run_metadata(seed=seed,
+                               config={"quick": quick, "smoke": smoke},
+                               started=t_run0)
     text = json.dumps(doc, indent=2)
     print(text)
     if out:

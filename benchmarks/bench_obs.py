@@ -1,0 +1,332 @@
+"""Observability benchmark: zero-cost tracing, overhead, accuracy.
+
+Three sections, one JSON document:
+
+  * ``zero_cost`` — the same fixed-seed fleet run three ways (no tracer
+    / disabled tracer / enabled tracer); per-request completion traces
+    must be **bit-identical** across all three (the tracer draws from
+    its own RNG and never touches the event loop, so even *enabled*
+    tracing cannot perturb the simulation);
+  * ``overhead`` — the ``bench_scale``-style smoke fleet (plus
+    ``beam_search``, the branching-DAG workload, at a trickle rate)
+    with and without an installed tracer, interleaved best-of-N wall
+    timing of ``loop.run`` only; enabled tracing must cost <= 5%;
+  * ``accuracy`` — the steady-state pooled registry fleet with a
+    tracer and a DriftMonitor: span-reconstructed per-(workflow, LLM)
+    execution shares must land within 15% relative error of the
+    deployed ``MergedPipeline``'s expected shares, the per-class
+    critical-path breakdown must sum to measured end-to-end latency,
+    and the monitor must corroborate the tracer's shares.
+
+``--dump`` additionally writes the accuracy run's full tracer export
+(sampled spans + metrics snapshot + Prometheus exposition) for
+``tools/scepsy_report.py`` to render.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from typing import Dict, Optional, Tuple
+
+from benchmarks.common import run_metadata
+from repro import hw
+from repro.core.drift import DriftMonitor, expectation_from
+from repro.core.pipeline import merge_pipelines
+from repro.core.scepsy import build_pipeline
+from repro.core.scheduler import Allocation, SchedulerConfig, schedule_multi
+from repro.core.telemetry import StatsSink
+from repro.obs import (Tracer, accuracy_report, expected_shares,
+                       install_tracer)
+from repro.serving.deploy import (pooled_fleet_routers,
+                                  routers_from_allocations, tenant_routers)
+from repro.serving.simulator import EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver
+
+# the bench_scale smoke fleet plus beam_search: the branching-DAG
+# workload runs through the same fleet path at a trickle rate (its
+# per-request fan-out is 24-844 GEN calls, so a little rate is a lot
+# of calls)
+RATES: Dict[str, float] = {
+    "react_agent": 16.0,
+    "debate": 1.1,
+    "rag_reranker": 0.9,
+    "map_reduce": 0.5,
+    "beam_search": 0.05,
+}
+REPLICAS: Dict[str, int] = {
+    "react_agent": 6,
+    "debate": 4,
+    "rag_reranker": 8,
+    "map_reduce": 8,
+    "beam_search": 4,
+}
+TOTAL_RATE = sum(RATES.values())
+MIX: Dict[str, float] = {k: v / TOTAL_RATE for k, v in RATES.items()}
+
+ACCURACY_FLEET = (("react_agent", 0.5), ("map_reduce", 0.4), ("debate", 0.8))
+
+OVERHEAD_GATE = 1.05
+SHARE_GATE = 0.15
+RESIDUAL_GATE = 1e-6
+
+
+def _settings(quick: bool, smoke: bool) -> dict:
+    if smoke:
+        return {"mode": "smoke", "overhead_requests": 10_000,
+                "zero_cost_requests": 1_500, "overhead_trials": 3,
+                "accuracy_requests": 120, "n_trace": 8,
+                "profile_groups": 6, "sample_per_workflow": 64}
+    if quick:
+        return {"mode": "quick", "overhead_requests": 30_000,
+                "zero_cost_requests": 3_000, "overhead_trials": 3,
+                "accuracy_requests": 200, "n_trace": 12,
+                "profile_groups": 10, "sample_per_workflow": 64}
+    return {"mode": "full", "overhead_requests": 100_000,
+            "zero_cost_requests": 6_000, "overhead_trials": 5,
+            "accuracy_requests": 400, "n_trace": 30,
+            "profile_groups": 30, "sample_per_workflow": 128}
+
+
+# ---------------------------------------------------------------------------
+# fleet harness (static allocation, bench_scale-style)
+# ---------------------------------------------------------------------------
+
+
+def _drive_fleet(total: int, seed: int, *, tracer: Optional[Tracer],
+                 ) -> Tuple[EventLoop, Dict[str, ClusterDriver], float]:
+    """Deploy the static fleet, optionally install ``tracer``, drive to
+    completion; wall covers ``loop.run`` only."""
+    loop = EventLoop(kind="calendar")
+    sink = StatsSink(eps=0.001)
+    drivers: Dict[str, ClusterDriver] = {}
+    for k, name in enumerate(sorted(MIX)):
+        wf = get_workflow(name)
+        allocs = {m: Allocation(replicas=REPLICAS[name], tp=1, fraction=1.0)
+                  for m in wf.llms}
+        routers = routers_from_allocations(wf, allocs, loop)
+        for r in {id(r): r for r in routers.values()}.values():
+            for e in r.replicas:
+                e.keep_done = False
+        drv = ClusterDriver(wf, routers, loop, sink=sink)
+        n = max(1, round(total * MIX[name]))
+        drv.schedule_open_loop(RATES[name], n, seed=seed,
+                               arrival_seed=seed * 1000 + k)
+        drivers[name] = drv
+    install_tracer(tracer, drivers=drivers.values())
+    t0 = time.perf_counter()
+    loop.run(math.inf)
+    return loop, drivers, time.perf_counter() - t0
+
+
+def _completion_trace(drivers: Dict[str, ClusterDriver]):
+    """Bit-exact per-driver completion fingerprint.  ``keep_done=False``
+    fleets retain no records, so fingerprint counters + the StatsSink
+    sketch quantiles instead (any behavioral divergence moves both)."""
+    out = []
+    for name in sorted(drivers):
+        d = drivers[name]
+        sink = d.sink
+        out.append((name, d.n_started, d.n_completed,
+                    sink.latency_quantile(name, 0.50),
+                    sink.latency_quantile(name, 0.99),
+                    sink.stats[name].lat_sum if name in sink.stats else 0.0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sections
+# ---------------------------------------------------------------------------
+
+
+def zero_cost_section(s: dict, seed: int) -> dict:
+    n = s["zero_cost_requests"]
+    print(f"[obs] zero-cost: {n} requests x 3 arms ...", flush=True)
+    _, drv_none, _ = _drive_fleet(n, seed, tracer=None)
+    disabled = Tracer(enabled=False, seed=seed)
+    _, drv_off, _ = _drive_fleet(n, seed, tracer=disabled)
+    enabled = Tracer(sample_per_workflow=s["sample_per_workflow"],
+                     seed=seed + 7)
+    _, drv_on, _ = _drive_fleet(n, seed, tracer=enabled)
+    base = _completion_trace(drv_none)
+    off = _completion_trace(drv_off)
+    on = _completion_trace(drv_on)
+    return {
+        "requests": n,
+        "disabled_identical": off == base,
+        "enabled_identical": on == base,
+        "completions": {name: c for name, _, c, *_ in base},
+        "sampled": enabled.sampled_counts(),
+    }
+
+
+def overhead_section(s: dict, seed: int) -> dict:
+    n = s["overhead_requests"]
+    trials = s["overhead_trials"]
+    print(f"[obs] overhead: {n} requests, best-of-{trials}, "
+          f"interleaved arms ...", flush=True)
+    base_walls, traced_walls = [], []
+    events = sampled = None
+    for t in range(trials):
+        loop_b, _, wall_b = _drive_fleet(n, seed, tracer=None)
+        tracer = Tracer(sample_per_workflow=s["sample_per_workflow"],
+                        seed=seed + 7)
+        loop_t, _, wall_t = _drive_fleet(n, seed, tracer=tracer)
+        base_walls.append(wall_b)
+        traced_walls.append(wall_t)
+        events = loop_t.events_processed
+        sampled = tracer.sampled_counts()
+        print(f"[obs]   trial {t}: base {wall_b:.2f}s "
+              f"traced {wall_t:.2f}s", flush=True)
+    # paired ratios: each trial runs both arms back to back, so slow
+    # windows on a noisy machine hit both and cancel; the min over
+    # trials then filters one-sided load spikes
+    paired = [t / max(b, 1e-9)
+              for b, t in zip(base_walls, traced_walls)]
+    ratio = min(paired)
+    return {
+        "requests": n,
+        "trials": trials,
+        "base_wall_s": base_walls,
+        "traced_wall_s": traced_walls,
+        "paired_ratios": paired,
+        "overhead_ratio": ratio,
+        "events_processed": events,
+        "sampled": sampled,
+        "gate": OVERHEAD_GATE,
+    }
+
+
+def accuracy_section(s: dict, seed: int) -> Tuple[dict, Tracer]:
+    n_req = s["accuracy_requests"]
+    lams = dict(ACCURACY_FLEET)
+    print(f"[obs] accuracy: pooled registry fleet, {n_req} requests "
+          f"per workflow ...", flush=True)
+    pipes, wfs = {}, {}
+    for name in lams:
+        wf = get_workflow(name)
+        wfs[name] = wf
+        pipes[name], _, _ = build_pipeline(
+            wf, n_trace_requests=s["n_trace"], tp_degrees=(1, 2),
+            max_profile_groups=s["profile_groups"], seed=seed)
+    res = schedule_multi(pipes, hw.PAPER_CLUSTER_16, lams,
+                         SchedulerConfig(max_tp=2), mode="pooled")
+    pooled = res.pooled
+    loop = EventLoop()
+    tenants = tenant_routers(pooled.allocations, pooled.cfgs, loop)
+    per_wf = pooled_fleet_routers(tenants, pooled.members, pooled.routing)
+    monitor = DriftMonitor(
+        {n: expectation_from(pipes[n], lams[n]) for n in wfs})
+    drivers = {n: ClusterDriver(wfs[n], per_wf[n], loop, telemetry=monitor)
+               for n in wfs}
+    tracer = Tracer(sample_per_workflow=s["sample_per_workflow"],
+                    seed=seed + 7)
+    install_tracer(tracer, drivers=drivers.values())
+    for k, name in enumerate(sorted(drivers)):
+        drivers[name].schedule_open_loop(lams[name], n_req, seed=seed,
+                                         arrival_seed=seed * 1000 + k)
+    loop.run(math.inf)
+
+    merged = merge_pipelines(pipes, lams)
+    expected = {w: expected_shares(merged, w) for w in wfs}
+    predictions = merged.attribute(pooled.allocations)
+    report = accuracy_report(tracer, expected, predictions=predictions,
+                             monitor=monitor)
+    max_residual = max(
+        (row["residual_rel"] for row in report["critical_path"].values()),
+        default=0.0)
+    corroborated = all(
+        cell["agree"]
+        for row in report["corroboration"].values()
+        for cell in row.values())
+    section = {
+        "fleet": sorted(lams),
+        "requests_per_workflow": n_req,
+        "completed": {n: d.n_completed for n, d in drivers.items()},
+        "expected_shares": expected,
+        "observed_shares": tracer.observed_shares(),
+        "share_max_rel_err": report["shares"]["max_rel_err"],
+        "share_gate": SHARE_GATE,
+        "critical_path": report["critical_path"],
+        "breakdown_max_residual_rel": max_residual,
+        "predictor": report["predictor"],
+        "monitor_corroborates": corroborated,
+    }
+    return section, tracer
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False, smoke: bool = False, seed: int = 0,
+        out=None, dump=None) -> dict:
+    t_run0 = time.perf_counter()
+    s = _settings(quick, smoke)
+
+    zero_cost = zero_cost_section(s, seed)
+    overhead = overhead_section(s, seed)
+    accuracy, tracer = accuracy_section(s, seed)
+
+    acceptance = {
+        "disabled_bit_identical": zero_cost["disabled_identical"],
+        "enabled_bit_identical": zero_cost["enabled_identical"],
+        "overhead_le_5pct": overhead["overhead_ratio"] <= OVERHEAD_GATE,
+        "shares_within_15pct": accuracy["share_max_rel_err"] <= SHARE_GATE,
+        "breakdown_sums_to_latency": (
+            accuracy["breakdown_max_residual_rel"] <= RESIDUAL_GATE),
+        "monitor_corroborates_tracer": accuracy["monitor_corroborates"],
+        "branching_dag_traced": (
+            zero_cost["sampled"].get("beam_search", {}).get("seen", 0) > 0),
+    }
+
+    doc = {
+        "benchmark": "observability",
+        "mode": s["mode"],
+        "seed": seed,
+        "config": {**s, "rates": RATES, "replicas": REPLICAS,
+                   "accuracy_fleet": dict(ACCURACY_FLEET),
+                   "gates": {"overhead": OVERHEAD_GATE,
+                             "share_rel_err": SHARE_GATE,
+                             "breakdown_residual": RESIDUAL_GATE}},
+        "zero_cost": zero_cost,
+        "overhead": overhead,
+        "accuracy": accuracy,
+        "acceptance": acceptance,
+    }
+    doc["meta"] = run_metadata(seed=seed,
+                               config={"quick": quick, "smoke": smoke},
+                               started=t_run0)
+    text = json.dumps(doc, indent=2)
+    print(text)
+    if out:
+        with open(out, "w") as f:
+            f.write(text + "\n")
+    if dump:
+        with open(dump, "w") as f:
+            json.dump(tracer.export(), f, indent=2)
+        print(f"[obs] tracer export written to {dump}")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true", help="full-size runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (schema-identical)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report here")
+    ap.add_argument("--dump", default=None,
+                    help="write the accuracy run's tracer export "
+                         "(spans + metrics) here")
+    args = ap.parse_args()
+    run(quick=not args.full, smoke=args.smoke, seed=args.seed,
+        out=args.out, dump=args.dump)
+
+
+if __name__ == "__main__":
+    main()

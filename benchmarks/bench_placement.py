@@ -37,8 +37,9 @@ import argparse
 import dataclasses as dc
 import json
 import math
+import time
 
-from benchmarks.common import drive_fleet
+from benchmarks.common import drive_fleet, run_metadata
 from repro import hw
 from repro.core import placement as pl
 from repro.core.scepsy import build_pipeline
@@ -159,6 +160,7 @@ def _simulate(wfs, placement: pl.Placement, lams, n_req: int,
 
 def run(quick: bool = True, smoke: bool = False, seed: int = 0,
         out=None) -> dict:
+    t_run0 = time.perf_counter()
     s = _settings(quick, smoke)
     scenarios = _scenarios(full=s["mode"] == "full")
 
@@ -265,6 +267,9 @@ def run(quick: bool = True, smoke: bool = False, seed: int = 0,
             "aware_all_placeable": aware_fail == 0,
         },
     }
+    doc["meta"] = run_metadata(seed=seed,
+                               config={"quick": quick, "smoke": smoke},
+                               started=t_run0)
     text = json.dumps(doc, indent=2)
     print(text)
     if out:

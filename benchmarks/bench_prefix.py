@@ -36,8 +36,10 @@ from __future__ import annotations
 import argparse
 import json
 import statistics
+import time
 from typing import Dict, List, Optional
 
+from benchmarks.common import run_metadata
 from repro.qos.policy import make_policy
 from repro.qos.slo import BRONZE, GOLD, WorkflowQoS, WorkModel
 from repro.serving.simulator import EngineSim, EventLoop, Router
@@ -283,6 +285,7 @@ def _preemption(wfs, s, seed: int) -> dict:
 
 
 def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    t_run0 = time.perf_counter()
     s = _settings(quick, smoke)
     wfs = {name: get_workflow(name) for name in FLEET}
 
@@ -328,6 +331,9 @@ def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
         "preemption": preemption,
         "acceptance": acceptance,
     }
+    doc["meta"] = run_metadata(seed=seed,
+                               config={"quick": quick, "smoke": smoke},
+                               started=t_run0)
     text = json.dumps(doc, indent=2)
     print(text)
     if out:

@@ -38,7 +38,7 @@ import statistics
 import time
 from typing import Dict, List
 
-from benchmarks.common import cluster_for
+from benchmarks.common import cluster_for, run_metadata
 from repro.core.scepsy import deploy_multi
 from repro.core.scheduler import SchedulerConfig
 from repro.qos.admission import fleet_admission
@@ -260,6 +260,7 @@ def _fairness(run: dict, pooled, s) -> Dict[str, dict]:
 
 
 def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
+    t_run0 = time.perf_counter()
     s = _settings(quick, smoke)
     lams = s["lam_targets"]
     wfs = {name: get_workflow(name) for name in lams}
@@ -371,6 +372,9 @@ def run(quick: bool = False, smoke: bool = False, seed: int = 0, out=None):
         "admission": admission,
         "acceptance": acceptance,
     }
+    doc["meta"] = run_metadata(seed=seed,
+                               config={"quick": quick, "smoke": smoke},
+                               started=t_run0)
     text = json.dumps(doc, indent=2)
     print(text)
     if out:

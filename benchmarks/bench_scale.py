@@ -39,6 +39,7 @@ import resource
 import time
 from typing import Dict, Optional, Tuple
 
+from benchmarks.common import run_metadata
 from repro.core.scheduler import Allocation
 from repro.core.telemetry import StatsSink
 from repro.serving.deploy import routers_from_allocations
@@ -129,6 +130,7 @@ def _mini_trace(kind: str, seed: int):
 
 def run(quick: bool = False, smoke: bool = False, seed: int = 0,
         out: Optional[str] = None) -> dict:
+    t_run0 = time.perf_counter()
     s = _settings(quick, smoke)
     total = s["total_requests"]
 
@@ -243,6 +245,9 @@ def run(quick: bool = False, smoke: bool = False, seed: int = 0,
                       for name, d in drv_new.items()},
         "acceptance": acceptance,
     }
+    doc["meta"] = run_metadata(seed=seed,
+                               config={"quick": quick, "smoke": smoke},
+                               started=t_run0)
     text = json.dumps(doc, indent=2)
     targets = [out] if out else []
     if s["mode"] == "full":

@@ -3,7 +3,11 @@ measure the workflow-level throughput-latency point."""
 from __future__ import annotations
 
 import math
+import os
+import platform
 import statistics
+import subprocess
+import time
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -39,6 +43,35 @@ class RunResult:
 
 HEADER = ("system,workflow,chips,offered_rate,achieved_tput,"
           "mean_latency_s,p50_latency_s,p99_latency_s,completed")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or os.environ.get("GITHUB_SHA", "unknown")[:12]
+    except (OSError, subprocess.SubprocessError):
+        return os.environ.get("GITHUB_SHA", "unknown")[:12] or "unknown"
+
+
+def run_metadata(*, seed: int, config: Optional[dict] = None,
+                 started: Optional[float] = None) -> dict:
+    """Provenance stamp every bench JSON carries under ``"meta"``:
+    seed, git SHA, python version, the bench's config knobs, and (when
+    ``started`` — a ``time.perf_counter()`` reading taken at bench
+    start — is given) the wall-clock duration.  ``benchmarks.validate``
+    requires the stamp on every report."""
+    meta = {
+        "seed": seed,
+        "git_sha": _git_sha(),
+        "python": platform.python_version(),
+        "config": dict(config or {}),
+    }
+    if started is not None:
+        meta["wall_s"] = time.perf_counter() - started
+    return meta
 
 
 def measure(wf: Workflow, routers: Dict[str, Router], rate: float,

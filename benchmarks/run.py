@@ -18,10 +18,10 @@ def main() -> None:
     from benchmarks import (bench_ablation, bench_combined, bench_drift,
                             bench_e2e, bench_hetero, bench_kernels,
                             bench_multi_workflow, bench_multiplexing,
-                            bench_pipeline_accuracy, bench_placement,
-                            bench_prefix, bench_qos, bench_roofline,
-                            bench_scale, bench_scheduler, bench_stability,
-                            bench_workflow_aware)
+                            bench_obs, bench_pipeline_accuracy,
+                            bench_placement, bench_prefix, bench_qos,
+                            bench_roofline, bench_scale, bench_scheduler,
+                            bench_stability, bench_workflow_aware)
 
     sections = [
         ("fig3_stability", bench_stability),
@@ -38,6 +38,7 @@ def main() -> None:
         ("hetero_serving", bench_hetero),
         ("placement_aware", bench_placement),
         ("scale_event_core", bench_scale),
+        ("observability", bench_obs),
         ("pipeline_accuracy", bench_pipeline_accuracy),
         ("kernels", bench_kernels),
         ("roofline", bench_roofline),

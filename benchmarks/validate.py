@@ -64,7 +64,18 @@ REQUIRED = {
         "workflows",
         "acceptance",
     ),
+    "observability": (
+        "config",
+        "zero_cost",
+        "overhead",
+        "accuracy",
+        "acceptance",
+    ),
 }
+
+# every report must carry the provenance stamp written by
+# benchmarks.common.run_metadata, with at least these keys
+META_KEYS = ("seed", "git_sha")
 
 
 def _walk_finite(node, path: str, errors: List[str]) -> None:
@@ -98,6 +109,13 @@ def validate_report(doc: dict, name: str = "report") -> List[str]:
     for key in REQUIRED[kind]:
         if key not in doc:
             errors.append(f"{name}: missing required section {key!r}")
+    meta = doc.get("meta")
+    if not isinstance(meta, dict):
+        errors.append(f"{name}: missing run-metadata stamp 'meta'")
+    else:
+        for key in META_KEYS:
+            if key not in meta:
+                errors.append(f"{name}: meta stamp missing {key!r}")
     _walk_finite(doc, name, errors)
     return errors
 

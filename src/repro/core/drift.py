@@ -256,6 +256,8 @@ class DriftMonitor:
         self._pending: List[DriftEvent] = []
         self._active: set = set()
         self.now = 0.0
+        # last corroboration verdicts (see :meth:`corroborate`)
+        self.corroboration: Dict[str, Dict[str, dict]] = {}
 
     # -- executor-side telemetry protocol --------------------------------
 
@@ -446,6 +448,38 @@ class DriftMonitor:
             m: (ew.value if ew.value is not None else 0.0)
             for m, ew in self._share[workflow].items()
         }
+
+    def corroborate(
+        self, shares: Dict[str, Dict[str, float]], tol: float = 0.25
+    ) -> Dict[str, Dict[str, dict]]:
+        """Cross-check the monitor's share EWMAs against an independently
+        reconstructed estimate (the span-derived shares from
+        :meth:`repro.obs.spans.Tracer.observed_shares`).
+
+        Both estimators consume the same busy-time normalization, so on
+        a healthy pipeline they must agree; a gap beyond ``tol`` marks
+        the EWMA (windowed) and the reconstruction (run-cumulative) as
+        diverging — corroborating telemetry a replan decision can audit.
+        Verdicts are returned and kept on :attr:`corroboration`.
+        """
+        floor = self.config.share_floor
+        out: Dict[str, Dict[str, dict]] = {}
+        for w, ext_row in shares.items():
+            own_row = self.observed_shares(w) if w in self._share else {}
+            row: Dict[str, dict] = {}
+            for m in set(ext_row) | set(own_row):
+                own = own_row.get(m, 0.0)
+                ext = ext_row.get(m, 0.0)
+                gap = abs(own - ext) / max(own, ext, floor)
+                row[m] = {
+                    "monitor": own,
+                    "external": ext,
+                    "gap": gap,
+                    "agree": gap <= tol,
+                }
+            out[w] = row
+        self.corroboration = out
+        return out
 
     def observed_violation_rate(self, workflow: str) -> float:
         """Smoothed SLO-violation rate (0.0 until a sample arrives)."""

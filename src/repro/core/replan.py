@@ -177,6 +177,8 @@ class ReplanController:
         )
         self.history: List[ReplanAction] = []
         self._refreshed_since_adopt: set = set()
+        # observability hook (repro.obs.spans.Tracer); None = untraced
+        self.tracer = None
 
     # -- rungs -------------------------------------------------------------
 
@@ -404,6 +406,8 @@ class ReplanController:
             self.monitor.rebase(rebased)
         self._refreshed_since_adopt.clear()
         self.history.append(action)
+        if self.tracer is not None:
+            self.tracer.on_replan(action)
 
     # -- helpers -----------------------------------------------------------
 

@@ -200,8 +200,10 @@ class StatsSink:
                                  if s.completed else math.nan),
                 "latency_min": s.lat_min if s.completed else math.nan,
                 "latency_max": s.lat_max if s.completed else math.nan,
-                "latency_p50": s.sketch.query(0.50),
-                "latency_p99": s.sketch.query(0.99),
+                "latency_p50": (s.sketch.query(0.50)
+                                if s.completed else math.nan),
+                "latency_p99": (s.sketch.query(0.99)
+                                if s.completed else math.nan),
             }
         return out
 

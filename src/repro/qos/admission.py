@@ -97,6 +97,8 @@ class AdmissionController:
         self.ia_alpha = ia_alpha
         self.min_rate_samples = min_rate_samples
         self._entries: Dict[str, _Entry] = {}
+        # observability hook (repro.obs.spans.Tracer); None = untraced
+        self.tracer = None
 
     def register(self, workflow: str, slo: SLOClass, work: WorkModel, *,
                  routers: Optional[Dict[str, object]] = None,
@@ -199,6 +201,12 @@ class AdmissionController:
     def admit(self, workflow: str, now: float) -> str:
         """Decide one arrival:
         ``admit`` | ``substitute`` | ``reject`` | ``degrade``."""
+        decision = self._decide(workflow, now)
+        if self.tracer is not None:
+            self.tracer.on_admission_decision(workflow, decision, now)
+        return decision
+
+    def _decide(self, workflow: str, now: float) -> str:
         e = self._entries.get(workflow)
         if e is None:
             return ADMIT

@@ -176,6 +176,9 @@ class EngineSim:
         self.current_model: Optional[str] = cfg.name  # for swap modeling
         self.swap_overhead_pending = 0.0
         self.failed = False
+        # observability hook (repro.obs.spans.Tracer); None = untraced
+        self.tracer = None
+        self._obs_tick = 0  # iteration counter for stride-sampled hooks
 
     # -- queue introspection (router) --
     @property
@@ -326,6 +329,8 @@ class EngineSim:
         self.waiting.append(victim)
         self._load += victim.prompt_tokens  # waiting counts the prompt again
         self.preempt_log.append((cw, _qos_weight(victim), t0))
+        if self.tracer is not None:
+            self.tracer.on_engine_preempt(self, victim, t0)
         return True
 
     # -- engine loop --
@@ -376,6 +381,8 @@ class EngineSim:
                                    chip=self.chip)
             duration += cost.total
             req.t_start_service = t0
+            if self.tracer is not None:
+                self.tracer.on_engine_admit(req, t0, new_tokens, cost.total)
 
         # 2) decode quantum for the (new) running batch
         batch = self.running + admitted
@@ -398,6 +405,15 @@ class EngineSim:
         t1 = t0 + max(duration, 1e-6)
         self.busy_time += t1 - t0
         self._notify_load()
+        tr = self.tracer
+        if tr is not None:
+            # stride-sampled (tracer.iter_mask is 2^k - 1): the hook and
+            # its argument evaluation run for one iteration in 2^k
+            n = self._obs_tick + 1
+            self._obs_tick = n
+            if not (n & tr.iter_mask):
+                tr.on_engine_iteration(self, t0, t1 - t0, len(batch),
+                                       len(self.waiting))
         self.loop.schedule(t1, self._finish_batch, batch, t1)
 
     def _finish_batch(self, batch: List[EngineRequest], t1: float) -> None:
@@ -550,13 +566,17 @@ class Router:
         if index is None and indexed:
             index = _ReplicaIndex(replicas)
         self._index = index
+        # observability hook (repro.obs.spans.Tracer); None = untraced
+        self.tracer = None
 
     def view(self, weights: Dict[int, float]) -> "Router":
         """A per-tenant view over the same physical replicas (shares the
         base router's index rather than re-registering listeners)."""
-        return Router(self.replicas, affinity=self.affinity, weights=weights,
-                      indexed=self.indexed, index=self._index,
-                      legacy_load=self.legacy_load)
+        r = Router(self.replicas, affinity=self.affinity, weights=weights,
+                   indexed=self.indexed, index=self._index,
+                   legacy_load=self.legacy_load)
+        r.tracer = self.tracer
+        return r
 
     def _weight(self, idx: int) -> float:
         if self.weights is None:
@@ -603,10 +623,14 @@ class Router:
                 pl = r.prefix_lookup(req)
                 if pl > best_len:
                     best_len, choice = pl, i
+        tier = "prefix"
         if choice is None:
+            tier = "least_loaded"
             choice = idx.least_loaded()
             if choice is None:
                 raise RuntimeError("no live replicas")
+        if self.tracer is not None:
+            self.tracer.on_route(tier)
         replicas[choice].submit(req)
 
     def _submit_scan(self, req: EngineRequest) -> None:
@@ -615,6 +639,7 @@ class Router:
         if not live:
             raise RuntimeError("no live replicas")
         choice = None
+        tier = "prefix"
         if self.affinity:
             best_len = 0
             for i, r in live:
@@ -628,8 +653,10 @@ class Router:
                 for i, r in live:
                     if i == idx:
                         choice = (i, r)
+                        tier = "sticky"
                         break
         if choice is None:
+            tier = "least_loaded"
             if self.legacy_load:
                 choice = min(live, key=lambda ir: ir[1].recompute_load()
                              / self._weight(ir[0]))
@@ -639,6 +666,8 @@ class Router:
         idx, target = choice
         if self.weights is not None and req.workflow_request is not None:
             self._sticky[req.workflow_request] = idx
+        if self.tracer is not None:
+            self.tracer.on_route(tier)
         target.submit(req)
 
     def fail_replica(self, idx: int) -> None:

@@ -75,6 +75,8 @@ class _GroupJoin:
                                      req.t_done)
         if d.telemetry is not None:
             d.telemetry.record_call(d.wf.name, llm, req)
+        if d.tracer is not None:
+            d.tracer.on_call_done(d.wf.name, self.rec.request_id, llm, req)
         self.pending -= 1
         if self.pending == 0:
             d._advance(self.gen, self.rec, self.results)
@@ -191,6 +193,9 @@ class RequestRecord:
     # route to the substitute tier's replicas; SLO class/deadline kept
     substituted: bool = False
     issued_s: float = 0.0  # expected work already dispatched (WorkModel)
+    # True when an installed Tracer holds this request in its trace
+    # reservoir: unsampled requests skip the per-group/per-tool hooks
+    obs_sampled: bool = False
 
     @property
     def latency(self) -> float:
@@ -286,6 +291,9 @@ class ClusterDriver:
         self.telemetry = telemetry
         self.qos = qos
         self.sink = sink
+        # observability hook (repro.obs.spans.Tracer); None = untraced
+        # fast path — every site below guards on it
+        self.tracer = None
         self.records: List[RequestRecord] = []
         self.n_started = 0
         self.n_completed = 0
@@ -417,6 +425,9 @@ class ClusterDriver:
             self.sink.observe_arrival(self.wf.name, self.loop.now)
         if self.telemetry is not None:
             self.telemetry.record_arrival(self.wf.name, self.loop.now)
+        if self.tracer is not None:
+            rec.obs_sampled = self.tracer.on_request_start(
+                self.wf.name, rid, self.loop.now)
         if self.qos is not None:
             slo = self.qos.slo
             rec.slo_class = slo.name
@@ -424,6 +435,9 @@ class ClusterDriver:
             if self.qos.admission is not None:
                 decision = self.qos.admission.admit(
                     self.wf.name, self.loop.now)
+                if self.tracer is not None:
+                    self.tracer.on_request_admission(
+                        self.wf.name, rid, decision, self.loop.now)
                 if decision == "reject":
                     rec.rejected = True
                     if self.sink is not None:
@@ -472,19 +486,31 @@ class ClusterDriver:
                 self.sink.observe(self.wf.name, rec)
             if self.telemetry is not None:
                 self.telemetry.record_request_done(self.wf.name, rec)
+            if self.tracer is not None:
+                self.tracer.on_request_done(self.wf.name, rec)
             return
         if isinstance(group, Tool):
+            if rec.obs_sampled and self.tracer is not None:
+                self.tracer.on_tool(self.wf.name, rec.request_id,
+                                    self.loop.now, group.seconds)
             self.loop.schedule(self.loop.now + group.seconds,
                                self._advance, gen, rec, [])
             return
         calls: Sequence[Call] = group
         join = _GroupJoin(self, gen, rec, len(calls))
+        tr = self.tracer
+        sampled = (rec.obs_sampled and tr is not None
+                   and tr.on_group_start(self.wf.name, rec.request_id,
+                                         self.loop.now, len(calls)))
         for i, c in enumerate(calls):
             h = next(ClusterDriver._uid)
             out_tokens = max(c.output_tokens, 1)
             prefix, truth = self._prefix_for(h, c)
             self._seqs[h] = prefix + (output_segment(h, out_tokens),)
             self._rec_handles.setdefault(rec.request_id, []).append(h)
+            if sampled:
+                tr.on_call_submit(self.wf.name, rec.request_id, h, c.llm,
+                                  self.loop.now)
             req = EngineRequest(
                 req_id=h, prompt_tokens=c.prompt_tokens,
                 output_tokens=out_tokens, arrival=self.loop.now,

@@ -1,0 +1,296 @@
+"""Observability layer: spans, metrics, accuracy reconciliation.
+
+Deterministic coverage of the Tracer's invariants — span phases tile
+[arrival, done] exactly, the reservoir never exceeds its bound, the
+disabled path leaves the stack untouched and bit-identical — plus the
+metrics exposition round-trip, the observed-vs-expected share
+reconciliation on a seeded fleet, DriftMonitor corroboration, and the
+StatsSink empty-sketch regression.  A hypothesis property generalizes
+the phase-sum invariant over seeds when hypothesis is installed.
+"""
+import math
+
+import pytest
+
+from repro.core.drift import DriftMonitor, expectation_from
+from repro.core.scheduler import Allocation
+from repro.core.telemetry import StatsSink
+from repro.obs import (MetricsRegistry, Tracer, chrome_trace,
+                       install_tracer, parse_exposition)
+from repro.obs.accuracy import (critical_path_report, expected_shares,
+                                share_report)
+from repro.serving.deploy import routers_from_allocations
+from repro.serving.simulator import EventLoop
+from repro.workflows.registry import get_workflow
+from repro.workflows.runtime import ClusterDriver
+
+
+def _fleet(name="react_agent", n=40, rate=2.0, seed=1, tracer=None,
+           replicas=2, telemetry=None):
+    """One-workflow static fleet on a fresh loop, driven to completion."""
+    loop = EventLoop()
+    wf = get_workflow(name)
+    allocs = {m: Allocation(replicas=replicas, tp=1, fraction=1.0)
+              for m in wf.llms}
+    routers = routers_from_allocations(wf, allocs, loop)
+    drv = ClusterDriver(wf, routers, loop, telemetry=telemetry)
+    install_tracer(tracer, drivers=[drv])
+    drv.schedule_open_loop(rate, n, seed=seed, arrival_seed=seed + 100)
+    loop.run(math.inf)
+    return drv
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_exposition_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("requests_total", "req", ("wf",)).labels("a").inc(3)
+    reg.counter("requests_total", "req", ("wf",)).labels("b").inc()
+    reg.gauge("depth", "queue", ("engine",)).labels("e0").set(7.5)
+    h = reg.histogram("lat", "latency", (), buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 2.0):
+        h.labels().observe(v)
+    parsed = parse_exposition(reg.expose())
+    assert parsed["requests_total"][(("wf", "a"),)] == 3.0
+    assert parsed["requests_total"][(("wf", "b"),)] == 1.0
+    assert parsed["depth"][(("engine", "e0"),)] == 7.5
+    # histogram buckets are cumulative; +Inf equals the count
+    assert parsed["lat_bucket"][(("le", "0.1"),)] == 1.0
+    assert parsed["lat_bucket"][(("le", "1.0"),)] == 2.0
+    assert parsed["lat_bucket"][(("le", "+Inf"),)] == 3.0
+    assert parsed["lat_count"][()] == 3.0
+    assert parsed["lat_sum"][()] == pytest.approx(2.55)
+
+
+def test_metrics_snapshot_and_schema_conflict():
+    reg = MetricsRegistry()
+    reg.counter("c", "help", ("x",)).labels("1").inc(2)
+    snap = reg.snapshot()
+    assert snap["c"]["series"][0] == {"labels": {"x": "1"}, "value": 2.0}
+    with pytest.raises(ValueError):
+        reg.gauge("c", "other", ("x",))
+    with pytest.raises(ValueError):
+        reg.counter("c", "help", ("x", "y"))
+
+
+# ---------------------------------------------------------------------------
+# span invariants on a deterministic fleet
+# ---------------------------------------------------------------------------
+
+
+def test_phases_tile_request_exactly():
+    tracer = Tracer(sample_per_workflow=64, seed=3)
+    drv = _fleet(n=40, tracer=tracer)
+    assert drv.n_completed == 40
+    traces = tracer.traces(finished_only=True)
+    assert traces
+    for tr in traces:
+        phases = tr["phases"]
+        assert phases, "every request runs at least one group"
+        # ordered, gap-free tiling of [arrival, done]
+        assert phases[0]["t0"] == pytest.approx(tr["arrival"])
+        for a, b in zip(phases, phases[1:]):
+            assert a["t1"] == pytest.approx(b["t0"])
+            assert a["t1"] >= a["t0"]
+        assert phases[-1]["t1"] == pytest.approx(tr["done"])
+        total = sum(p["t1"] - p["t0"] for p in phases)
+        assert total == pytest.approx(tr["done"] - tr["arrival"])
+
+
+def test_call_spans_nest_inside_group_phases():
+    tracer = Tracer(sample_per_workflow=64, seed=3)
+    _fleet(n=30, tracer=tracer)
+    for tr in tracer.traces(finished_only=True):
+        groups = [p for p in tr["phases"] if p["kind"] == "group"]
+        for call in tr["calls"]:
+            assert call["done"] >= call["start"] >= call["submit"] >= 0
+            owner = [g for g in groups
+                     if g["t0"] <= call["submit"] and call["done"] <= g["t1"]]
+            assert owner, "call span outside any group phase"
+        for g in groups:
+            assert g["critical_llm"], "closed group phases are attributed"
+
+
+def test_reservoir_bound_and_counts():
+    k = 8
+    tracer = Tracer(sample_per_workflow=k, seed=5)
+    _fleet(n=50, tracer=tracer)
+    counts = tracer.sampled_counts()
+    assert counts["react_agent"]["seen"] == 50
+    assert counts["react_agent"]["sampled"] == k
+    assert len(tracer.traces(finished_only=False)) == k
+    # aggregates still cover every request, not just the reservoir
+    assert tracer.request_latency("react_agent")["count"] == 50
+
+
+def test_disabled_tracer_installs_nothing():
+    tracer = Tracer(enabled=False, seed=0)
+    drv = _fleet(n=10, tracer=tracer)
+    assert drv.tracer is None
+    assert all(e.tracer is None
+               for r in drv.routers.values() for e in r.replicas)
+    assert not tracer.traces(finished_only=False)
+    assert install_tracer(None) is None
+
+
+def test_enabled_tracing_is_bit_identical():
+    """The tracer draws from its own RNG: same-seed runs with no
+    tracer, a disabled tracer and an enabled tracer complete every
+    request at exactly the same times."""
+    runs = []
+    for tr in (None, Tracer(enabled=False, seed=9), Tracer(seed=9)):
+        drv = _fleet(n=30, tracer=tr)
+        runs.append([(r.request_id, r.arrival, r.done) for r in drv.records])
+    assert runs[0] == runs[1] == runs[2]
+
+
+# ---------------------------------------------------------------------------
+# accuracy reconciliation
+# ---------------------------------------------------------------------------
+
+
+def test_share_reconciliation_against_monitor():
+    wf = get_workflow("react_agent")
+    from repro.core.scepsy import build_pipeline
+    pipe, _, _ = build_pipeline(wf, n_trace_requests=6, tp_degrees=(1,),
+                                max_profile_groups=4, seed=0)
+    monitor = DriftMonitor({"react_agent": expectation_from(pipe, 1.0)})
+    tracer = Tracer(sample_per_workflow=32, seed=2)
+    _fleet(n=60, rate=1.0, tracer=tracer, telemetry=monitor)
+
+    observed = tracer.observed_shares()["react_agent"]
+    assert set(observed) == set(wf.llms)
+    assert sum(observed.values()) == pytest.approx(1.0)
+
+    expected = expected_shares(pipe)
+    rep = share_report({"react_agent": observed},
+                       {"react_agent": expected})
+    assert rep["max_rel_err"] < 0.5  # same fleet, same traffic
+
+    corr = monitor.corroborate(tracer.observed_shares())
+    assert all(cell["agree"] for cell in corr["react_agent"].values())
+
+
+def test_critical_path_sums_to_latency():
+    tracer = Tracer(sample_per_workflow=32, seed=2)
+    _fleet(n=30, tracer=tracer)
+    rep = critical_path_report(tracer)
+    row = rep["react_agent"]
+    assert row["residual_rel"] < 1e-9
+    assert row["dominant"] in set(get_workflow("react_agent").llms) | {"tool"}
+    total_frac = sum(c["fraction"] for c in row["breakdown"].values())
+    assert total_frac == pytest.approx(1.0)
+
+
+def test_expected_shares_duck_dispatch():
+    wf = get_workflow("react_agent")
+    from repro.core.scepsy import build_pipeline
+    pipe, stats, _ = build_pipeline(wf, n_trace_requests=4, tp_degrees=(1,),
+                                    max_profile_groups=3, seed=0)
+    from_pipe = expected_shares(pipe)
+    from_stats = expected_shares(stats)
+    assert set(from_pipe) == set(from_stats) == set(wf.llms)
+    assert sum(from_pipe.values()) == pytest.approx(1.0)
+    assert sum(from_stats.values()) == pytest.approx(1.0)
+    with pytest.raises(TypeError):
+        expected_shares(object())
+
+
+def test_corroborate_flags_divergence():
+    wf = get_workflow("react_agent")
+    from repro.core.scepsy import build_pipeline
+    pipe, _, _ = build_pipeline(wf, n_trace_requests=4, tp_degrees=(1,),
+                                max_profile_groups=3, seed=0)
+    monitor = DriftMonitor({"react_agent": expectation_from(pipe, 1.0)})
+    _fleet(n=40, rate=1.0, telemetry=monitor)
+    own = monitor.observed_shares("react_agent")
+    agree = monitor.corroborate({"react_agent": own})
+    assert all(cell["agree"] for cell in agree["react_agent"].values())
+    flipped = {m: 1.0 - s for m, s in own.items()}
+    disagree = monitor.corroborate({"react_agent": flipped})
+    assert not all(cell["agree"] for cell in disagree["react_agent"].values())
+
+
+# ---------------------------------------------------------------------------
+# exports
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_export_shape():
+    tracer = Tracer(sample_per_workflow=16, seed=4)
+    _fleet(n=20, tracer=tracer)
+    doc = tracer.to_chrome_trace()
+    events = doc["traceEvents"]
+    assert events
+    cats = {e.get("cat") for e in events if e.get("ph") == "X"}
+    assert {"request", "phase", "call"} <= cats
+    names = [e for e in events if e.get("ph") == "M"]
+    assert names and names[0]["args"]["name"] == "react_agent"
+    # offline converter produces the same document from exported dicts
+    assert chrome_trace(tracer.traces(finished_only=False)) == doc
+
+
+def test_export_is_json_safe_and_collected():
+    import json
+    tracer = Tracer(sample_per_workflow=8, seed=4)
+    _fleet(n=20, tracer=tracer)
+    doc = tracer.export()
+    json.dumps(doc)  # must not raise
+    parsed = parse_exposition(doc["exposition"])
+    total = sum(parsed["scepsy_requests_total"].values())
+    assert total == 20
+    assert doc["shares"]["react_agent"]
+    assert doc["sampling"]["counts"]["react_agent"]["seen"] == 20
+
+
+# ---------------------------------------------------------------------------
+# StatsSink regression (satellite): empty sketch must not crash
+# ---------------------------------------------------------------------------
+
+
+def test_stats_sink_summary_no_completions():
+    sink = StatsSink()
+    sink.observe_arrival("wf", 0.0)  # arrivals but zero completions
+    summ = sink.summary()["wf"]
+    assert summ["completed"] == 0
+    assert math.isnan(summ["latency_p50"])
+    assert math.isnan(summ["latency_p99"])
+
+
+def test_stats_sink_summary_with_completions():
+    from repro.workflows.runtime import RequestRecord
+    sink = StatsSink()
+    for i in range(5):
+        sink.observe_arrival("wf", float(i))
+        rec = RequestRecord(i, float(i))
+        rec.done = float(i) + 2.0
+        sink.observe("wf", rec)
+    summ = sink.summary()["wf"]
+    assert summ["completed"] == 5
+    assert summ["latency_p50"] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: phase tiling holds for arbitrary seeds/workloads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_phase_sum_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=10, deadline=None)
+    @hyp.given(seed=st.integers(min_value=0, max_value=2**16),
+               name=st.sampled_from(["react_agent", "map_reduce", "debate"]))
+    def check(seed, name):
+        tracer = Tracer(sample_per_workflow=16, seed=seed)
+        _fleet(name=name, n=12, rate=1.5, seed=seed, tracer=tracer)
+        for tr in tracer.traces(finished_only=True):
+            total = sum(p["t1"] - p["t0"] for p in tr["phases"])
+            assert total == pytest.approx(tr["done"] - tr["arrival"])
+
+    check()

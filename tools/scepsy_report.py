@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Render an observability dump or bench report as readable tables.
+
+    PYTHONPATH=src python tools/scepsy_report.py DUMP.json
+    PYTHONPATH=src python tools/scepsy_report.py DUMP.json --perfetto out.json
+    PYTHONPATH=src python tools/scepsy_report.py report_obs.json
+
+Accepts either a tracer export (``benchmarks.bench_obs --dump`` /
+``Tracer.export()``) or a full ``bench_obs`` JSON report (the dump is
+embedded per-section there only as aggregates, so the report path
+renders the accuracy/overhead/zero-cost summaries instead).
+``--perfetto`` converts the dump's sampled traces to Chrome
+``trace_event`` JSON for https://ui.perfetto.dev.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _table(rows, headers):
+    if not rows:
+        return ""
+    cols = [headers] + [[str(c) for c in r] for r in rows]
+    widths = [max(len(r[i]) for r in cols) for i in range(len(headers))]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(headers, widths)),
+             "  ".join("-" * w for w in widths)]
+    for r in cols[1:]:
+        lines.append("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(lines)
+
+
+def _fmt(v, nd=4):
+    if isinstance(v, float):
+        return f"{v:.{nd}f}"
+    return str(v)
+
+
+def render_dump(doc: dict) -> str:
+    out = ["== sampling =="]
+    rows = [(wf, c["seen"], c["sampled"])
+            for wf, c in sorted(doc["sampling"]["counts"].items())]
+    out.append(_table(rows, ["workflow", "seen", "sampled"]))
+
+    out.append("\n== request latency ==")
+    rows = [(wf, m["count"], _fmt(m["mean"]), _fmt(m["p50"]), _fmt(m["p99"]))
+            for wf, m in sorted(doc["latency"].items()) if m.get("count")]
+    out.append(_table(rows, ["workflow", "n", "mean_s", "p50_s", "p99_s"]))
+
+    out.append("\n== execution shares (busy-seconds) ==")
+    rows = [(wf, llm, _fmt(share))
+            for wf, row in sorted(doc["shares"].items())
+            for llm, share in sorted(row.items(), key=lambda kv: -kv[1])]
+    out.append(_table(rows, ["workflow", "llm", "share"]))
+
+    counters = doc["metrics"].get("scepsy_requests_total", {})
+    if counters:
+        out.append("\n== requests by outcome ==")
+        rows = [(s["labels"]["workflow"], s["labels"]["outcome"],
+                 int(s["value"])) for s in counters["series"]]
+        out.append(_table(sorted(rows), ["workflow", "outcome", "n"]))
+
+    routing = doc["metrics"].get("scepsy_routing_total", {})
+    if routing:
+        out.append("\n== routing tiers ==")
+        rows = [(s["labels"]["tier"], int(s["value"]))
+                for s in routing["series"]]
+        out.append(_table(sorted(rows), ["tier", "n"]))
+
+    n_traces = len(doc.get("traces", ()))
+    n_lines = len(doc.get("exposition", "").splitlines())
+    out.append(f"\n{n_traces} sampled traces; "
+               f"{n_lines} exposition lines in dump")
+    return "\n".join(out)
+
+
+def render_report(doc: dict) -> str:
+    out = [f"== bench_obs report (mode={doc.get('mode')}, "
+           f"seed={doc.get('seed')}) =="]
+    acc = doc.get("acceptance", {})
+    rows = [(k, "PASS" if v else "FAIL") for k, v in acc.items()]
+    out.append(_table(rows, ["gate", "status"]))
+
+    ov = doc.get("overhead", {})
+    if ov:
+        out.append("\n== tracing overhead ==")
+        out.append(f"requests: {ov['requests']}  trials: {ov['trials']}  "
+                   f"ratio: {_fmt(ov['overhead_ratio'], 3)} "
+                   f"(gate <= {ov['gate']})")
+
+    ac = doc.get("accuracy", {})
+    if ac:
+        out.append("\n== share reconciliation ==")
+        rows = []
+        for wf in sorted(ac.get("observed_shares", {})):
+            obs = ac["observed_shares"][wf]
+            exp = ac.get("expected_shares", {}).get(wf, {})
+            for llm in sorted(obs):
+                rows.append((wf, llm, _fmt(obs[llm]),
+                             _fmt(exp.get(llm, float("nan")))))
+        out.append(_table(rows, ["workflow", "llm", "observed", "expected"]))
+        out.append(f"max relative error: "
+                   f"{_fmt(ac.get('share_max_rel_err', float('nan')), 3)} "
+                   f"(gate <= {ac.get('share_gate')})")
+        out.append("\n== critical path ==")
+        rows = []
+        for wf, row in sorted(ac.get("critical_path", {}).items()):
+            for stage, cell in row["breakdown"].items():
+                rows.append((wf, stage, _fmt(cell["seconds"], 2),
+                             _fmt(cell["fraction"], 3)))
+        out.append(_table(rows, ["workflow", "stage", "seconds", "fraction"]))
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="tracer export dump or bench_obs report")
+    ap.add_argument("--perfetto", default=None, metavar="OUT",
+                    help="also write Chrome trace_event JSON built from "
+                         "the dump's sampled traces")
+    args = ap.parse_args(argv)
+    with open(args.path) as f:
+        doc = json.load(f)
+
+    is_dump = "traces" in doc and "sampling" in doc
+    print(render_dump(doc) if is_dump else render_report(doc))
+
+    if args.perfetto:
+        if not is_dump:
+            print("--perfetto needs a tracer export dump "
+                  "(bench_obs --dump)", file=sys.stderr)
+            return 2
+        from repro.obs import chrome_trace
+        trace = chrome_trace(doc["traces"])
+        with open(args.perfetto, "w") as f:
+            json.dump(trace, f)
+        print(f"wrote {len(trace['traceEvents'])} trace events "
+              f"to {args.perfetto}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
