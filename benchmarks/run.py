@@ -21,7 +21,8 @@ def main() -> None:
                             bench_obs, bench_pipeline_accuracy,
                             bench_placement, bench_prefix, bench_qos,
                             bench_roofline, bench_scale, bench_scheduler,
-                            bench_stability, bench_workflow_aware)
+                            bench_stability, bench_traffic,
+                            bench_workflow_aware)
 
     sections = [
         ("fig3_stability", bench_stability),
@@ -38,6 +39,7 @@ def main() -> None:
         ("hetero_serving", bench_hetero),
         ("placement_aware", bench_placement),
         ("scale_event_core", bench_scale),
+        ("traffic_replay", bench_traffic),
         ("observability", bench_obs),
         ("pipeline_accuracy", bench_pipeline_accuracy),
         ("kernels", bench_kernels),

@@ -71,6 +71,14 @@ REQUIRED = {
         "accuracy",
         "acceptance",
     ),
+    "traffic_replay": (
+        "config",
+        "generator",
+        "sessions",
+        "replay",
+        "golden",
+        "acceptance",
+    ),
 }
 
 # every report must carry the provenance stamp written by

@@ -224,9 +224,15 @@ class DriftMonitor:
         self,
         expectations: Dict[str, Expectation],
         config: DriftConfig = DriftConfig(),
+        forecaster=None,
     ):
         self.config = config
         self.expectations = dict(expectations)
+        # optional arrival forecaster (repro.core.forecast.
+        # ArrivalForecaster, duck-typed on observe()): record_arrival
+        # forwards every arrival so proactive and reactive detectors see
+        # the same telemetry stream
+        self.forecaster = forecaster
         a = config.ewma_alpha
         self._ia: Dict[str, _Ewma] = {
             w: _Ewma(config.slow_alpha) for w in expectations
@@ -265,6 +271,8 @@ class DriftMonitor:
         if workflow not in self.expectations:
             return
         self.now = max(self.now, t)
+        if self.forecaster is not None:
+            self.forecaster.observe(workflow, t)
         last = self._last_arrival[workflow]
         self._last_arrival[workflow] = t
         if last is None:

@@ -41,6 +41,7 @@ from repro.core.drift import (
     TokenDrift,
     expectation_from,
 )
+from repro.core.forecast import ForecastDrift, ForecastTrigger
 from repro.core.pipeline import AggregateLLMPipeline, merge_pipelines
 from repro.core.placement import (
     MigrationDiff,
@@ -143,6 +144,7 @@ class ReplanController:
         result: Optional[MultiScheduleResult] = None,
         placement: Optional[Placement] = None,
         monitor: Optional[DriftMonitor] = None,
+        forecast: Optional[ForecastTrigger] = None,
         pipeline_refresh: Optional[Callable[[str], AggregateLLMPipeline]] = None,
         rebalance_band: float = 0.5,
         cooldown_s: float = 0.0,
@@ -154,6 +156,9 @@ class ReplanController:
         self.result = result
         self.placement = placement
         self.monitor = monitor
+        # proactive trigger (repro.core.forecast.ForecastTrigger): polled
+        # alongside the monitor in step(), rebased in adopt()
+        self.forecast = forecast
         self.pipeline_refresh = pipeline_refresh
         self.rebalance_band = rebalance_band
         # rung hysteresis: after an adopted action, drift events inside
@@ -316,12 +321,19 @@ class ReplanController:
         needed, or suppressed — and deferred — by the cool-down
         hysteresis)."""
         events = self._merge_deferred(events)
-        rung = recommend_rung(events, rebalance_band=self.rebalance_band)
-        if rung == 0:
-            return None
         now = max((ev.at for ev in events), default=0.0)
         if self.monitor is not None:
             now = max(now, self.monitor.now)
+        # a deferred forecast expires once its firing lead has passed:
+        # by then the ramp it predicted is live traffic the reactive
+        # detectors see directly, and provisioning for the stale
+        # extrapolation would chase a peak that is already over
+        events = [ev for ev in events
+                  if not (isinstance(ev, ForecastDrift)
+                          and now > ev.stale_after)]
+        rung = recommend_rung(events, rebalance_band=self.rebalance_band)
+        if rung == 0:
+            return None
         if (self.cooldown_s > 0
                 and now - self._last_action_at < self.cooldown_s
                 and rung <= self._last_rung):
@@ -338,21 +350,45 @@ class ReplanController:
         if action is None and rung <= RUNG_WARM_REPLAN:
             action = self.replan(lam_targets, cold=False)
             if not action.feasible:
+                # a forecast is speculative: when the cluster cannot
+                # serve the extrapolated target, fall back to the
+                # measured demand rather than escalating to a cold
+                # re-plan the forecast alone cannot justify
+                measured_evs = [ev for ev in events
+                                if not isinstance(ev, ForecastDrift)]
+                measured = self._drifted_targets(measured_evs)
+                if len(measured_evs) < len(events) and measured != lam_targets:
+                    retry = self.replan(measured, cold=False)
+                    if retry.feasible:
+                        action = retry
+            if action is not None and not action.feasible:
                 action = None
         if action is None:
             action = self.replan(lam_targets, cold=True)
         action.events = list(events)
-        self.adopt(action)
+        # an infeasible plan never deploys, so it must not become the
+        # incumbent future reactions are incremental against — the
+        # fleet keeps serving (and the monitor keeps measuring) the
+        # last adopted plan
+        if action.feasible:
+            self.adopt(action)
         self._last_action_at = now
         self._last_rung = action.rung
         return action
 
     def step(self) -> Optional[ReplanAction]:
-        """Poll the attached monitor and react to whatever it saw (or
-        to drift deferred by an earlier cool-down suppression)."""
-        if self.monitor is None:
+        """Poll the attached monitor and forecast trigger, and react to
+        whatever they saw (or to drift deferred by an earlier cool-down
+        suppression).  Forecast events ride the same ladder as reactive
+        ones — they just arrive ``lead_s`` before the ramp does."""
+        if self.monitor is None and self.forecast is None:
             return None
-        events = self.monitor.poll()
+        events: List[DriftEvent] = []
+        if self.monitor is not None:
+            events.extend(self.monitor.poll())
+        if self.forecast is not None:
+            now = self.monitor.now if self.monitor is not None else 0.0
+            events.extend(self.forecast.poll(now))
         if not events and not self._deferred:
             return None
         return self.react(events)
@@ -404,6 +440,8 @@ class ReplanController:
                         slo_class=old.slo_class if old else "",
                     )
             self.monitor.rebase(rebased)
+        if self.forecast is not None:
+            self.forecast.rebase(self.lam_targets)
         self._refreshed_since_adopt.clear()
         self.history.append(action)
         if self.tracer is not None:
@@ -430,12 +468,24 @@ class ReplanController:
         else:
             observed = {}
         for ev in events:
+            if isinstance(ev, ForecastDrift):
+                continue  # applied last: the forecast target must win
             if isinstance(ev, RateDrift):
                 out[ev.workflow] = observed.get(ev.workflow, ev.observed)
             elif isinstance(ev, SLOViolation) and ev.workflow in observed:
                 # a violated tier under an unchanged plan means the
                 # observed load is what the fleet must actually absorb
                 out[ev.workflow] = observed[ev.workflow]
+        for ev in events:
+            # proactive: plan for the FORECAST rate, not the current
+            # estimate — the live stream has not ramped yet, which is
+            # the entire point of firing early; a reactive event for the
+            # same workflow in this batch must not talk the target back
+            # down to the pre-ramp rate
+            if isinstance(ev, ForecastDrift):
+                out[ev.workflow] = max(ev.observed,
+                                       observed.get(ev.workflow, 0.0),
+                                       out.get(ev.workflow, 0.0))
         return out
 
     def _refresh_pipelines(self, events: List[DriftEvent]) -> None:

@@ -200,6 +200,7 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
                  welfare: Optional[str] = None,
                  online: bool = False,
                  drift_config=None,
+                 forecast=None,
                  replan_cooldown_s: float = 0.0,
                  slos: Optional[Dict[str, object]] = None,
                  max_profile_groups: int = 60) -> ScepsyFleetDeployment:
@@ -228,6 +229,13 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
     ``drift_config`` is an optional :class:`repro.core.drift.DriftConfig`;
     ``replan_cooldown_s`` sets the controller's rung hysteresis (drift
     events inside the window only act if they escalate the rung).
+    ``forecast`` (a :class:`repro.core.forecast.ForecastConfig`, or
+    ``True`` for defaults) additionally arms the proactive trigger: an
+    :class:`~repro.core.forecast.ArrivalForecaster` fed by the monitor's
+    arrival telemetry plus a
+    :class:`~repro.core.forecast.ForecastTrigger` the controller polls —
+    the ladder then reacts ``lead_s`` *before* a forecast capacity
+    crossing instead of after it.
 
     ``slos`` overrides per-workflow SLO classes (default: each
     workflow's own ``Workflow.slo``); resolved classes + pipeline work
@@ -272,12 +280,22 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
             expectation_from
         from repro.core.replan import ReplanController
 
+        forecaster = trigger = None
+        if forecast:
+            from repro.core.forecast import (ArrivalForecaster,
+                                             ForecastConfig, ForecastTrigger)
+            fc = forecast if isinstance(forecast, ForecastConfig) \
+                else ForecastConfig()
+            forecaster = ArrivalForecaster(list(pipelines), fc)
+            trigger = ForecastTrigger(forecaster, dict(lam_targets),
+                                      headroom=fc.headroom)
         monitor = DriftMonitor(
             {n: expectation_from(
                 pipelines[n], lam_targets[n], stats_by_name.get(n),
                 slo=(qos_by_name[n].slo if n in qos_by_name else None))
              for n in pipelines},
-            drift_config or DriftConfig())
+            drift_config or DriftConfig(),
+            forecaster=forecaster)
 
         def refresh(name: str) -> AggregateLLMPipeline:
             # a cold (rung-3) re-plan re-runs trace -> profile ->
@@ -291,7 +309,8 @@ def deploy_multi(wfs: Sequence[Workflow], spec: hw.ClusterSpec,
 
         return ReplanController(pipelines, spec, lam_targets, cfg,
                                 result=multi, placement=placement,
-                                monitor=monitor, pipeline_refresh=refresh,
+                                monitor=monitor, forecast=trigger,
+                                pipeline_refresh=refresh,
                                 cooldown_s=replan_cooldown_s)
 
     if multi.alloc_mode == "pooled":

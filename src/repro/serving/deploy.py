@@ -185,4 +185,8 @@ def rebalance_pooled_drivers(drivers, tenants: Dict[str, Router],
     per_wf = pooled_fleet_routers(tenants, members, routing)
     for name, drv in drivers.items():
         if name in per_wf:
-            drv.routers = per_wf[name]
+            # set_routers (not a bare attribute write) so the driver's
+            # sticky-prune bookkeeping follows the new views: sessions
+            # that end after the rebalance must still forget() their
+            # sticky entries on the routers now recording them
+            drv.set_routers(per_wf[name])

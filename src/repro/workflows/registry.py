@@ -24,12 +24,15 @@ from repro.workflows.map_reduce import MAP_REDUCE
 from repro.workflows.rag_reranker import RAG_RERANKER
 from repro.workflows.react_agent import REACT_AGENT
 from repro.workflows.runtime import Workflow, with_slo
+from repro.workflows.session import RECURSIVE_AGENT, SESSION_CHAT
 
 DEFAULT_SLOS: Dict[str, SLOClass] = {
     "react_agent": GOLD,  # interactive tool agent: a user is waiting
     "rag_reranker": GOLD,  # interactive retrieval front-end
+    "session_chat": GOLD,  # live conversation: a user is typing back
     "map_reduce": SILVER,  # throughput pipeline: degrade before reject
     "beam_search": SILVER,
+    "recursive_agent": SILVER,  # background task decomposition
     "debate": BRONZE,  # batch-style deliberation: sheddable
 }
 
@@ -38,7 +41,8 @@ DEFAULT_SLOS: Dict[str, SLOClass] = {
 WORKFLOWS: Dict[str, Workflow] = {
     wf.name: (with_slo(wf, DEFAULT_SLOS[wf.name])
               if wf.name in DEFAULT_SLOS else wf)
-    for wf in (BEAM_SEARCH, RAG_RERANKER, REACT_AGENT, MAP_REDUCE, DEBATE)
+    for wf in (BEAM_SEARCH, RAG_RERANKER, REACT_AGENT, MAP_REDUCE, DEBATE,
+               SESSION_CHAT, RECURSIVE_AGENT)
 }
 
 

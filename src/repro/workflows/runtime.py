@@ -308,6 +308,19 @@ class ClusterDriver:
                              {id(r): r for r in routers.values()}.values()
                              if hasattr(r, "forget")]
 
+    def set_routers(self, routers: Dict[str, Router],
+                    route_map: Optional[Dict[str, str]] = None) -> None:
+        """Swap the serving tier live (replan adoption mid-run): future
+        calls route through the new views, and the sticky-prune list is
+        recomputed so ``Router.forget`` keeps reaching the routers that
+        are actually accumulating sticky state."""
+        self.routers = routers
+        if route_map is not None:
+            self.route_map = route_map
+        self._router_objs = [r for r in
+                             {id(r): r for r in routers.values()}.values()
+                             if hasattr(r, "forget")]
+
     def router_for(self, llm: str, rec: Optional["RequestRecord"] = None
                    ) -> Router:
         """The router serving a workflow-local LLM name (tenancy-aware).

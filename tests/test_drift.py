@@ -18,6 +18,8 @@ from repro.configs.base import ArchConfig
 from repro.core.drift import (DriftConfig, DriftMonitor, Expectation,
                               RateDrift, ShareDrift, TokenDrift,
                               expectation_from)
+from repro.core.forecast import (ArrivalForecaster, ForecastConfig,
+                                 ForecastDrift, ForecastTrigger, HoltWinters)
 from repro.core.pipeline import (AggregateLLMPipeline, Allocation,
                                  PipelineStage, merge_pipelines)
 from repro.core.placement import migration_diff, place
@@ -499,3 +501,270 @@ def test_deploy_multi_online_attaches_controller(sharing_fleet):
     offline = deploy_multi([wfa, wfb], SPEC, LAMS, pipelines=sharing_fleet,
                            scheduler_config=SCFG, mode="pooled")
     assert offline.controller is None
+
+
+# ---------------------------------------------------------------------------
+# arrival forecasting: Holt-Winters, the trigger ladder, controller wiring
+# ---------------------------------------------------------------------------
+
+
+def _feed(fc, rate_fn, until, trig=None, poll_s=1.0, w="w"):
+    """Deterministic arrivals with exact local rate ``rate_fn(t)``
+    (uniform spacing, no Poisson noise), interleaved with per-second
+    trigger polls.  The first arrival sits at half a spacing so steady
+    segments put an *exact* count in every bin — otherwise the short
+    first bin fakes an upward trend during warm-up.  Returns
+    [(poll_time, event, measured_level_at_fire), ...]."""
+    arrivals = []
+    t = 0.5 / max(rate_fn(0.0), 1e-9)
+    while t < until:
+        arrivals.append(t)
+        t += 1.0 / max(rate_fn(t), 1e-9)
+    fired = []
+    i = 0
+    p = poll_s
+    while p <= until:
+        while i < len(arrivals) and arrivals[i] <= p:
+            fc.observe(w, arrivals[i])
+            i += 1
+        if trig is not None:
+            for ev in trig.poll(p):
+                fired.append((p, ev, fc.rate(w)))
+        else:
+            fc.advance(w, p)
+        p += poll_s
+    return fired
+
+
+def test_holtwinters_damped_trend_forecast():
+    hw_ = HoltWinters(alpha=1.0, beta=1.0, phi=1.0)
+    assert hw_.forecast(1) is None  # no observations yet
+    for x in (1.0, 2.0, 3.0):
+        hw_.update(x)
+    # alpha=beta=1, phi=1: level tracks the last point, trend its slope
+    assert hw_.level == pytest.approx(3.0)
+    assert hw_.trend == pytest.approx(1.0)
+    assert hw_.forecast(2) == pytest.approx(5.0)
+    damped = HoltWinters(alpha=1.0, beta=1.0, phi=0.5)
+    for x in (1.0, 2.0, 3.0):
+        damped.update(x)
+    assert damped.forecast(2) == pytest.approx(3.0 + (0.5 + 0.25) * 1.0)
+    # extrapolation clamps at zero: negative rates are not a thing
+    down = HoltWinters(alpha=1.0, beta=1.0, phi=1.0)
+    for x in (5.0, 1.0):
+        down.update(x)
+    assert down.forecast(10) == 0.0
+
+
+def test_forecaster_warmup_gate_and_steady_rate():
+    cfg = ForecastConfig(bin_s=1.0, min_bins=5, lead_s=5.0)
+    fc = ArrivalForecaster(["w"], cfg)
+    _feed(fc, lambda t: 2.0, until=4.0)
+    assert fc.forecast_rate("w", cfg.lead_s) is None  # still warming up
+    _feed(fc, lambda t: 2.0, until=20.0)
+    assert fc.bins_seen("w") >= cfg.min_bins
+    assert fc.rate("w") == pytest.approx(2.0, abs=0.25)
+    assert fc.forecast_rate("w", cfg.lead_s) == pytest.approx(2.0, abs=0.3)
+
+
+def test_trigger_stationary_traffic_never_fires():
+    cfg = ForecastConfig(bin_s=1.0, min_bins=4, lead_s=10.0, confirm=2)
+    fc = ArrivalForecaster(["w"], cfg)
+    trig = ForecastTrigger(fc, {"w": 1.0}, headroom=1.2)
+    fired = _feed(fc, lambda t: 1.0, until=120.0, trig=trig)
+    assert fired == [] and trig.fired == []
+
+
+def test_trigger_fires_before_measured_crossing():
+    # rate ramps 4.0 -> past the 4.8 capacity at t=40; the undamped
+    # trend forecast must fire ahead of the crossing, while the measured
+    # level is still inside the no-chase band
+    cfg = ForecastConfig(bin_s=1.0, min_bins=4, lead_s=10.0, phi=1.0,
+                         confirm=2, plan_horizon_s=25.0)
+    fc = ArrivalForecaster(["w"], cfg)
+    trig = ForecastTrigger(fc, {"w": 4.0}, headroom=1.2)
+    rate = lambda t: 4.0 if t < 20.0 else 4.0 + 0.04 * (t - 20.0)
+    fired = _feed(fc, rate, until=60.0, trig=trig)
+    assert len(fired) == 1
+    t_fire, ev, level = fired[0]
+    assert t_fire < 40.0  # before the measured crossing
+    assert level < ev.capacity * cfg.chase  # fired leading, not chasing
+    assert ev.capacity == pytest.approx(4.8)
+    assert ev.observed > ev.capacity
+    assert ev.lead_s == pytest.approx(10.0)
+    assert ev.horizon_s == pytest.approx(25.0)  # plan horizon > lead wins
+    assert ev.stale_after == pytest.approx(ev.at + ev.lead_s)
+    assert isinstance(ev, RateDrift)  # rides the existing drift ladder
+
+
+def test_trigger_latch_rearm_fires_once_per_ramp():
+    cfg = ForecastConfig(bin_s=1.0, min_bins=4, lead_s=8.0, phi=1.0,
+                         confirm=2)
+    fc = ArrivalForecaster(["w"], cfg)
+    trig = ForecastTrigger(fc, {"w": 1.0}, headroom=1.2)
+
+    def rate(t):
+        if t < 40.0:
+            return 1.0 + 0.05 * t  # first ramp
+        if t < 80.0:
+            return 0.4  # recede below the re-arm band
+        return 0.5 + 0.08 * (t - 80.0)  # second ramp
+
+    fired = _feed(fc, rate, until=120.0, trig=trig)
+    ts = [t for t, _, _ in fired]
+    # the latch holds for the rest of the first ramp, the quiet valley
+    # cannot fire, and the re-armed trigger catches the second ramp
+    assert len([t for t in ts if t <= 40.0]) == 1
+    assert [t for t in ts if 40.0 < t <= 80.0] == []
+    assert len([t for t in ts if t > 80.0]) >= 1
+
+
+def test_trigger_no_chase_band_suppresses_mid_episode():
+    # traffic starts already deep past capacity: the lead time is spent,
+    # the reactive detectors own the episode, the trigger must stay mute
+    cfg = ForecastConfig(bin_s=1.0, min_bins=4, lead_s=10.0, confirm=2)
+    fc = ArrivalForecaster(["w"], cfg)
+    trig = ForecastTrigger(fc, {"w": 1.0}, headroom=1.2)  # chase band 1.8
+    fired = _feed(fc, lambda t: 4.0, until=60.0, trig=trig)
+    assert fired == []
+    assert fc.forecast_rate("w", cfg.lead_s) > 1.2  # it *would* have fired
+
+
+def test_trigger_rebase_moves_capacity_and_clears_latch():
+    cfg = ForecastConfig(bin_s=1.0, min_bins=4, lead_s=8.0, phi=1.0,
+                         confirm=2)
+    fc = ArrivalForecaster(["w"], cfg)
+    trig = ForecastTrigger(fc, {"w": 1.0}, headroom=1.2)
+    fired = _feed(fc, lambda t: 1.0 + 0.05 * t, until=40.0, trig=trig)
+    assert len(fired) == 1 and trig._latched == {"w"}
+    trig.rebase({"w": 4.0})
+    assert trig._latched == set() and trig._breach == {"w": 0}
+    assert trig.capacity_lams["w"] == pytest.approx(4.8)
+    # the forecast that latched the old plan is legal under the new one
+    assert trig.poll(41.0) == []
+
+
+def test_controller_drops_stale_deferred_forecast(sharing_fleet):
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res,
+                            cooldown_s=100.0)
+    first = ctrl.react([RateDrift(workflow="wf_a", at=1.0, magnitude=1.0,
+                                  observed=0.8, expected=0.4)])
+    assert first is not None and first.feasible
+    fd = ForecastDrift(workflow="wf_a", at=20.0, magnitude=1.5,
+                       observed=2.0, expected=0.8,
+                       horizon_s=60.0, lead_s=30.0)
+    assert ctrl.react([fd]) is None  # cool-down defers it
+    assert ctrl._deferred == [fd]
+    # next batch lands past the forecast's firing lead (stale_after=50):
+    # the extrapolated 2.0 target must not survive into this plan
+    late = RateDrift(workflow="wf_b", at=120.0, magnitude=1.0,
+                     observed=1.2, expected=0.6)
+    act = ctrl.react([late])
+    assert act is not None
+    assert not any(isinstance(ev, ForecastDrift) for ev in act.events)
+    assert act.lam_targets["wf_a"] < 2.0
+
+
+def test_controller_honours_still_valid_deferred_forecast(sharing_fleet):
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res,
+                            cooldown_s=100.0)
+    ctrl.react([RateDrift(workflow="wf_a", at=1.0, magnitude=1.0,
+                          observed=0.8, expected=0.4)])
+    fd = ForecastDrift(workflow="wf_a", at=20.0, magnitude=1.5,
+                       observed=2.0, expected=0.8,
+                       horizon_s=200.0, lead_s=200.0)
+    assert ctrl.react([fd]) is None  # deferred, but stays valid to t=220
+    late = RateDrift(workflow="wf_b", at=120.0, magnitude=1.0,
+                     observed=1.2, expected=0.6)
+    act = ctrl.react([late])
+    assert act is not None and fd in act.events
+    assert act.lam_targets["wf_a"] == pytest.approx(2.0)
+
+
+def test_controller_never_adopts_infeasible_plan(sharing_fleet):
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res)
+    before_targets = dict(ctrl.lam_targets)
+    before_result = ctrl.result
+    act = ctrl.react([RateDrift(workflow="wf_a", at=1.0, magnitude=1000.0,
+                                observed=500.0, expected=0.4)])
+    assert act is not None and not act.feasible
+    # the incumbent plan (and the targets the monitor measures against)
+    # must survive: the fleet keeps serving what it can actually serve
+    assert ctrl.lam_targets == before_targets
+    assert ctrl.result is before_result
+    assert ctrl.history == []
+
+
+def test_controller_infeasible_forecast_falls_back_to_measured(sharing_fleet):
+    res = schedule_multi(sharing_fleet, SPEC, LAMS, SCFG, mode="pooled")
+    ctrl = ReplanController(sharing_fleet, SPEC, LAMS, SCFG, result=res)
+    rd = RateDrift(workflow="wf_a", at=1.0, magnitude=1.0,
+                   observed=0.8, expected=0.4)
+    fd = ForecastDrift(workflow="wf_a", at=1.0, magnitude=1000.0,
+                       observed=500.0, expected=0.4,
+                       horizon_s=60.0, lead_s=60.0)
+    act = ctrl.react([rd, fd])
+    # the speculative 500/s target cannot be served; the ladder retries
+    # at the measured 0.8/s instead of escalating to a cold re-plan
+    assert act is not None and act.feasible
+    assert act.rung == RUNG_WARM_REPLAN
+    assert act.lam_targets["wf_a"] == pytest.approx(0.8)
+    assert ctrl.lam_targets["wf_a"] == pytest.approx(0.8)
+
+
+def test_deploy_multi_forecast_attaches_trigger(sharing_fleet):
+    from repro.core.scepsy import deploy_multi
+
+    wfa = Workflow("wf_a", lambda rng: iter(()), {"gen": SHARED})
+    wfb = Workflow("wf_b", lambda rng: iter(()), {"draft": SHARED})
+    fcfg = ForecastConfig(bin_s=1.0, min_bins=4, lead_s=10.0)
+    dep = deploy_multi([wfa, wfb], SPEC, LAMS, pipelines=sharing_fleet,
+                       scheduler_config=SCFG, mode="pooled", online=True,
+                       forecast=fcfg)
+    ctrl = dep.controller
+    assert ctrl is not None and ctrl.forecast is not None
+    assert set(ctrl.forecast.planned_lams) == {"wf_a", "wf_b"}
+    for w, lam in LAMS.items():
+        assert ctrl.forecast.capacity_lams[w] == pytest.approx(
+            lam * ctrl.forecast.headroom)
+    # the monitor's arrival hook feeds the forecaster
+    ctrl.monitor.record_arrival("wf_a", 0.5)
+    assert ctrl.monitor.forecaster is ctrl.forecast.forecaster
+    assert ctrl.forecast.forecaster._count["wf_a"] == 1
+    # offline deployments carry no trigger
+    off = deploy_multi([wfa, wfb], SPEC, LAMS, pipelines=sharing_fleet,
+                       scheduler_config=SCFG, mode="pooled")
+    assert off.controller is None
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(rate=st.floats(min_value=0.3, max_value=4.0),
+           headroom=st.floats(min_value=1.05, max_value=2.0))
+    @settings(max_examples=30, deadline=None)
+    def test_property_trigger_silent_on_stationary_traffic(rate, headroom):
+        """No stationary rate at the planned level ever trips the
+        forecast trigger, whatever the capacity headroom."""
+        cfg = ForecastConfig(bin_s=1.0, min_bins=4, lead_s=10.0, confirm=2)
+        fc = ArrivalForecaster(["w"], cfg)
+        trig = ForecastTrigger(fc, {"w": rate}, headroom=headroom)
+        fired = _feed(fc, lambda t: rate, until=80.0, trig=trig)
+        assert fired == [] and trig.fired == []
+
+    @given(xs=st.lists(st.floats(min_value=0.0, max_value=50.0),
+                       min_size=2, max_size=30),
+           k=st.integers(min_value=1, max_value=20))
+    @settings(max_examples=50, deadline=None)
+    def test_property_holtwinters_forecast_nonnegative(xs, k):
+        """Extrapolation never goes negative, and with a non-negative
+        trend it is monotone in the horizon."""
+        hw_ = HoltWinters(alpha=0.4, beta=0.2, phi=0.9)
+        for x in xs:
+            hw_.update(x)
+        f1, fk = hw_.forecast(1), hw_.forecast(k)
+        assert f1 >= 0.0 and fk >= 0.0
+        if hw_.trend >= 0.0 and k >= 1:
+            assert fk >= f1

@@ -317,6 +317,100 @@ def test_preemption_never_inverts_priority_smoke():
     assert len(eng.done) == 6  # every victim still completes
 
 
+# ---------------------------------------------------------------------------
+# stateful sessions monetize the radix/sticky path (PR: realistic traffic)
+# ---------------------------------------------------------------------------
+
+
+class _SessionCallLog:
+    """Telemetry sink recording each LLM call's prefix-cache hit, keyed
+    by the workflow request (= session) that issued it."""
+
+    def __init__(self):
+        self.calls = []
+
+    def record_arrival(self, workflow, t):
+        pass
+
+    def record_call(self, workflow, llm, req):
+        self.calls.append((req.workflow_request, req.arrival,
+                           req.prompt_tokens, req.cached_prefix))
+
+    def record_request_done(self, workflow, rec):
+        pass
+
+
+def _run_sessions(n=24, seed=6):
+    wf = get_workflow("session_chat")
+    loop = EventLoop()
+    cfg = wf.llms["chat"]
+    engines = [EngineSim(cfg, loop, name=f"r{i}") for i in range(2)]
+    base = Router(engines)
+    view = base.view({0: 1.0, 1: 1.0})  # weighted => sticky tier active
+    log = _SessionCallLog()
+    drv = ClusterDriver(wf, {"chat": view}, loop, telemetry=log)
+    drv.schedule_open_loop(0.8, n, seed=seed)
+    loop.run(1e7)
+    return view, engines, log, drv
+
+
+def test_session_cached_tokens_grow_turn_over_turn():
+    """A chat session's turn-k call extends turn k-1's transcript via a
+    parent handle, so under sticky routing the cached fraction of each
+    prompt must RISE turn over turn — the radix path monetizing
+    conversation state."""
+    view, engines, log, drv = _run_sessions()
+    per_session = {}
+    for sid, at, prompt, cached in sorted(log.calls,
+                                          key=lambda c: (c[0], c[1])):
+        per_session.setdefault(sid, []).append(cached / max(prompt, 1))
+    multi = [fracs for fracs in per_session.values() if len(fracs) > 1]
+    assert len(multi) >= 5  # session lengths are random but multi-turn
+    first = sum(f[0] for f in multi) / len(multi)
+    later = [x for f in multi for x in f[1:]]
+    assert first < 0.1  # turn 1 is a cold transcript
+    assert sum(later) / len(later) > first + 0.5
+    # and the engines' own accounting agrees: most prefill was cached
+    cached = sum(e.cached_tokens for e in engines)
+    prefill = sum(e.prefill_tokens for e in engines)
+    assert cached / (cached + prefill) > 0.5
+
+
+def test_session_end_prunes_sticky_routing_state():
+    """The driver's done path calls Router.forget, so sticky entries are
+    bounded by in-flight sessions and empty after drain."""
+    view, engines, log, drv = _run_sessions()
+    assert all(r.done >= 0 for r in drv.records)
+    assert len(view._sticky) == 0
+    # forget is idempotent and safe for unknown instances
+    view._sticky[999] = 0
+    view.forget(999)
+    view.forget(999)
+    assert len(view._sticky) == 0
+
+
+def test_recursive_agent_branches_share_plan_prefix():
+    """The decomposition agent's subtask calls chain off the plan call's
+    handle: with a single replica every recursion level after the root
+    should see a nonzero cached prefix."""
+    wf = get_workflow("recursive_agent")
+    loop = EventLoop()
+    routers = {m: Router([EngineSim(c, loop, name=m)])
+               for m, c in wf.llms.items()}
+    log = _SessionCallLog()
+    drv = ClusterDriver(wf, routers, loop, telemetry=log)
+    drv.schedule_open_loop(0.5, 12, seed=13)
+    loop.run(1e7)
+    assert all(r.done >= 0 for r in drv.records)
+    by_session = {}
+    for sid, at, prompt, cached in sorted(log.calls,
+                                          key=lambda c: (c[0], c[1])):
+        by_session.setdefault(sid, []).append(cached)
+    # every session's follow-up agent calls reuse the transcript
+    multi = [c for c in by_session.values() if len(c) > 1]
+    assert multi and all(any(x > 0 for x in c[1:]) for c in multi)
+
+
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
 def test_preemption_never_inverts_priority_property():
     @settings(max_examples=25, deadline=None)
